@@ -1,0 +1,79 @@
+"""Kernel micro-benchmarks: XLA oracle path timings on CPU + the
+speculative-sense traffic model.
+
+Wall-clock here is the CPU oracle (the Pallas kernels target TPU and are
+validated in interpret mode, which is not a performance mode); the derived
+columns are machine-independent: operation counts and the traffic ratio
+of the speculative two-pass search.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ppa
+from repro.kernels.cam_search import ops as cam_ops, ref as cam_ref
+from repro.kernels.hat_encode import ops as hat_ops
+from repro.kernels.moe_dispatch import ops as moe_ops
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _time(f, *args, iters=20):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def cam_search_bench():
+    rows = []
+    for b, e in ((128, 512), (1024, 512), (1024, 4096)):
+        tags = jax.random.bernoulli(KEY, 0.5, (e, 11)).astype(jnp.int32)
+        t_p = cam_ref.pack_bits(tags)
+        q_p = jnp.tile(t_p[:1], (b, 1))
+        valid = jnp.ones((e,), bool)
+        f = jax.jit(lambda q, t, v: cam_ops.cam_search(q, t, v, impl="xla"))
+        us = _time(f, q_p, t_p, valid)
+        rows.append({"name": f"cam_search_{b}x{e}", "us_per_call": round(us, 1),
+                     "derived": f"compares={b * e}"})
+    # speculative sense traffic model: fraction of full-width compares kept
+    p_mm = 1 - 2.0 ** -11
+    survivors = 2.0 ** -1  # last 32-bit word prefilter on 11-bit tags -> exact
+    p_ss = ppa.spec_sense_close_probability(11, 3)
+    rows.append({"name": "spec_sense_traffic_model",
+                 "us_per_call": 0.0,
+                 "derived": (f"P(early-kill|mismatch)={p_ss:.4f}; full-width "
+                             f"traffic x{(1 - p_ss * p_mm):.3f}")})
+    del survivors
+    return rows
+
+
+def hat_encode_bench():
+    rows = []
+    for n in (4096, 65536):
+        spk = jax.random.bernoulli(KEY, 0.05, (n,))
+        f = jax.jit(lambda s: hat_ops.hat_encode(s, impl="xla")[0])
+        us = _time(f, spk)
+        rows.append({"name": f"hat_encode_{n}", "us_per_call": round(us, 1),
+                     "derived": f"events={int(spk.sum())}"})
+    return rows
+
+
+def moe_dispatch_bench():
+    rows = []
+    for m, e in ((16384, 160), (65536, 160)):
+        ids = jax.random.randint(KEY, (m,), 0, e)
+        f = jax.jit(lambda i: moe_ops.dispatch_positions(
+            i, num_experts=e, impl="xla")[0])
+        us = _time(f, ids)
+        rows.append({"name": f"moe_dispatch_{m}x{e}",
+                     "us_per_call": round(us, 1),
+                     "derived": f"events={m}"})
+    return rows

@@ -1,0 +1,125 @@
+"""One benchmark per paper table/figure (Tables I-III, Figs. 5, 10, 11).
+
+Each function returns (rows, derived) where rows are printable dicts and
+`derived` is the headline number compared against the paper's claim.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cam, ppa
+from repro.core.arbiter import (Arbiter, ArbiterConfig, SCHEMES,
+                                burst_latency_units, sparse_latency_units,
+                                area_units)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def table1_sparse_latency():
+    """Table I: average latency with sparse events (units + calibrated ns)."""
+    rows = []
+    for scheme in SCHEMES:
+        row = {"scheme": scheme}
+        for n in (64, 256):
+            arb = Arbiter(ArbiterConfig(scheme, n))
+            des = float(arb.sparse_event_latency(KEY, num_trials=min(n, 128)))
+            row[f"theory_{n}"] = sparse_latency_units(scheme, n)
+            row[f"des_{n}"] = round(des, 2)
+            row[f"ns_{n}"] = round(ppa.sparse_latency_ns(scheme, n), 2)
+        rows.append(row)
+    hat = ppa.sparse_latency_ns("hier_tree", 256)
+    htr = ppa.sparse_latency_ns("hier_ring", 256)
+    derived = {"hat_vs_htr_sparse_reduction": round(1 - hat / htr, 4),
+               "paper_claim": 0.783}
+    return rows, derived
+
+
+def table2_burst_latency():
+    """Table II: full-frame burst completion latency."""
+    rows = []
+    for scheme in SCHEMES:
+        row = {"scheme": scheme}
+        for n in (64, 256):
+            arb = Arbiter(ArbiterConfig(scheme, n))
+            row[f"theory_{n}"] = round(burst_latency_units(scheme, n), 1)
+            row[f"des_{n}"] = round(float(arb.burst_latency()), 1)
+            if scheme != "greedy_tree":
+                row[f"ns_{n}"] = round(ppa.burst_latency_ns(scheme, n), 1)
+        rows.append(row)
+    hat = burst_latency_units("hier_tree", 256)
+    ring = burst_latency_units("token_ring", 256)
+    derived = {"hat_burst_vs_token_ring": round(hat / ring, 3),
+               "paper_claim": "within ~7% of token ring"}
+    return rows, derived
+
+
+def table3_area():
+    """Table III: normalized area cost."""
+    rows = []
+    for scheme in SCHEMES:
+        row = {"scheme": scheme}
+        for n in (64, 256):
+            row[f"arbiters_{n}"] = round(area_units(scheme, n), 1)
+            row[f"norm_{n}"] = round(ppa.area_normalized(scheme, n), 1)
+        rows.append(row)
+    hat = area_units("hier_tree", 256)
+    binary = area_units("binary_tree", 256)
+    derived = {"hat_area_fraction_of_binary": round(hat / binary, 4),
+               "paper_claim": "12 vs 255 two-input arbiters at N=256"}
+    return rows, derived
+
+
+def fig5_scalability():
+    """Fig. 5: latency scaling N in {64..4096}, sparse + burst."""
+    rows = []
+    for n in (64, 256, 1024, 4096):
+        row = {"n": n}
+        for scheme in SCHEMES:
+            row[f"sparse_{scheme}"] = round(sparse_latency_units(scheme, n), 1)
+            row[f"burst_{scheme}"] = round(burst_latency_units(scheme, n), 1)
+        rows.append(row)
+    # HAT keeps the lowest sparse latency at every size
+    ok = all(min(SCHEMES, key=lambda s: sparse_latency_units(s, n))
+             == "hier_tree" for n in (64, 256, 1024, 4096))
+    return rows, {"hat_lowest_sparse_at_all_sizes": ok}
+
+
+def fig10_cam_cycle():
+    """Fig. 10: average search cycle time across CAM variants."""
+    rows = []
+    for entries in (16, 512):
+        variants = {
+            "conventional": cam.CamConfig(entries, cscd=False, feedback=False,
+                                          speculative=False),
+            "cscd": cam.CamConfig(entries, feedback=False, speculative=False),
+            "cscd+fb": cam.CamConfig(entries, speculative=False),
+            "cscd+ss": cam.CamConfig(entries, feedback=False),
+            "full": cam.CamConfig(entries),
+        }
+        row = {"entries": entries}
+        for name, cfg in variants.items():
+            row[name + "_ns"] = round(cam.cycle_time_ns(cfg), 3)
+        row["improvement"] = round(cam.cycle_improvement(entries), 4)
+        rows.append(row)
+    derived = {"improvement_16": rows[0]["improvement"], "paper_16": 0.355,
+               "improvement_512": rows[1]["improvement"], "paper_512": 0.404}
+    return rows, derived
+
+
+def fig11_cam_energy():
+    """Fig. 11: normalized average search energy (512x11)."""
+    rows = []
+    for case in ("all_match", "all_mismatch", "random"):
+        rows.append({"case": case,
+                     "model_saving": round(cam.energy_saving(case), 4),
+                     "paper_saving": ppa.CAM_ENERGY_SAVING[case]})
+    derived = {
+        "note": ("random-case model lands at ~40.2%: the paper's 46.7% is "
+                 "not simultaneously consistent with its endpoint cases "
+                 "under a linear energy model (documented repro finding, "
+                 "see cam.py)"),
+        "spec_sense_close_prob": round(cam.P_SS, 4), "paper_value": 0.876,
+    }
+    return rows, derived

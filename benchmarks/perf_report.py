@@ -1,0 +1,63 @@
+"""Render the §Perf before/after table from variant dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.perf_report
+"""
+
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks import roofline  # noqa: E402
+
+CELLS = {
+    "deepseek-v2-236b/decode_32k": ["baseline", "serve_tp32_bf16",
+                                    "serve_tp32"],
+    "qwen3-32b/train_4k": ["baseline", "remat_dots", "mb8", "mb8_dots"],
+    "rwkv6-3b/train_4k": ["baseline", "rwkv48", "rwkv48_c64"],
+}
+
+
+def rows_for(cell: str, variants):
+    arch, shape = cell.split("/")
+    recs = {r.get("variant", "baseline"): r
+            for r in roofline.load_records()
+            if r.get("arch") == arch and r.get("shape") == shape
+            and not r.get("multi_pod") and r.get("status") == "ok"}
+    out = []
+    base_step = None
+    for v in variants:
+        if v not in recs:
+            out.append((v, None))
+            continue
+        a = roofline.analyze(recs[v])
+        step = max(a["compute_s"], a["memory_s"], a["collective_s"])
+        if v == "baseline":
+            base_step = step
+        a["step_bound_s"] = step
+        a["speedup"] = (base_step / step) if base_step else 1.0
+        out.append((v, a))
+    return out
+
+
+def markdown() -> str:
+    out = ["| cell | variant | compute s | memory s | collective s | "
+           "bottleneck | temp GB | step bound s | speedup | roofline frac "
+           "|\n|---|---|---|---|---|---|---|---|---|---|\n"]
+    for cell, variants in CELLS.items():
+        for v, a in rows_for(cell, variants):
+            if a is None:
+                out.append(f"| {cell} | {v} | (pending) | | | | | | | |\n")
+                continue
+            out.append(
+                f"| {cell} | {v} | {a['compute_s']:.4f} | "
+                f"{a['memory_s']:.4f} | {a['collective_s']:.4f} | "
+                f"{a['bottleneck']} | {a['temp_bytes_gb']:.1f} | "
+                f"{a['step_bound_s']:.4f} | {a['speedup']:.1f}x | "
+                f"{a['roofline_fraction']:.3f} |\n")
+    return "".join(out)
+
+
+if __name__ == "__main__":
+    print(markdown())

@@ -1,0 +1,169 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell:
+    compute term    = FLOPs_per_device / 197 TFLOP/s   (bf16 MXU peak)
+    memory term     = bytes_per_device / 819 GB/s      (HBM)
+    collective term = collective_bytes_per_device / 50 GB/s (ICI link)
+
+FLOPs/bytes come from the scan-aware calibrated costs (the raw
+cost_analysis visits while bodies once - both are recorded).  All values
+are per-device from the post-SPMD module, so dividing by per-chip rates
+equals the brief's global/(chips x rate) convention.
+
+MODEL_FLOPS uses 6·N_active·D (train) / 2·N_active·D (prefill) /
+2·N_active·B (decode); the ratio MODEL/HLO exposes remat recompute and
+attention/vocab overhead.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import jax
+
+from repro import configs
+from repro.core.ppa import TPU_HBM_BW, TPU_ICI_BW, TPU_PEAK_FLOPS_BF16
+from repro.models import lm
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+_PARAM_CACHE: dict = {}
+
+
+def param_counts(arch: str) -> dict:
+    """(total, embed-ish, routed-expert) param counts from abstract shapes."""
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    cfg = configs.get_config(arch)
+    shapes = jax.eval_shape(lambda k: lm.init_model(k, cfg),
+                            jax.random.PRNGKey(0))
+    total = emb = routed = 0
+
+    def visit(path, leaf):
+        nonlocal total, emb, routed
+        total += leaf.size
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name in ("embed", "lm_head"):
+            emb += leaf.size
+        stacked = leaf.ndim >= 4 or (leaf.ndim == 3 and "groups" in
+                                     str(path[0]).lower())
+        if name in ("w_gate", "w_up", "w_down") and leaf.ndim >= 3 and stacked:
+            # (L?, E, d, f) routed expert weights
+            routed += leaf.size
+
+    jax.tree_util.tree_map_with_path(visit, shapes)
+    out = {"total": total, "embed": emb, "routed": routed, "cfg": cfg}
+    _PARAM_CACHE[arch] = out
+    return out
+
+
+def model_flops(arch: str, record: dict) -> float:
+    """Global MODEL_FLOPS for the cell's program."""
+    pc = param_counts(arch)
+    cfg = pc["cfg"]
+    active = pc["total"] - pc["embed"]
+    if cfg.moe is not None and cfg.moe.num_experts:
+        active -= pc["routed"] * (1 - cfg.moe.top_k / cfg.moe.num_experts)
+    kind = record["kind"]
+    b = record["global_batch"]
+    if kind == "train":
+        tokens = b * record["seq_len"]
+        return 6.0 * active * tokens
+    if kind == "prefill":
+        tokens = b * record["seq_len"]
+        return 2.0 * active * tokens
+    return 2.0 * active * b  # decode: one token per lane
+
+
+def chips(record: dict) -> int:
+    m = record["mesh"]
+    n = 1
+    for v in m.values():
+        n *= v
+    return n
+
+
+def analyze(record: dict) -> dict | None:
+    if record.get("status") != "ok":
+        return None
+    cal = record.get("cost_calibrated", {})
+    flops_dev = cal.get("flops") or record["cost"].get("flops", 0.0)
+    bytes_dev = (cal.get("bytes accessed")
+                 or record["cost"].get("bytes accessed", 0.0))
+    coll_dev = (cal.get("collectives", {}).get("total")
+                or record["collectives"].get("total", 0))
+    t_compute = flops_dev / TPU_PEAK_FLOPS_BF16
+    t_memory = bytes_dev / TPU_HBM_BW
+    t_coll = coll_dev / TPU_ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(record["arch"], record)
+    hlo_global = flops_dev * chips(record)
+    ratio = mf / hlo_global if hlo_global else 0.0
+    step_time = max(terms.values())  # no-overlap bound
+    mfu = mf / chips(record) / TPU_PEAK_FLOPS_BF16 / step_time \
+        if step_time else 0.0
+    suggestion = {
+        "compute": "reduce recompute (remat policy) / raise per-chip "
+                   "utilization - already compute-bound",
+        "memory": "fuse/bf16 more intermediates, larger tiles, fewer "
+                  "HBM round-trips per layer",
+        "collective": "reshard to cut all-reduce volume (reduce-scatter + "
+                      "sequence-sharded activations), overlap collectives "
+                      "with compute",
+    }[bottleneck]
+    return {"arch": record["arch"], "shape": record["shape"],
+            "mesh": "multipod" if record["multi_pod"] else "singlepod",
+            "chips": chips(record),
+            "compute_s": t_compute, "memory_s": t_memory,
+            "collective_s": t_coll, "bottleneck": bottleneck,
+            "model_flops": mf, "hlo_flops_global": hlo_global,
+            "model_over_hlo": ratio, "roofline_fraction": mfu,
+            "temp_bytes_gb": record["memory"]["temp_bytes"] / 2 ** 30,
+            "suggestion": suggestion,
+            "variant": record.get("variant", "baseline")}
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR, variant: str | None = None):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if variant is not None and r.get("variant", "baseline") != variant:
+            continue
+        recs.append(r)
+    return recs
+
+
+def table(dryrun_dir: str = DRYRUN_DIR, mesh: str = "singlepod",
+          variant: str = "baseline"):
+    rows = []
+    for r in load_records(dryrun_dir, variant=variant):
+        a = analyze(r)
+        if a and a["mesh"] == mesh:
+            rows.append(a)
+    rows.sort(key=lambda x: (x["arch"], x["shape"]))
+    return rows
+
+
+def markdown(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | MODEL/HLO | roofline frac | temp GB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['bottleneck']} | {r['model_over_hlo']:.3f} | "
+            f"{r['roofline_fraction']:.3f} | {r['temp_bytes_gb']:.1f} |\n")
+    return "".join(out)
+
+
+if __name__ == "__main__":
+    rows = table()
+    print(markdown(rows))

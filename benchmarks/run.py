@@ -1,0 +1,62 @@
+"""Benchmark harness: one function per paper table/figure + kernel micro.
+
+Prints ``name,us_per_call,derived`` CSV (one line per benchmark) followed
+by the full per-table rows, and - when dry-run artifacts exist - the
+roofline summary.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+
+def _run(name, fn):
+    t0 = time.perf_counter()
+    rows, derived = fn()
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"{name},{us:.0f},{json.dumps(derived, default=str)}")
+    return rows, derived
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks import kernel_bench, paper_tables
+
+    print("name,us_per_call,derived")
+    detail = {}
+    for name, fn in [
+        ("table1_sparse_latency", paper_tables.table1_sparse_latency),
+        ("table2_burst_latency", paper_tables.table2_burst_latency),
+        ("table3_area", paper_tables.table3_area),
+        ("fig5_scalability", paper_tables.fig5_scalability),
+        ("fig10_cam_cycle", paper_tables.fig10_cam_cycle),
+        ("fig11_cam_energy", paper_tables.fig11_cam_energy),
+    ]:
+        detail[name], _ = _run(name, fn)
+
+    for row in (kernel_bench.cam_search_bench()
+                + kernel_bench.hat_encode_bench()
+                + kernel_bench.moe_dispatch_bench()):
+        print(f"{row['name']},{row['us_per_call']},{row['derived']}")
+
+    print("\n--- table detail ---")
+    for name, rows in detail.items():
+        print(f"\n[{name}]")
+        for r in rows:
+            print(" ", r)
+
+    # roofline summary if the dry-run has produced artifacts
+    try:
+        from benchmarks import roofline
+        rows = roofline.table()
+        if rows:
+            print("\n--- roofline (singlepod baseline) ---")
+            print(roofline.markdown(rows))
+    except Exception as e:  # noqa: BLE001
+        print(f"\n(roofline skipped: {e})")
+
+
+if __name__ == "__main__":
+    main()

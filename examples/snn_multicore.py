@@ -1,0 +1,76 @@
+"""The paper's own workload: train a multi-core SNN and report what the
+core interface costs - comparing HAT against the other arbitration
+schemes and the CSCD CAM against the conventional one.
+
+    PYTHONPATH=src python examples/snn_multicore.py
+"""
+
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import paper_dynaps
+from repro.core import arbiter, cam, fabric
+from repro.data.pipeline import snn_batch
+from repro.models import snn
+from repro.optim import adamw
+
+
+def main():
+    cfg = paper_dynaps.smoke_config()
+    params, topo = snn.init_snn(jax.random.PRNGKey(0), cfg)
+    opt_cfg = adamw.AdamWConfig(lr=5e-3, warmup_steps=2, total_steps=80,
+                                weight_decay=0.0)
+    opt = adamw.init(opt_cfg, params)
+    loss_g = jax.jit(jax.value_and_grad(
+        lambda p, b: snn.snn_loss(p, topo, b, cfg)))
+
+    print(f"[snn] {cfg.fabric.cores} cores x {cfg.fabric.neurons_per_core} "
+          f"neurons, CAM {cfg.fabric.cam.entries}x{cfg.fabric.cam.bits}")
+    key = jax.random.PRNGKey(1)
+    for step in range(40):
+        key, sub = jax.random.split(key)
+        batch = snn_batch(sub, 32, cfg.t_steps, cfg.d_in, cfg.d_out)
+        loss, grads = loss_g(params, batch)
+        params, opt, _ = adamw.update(opt_cfg, grads, opt, params)
+        if step % 10 == 0:
+            print(f"  step {step:2d} loss {float(loss):.4f}")
+
+    # accuracy
+    batch = snn_batch(jax.random.PRNGKey(99), 128, cfg.t_steps, cfg.d_in,
+                      cfg.d_out)
+    logits, rates, stats = snn.snn_forward(params, topo, batch["x"], cfg,
+                                           account=True)
+    acc = float(jnp.mean(jnp.argmax(logits, -1) == batch["y"]))
+    print(f"[snn] accuracy {acc:.2%}, mean rate {float(rates.mean()):.3f}")
+
+    # --- core-interface report (the paper's PPA story) ---------------------
+    n = cfg.fabric.neurons_per_core
+    print("\n[interface] per-tick stats (trained network):")
+    for k, v in stats._asdict().items():
+        print(f"  {k:16s} {float(v):10.2f}")
+
+    print("\n[interface] arbitration alternatives at this core size:")
+    for scheme in arbiter.SCHEMES:
+        sp = arbiter.sparse_latency_units(scheme, n)
+        ar = arbiter.area_units(scheme, n)
+        print(f"  {scheme:12s} sparse {sp:7.1f} units  area {ar:6.1f} arbiters")
+
+    print("\n[interface] CAM variants (512x11, per-search energy units):")
+    for name, c in {
+        "conventional": cam.CamConfig(512, cscd=False, feedback=False,
+                                      speculative=False),
+        "proposed (CSCD+fb+ss)": cam.CamConfig(512),
+    }.items():
+        e = cam.search_energy(c, n_match=1, n_mismatch=511)
+        t = cam.cycle_time_ns(c)
+        print(f"  {name:22s} energy {e:8.1f}  cycle {t:5.2f} ns")
+
+
+if __name__ == "__main__":
+    main()

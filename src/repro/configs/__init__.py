@@ -1,0 +1,83 @@
+"""Architecture registry: --arch <id> -> ModelConfig, shapes, cell matrix.
+
+Ten assigned architectures + the paper's own SNN config.  Each cell of
+the (arch x shape) matrix resolves to the program the dry-run lowers:
+train_step / prefill_step / decode_step.  Skips follow the brief:
+encoder-only archs have no decode shapes; long_500k runs only for
+SSM/hybrid families (sub-quadratic) - see DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCHS = {
+    "hubert-xlarge": "hubert_xlarge",
+    "rwkv6-3b": "rwkv6_3b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "gemma3-12b": "gemma3_12b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "qwen3-32b": "qwen3_32b",
+    "llama3.2-3b": "llama3_2_3b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+
+def _module(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).smoke_config()
+
+
+def train_overrides(arch: str) -> dict:
+    return getattr(_module(arch), "TRAIN_OVERRIDES", {})
+
+
+def cell_status(arch: str, shape: str) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped) for one (arch x shape) cell."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    if sh.kind == "decode" and cfg.encoder_only:
+        return False, "encoder-only: no decode step"
+    if shape == "long_500k" and not cfg.is_subquadratic():
+        return False, "full attention: long_500k needs sub-quadratic mixer"
+    return True, ""
+
+
+def all_cells():
+    """Every (arch, shape, runnable, reason) - the 40-cell matrix."""
+    out = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            ok, why = cell_status(arch, shape)
+            out.append((arch, shape, ok, why))
+    return out

@@ -1,0 +1,26 @@
+"""llama3.2-3b [dense]: 28L d_model=3072 24H (GQA kv=8) d_ff=8192
+vocab=128256.  24 heads don't divide the 16-way model axis, so attention
+runs sequence-parallel (DESIGN.md §7.6) - an explicit SP feature, not a
+config change."""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-3b", family="dense",
+        n_layers=28, d_model=3072, n_heads=24, n_kv_heads=8,
+        head_dim=128, d_ff=8192, vocab=128256,
+        rope_theta=500_000.0, attn_shard="sequence",
+        param_dtype="float32", compute_dtype="bfloat16",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-3b-smoke", family="dense",
+        n_layers=2, d_model=48, n_heads=6, n_kv_heads=2,
+        head_dim=8, d_ff=128, vocab=128,
+        attn_shard="sequence",
+        param_dtype="float32", compute_dtype="float32",
+    )

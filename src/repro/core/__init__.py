@@ -1,0 +1,13 @@
+"""Core paper contribution: neuromorphic core-interface models in JAX.
+
+- arbiter:       five arbitration architectures (HAT = the paper's), closed
+                 forms + discrete-event simulation (Tables I-III, Fig. 5)
+- aer:           address-event encode/decode + raster streaming
+- cam:           asynchronous CAM with CSCD / feedback / speculative sense
+                 (Figs. 9-11), functional search + behavioural PPA models
+- event_router:  HAT-style hierarchical MoE token dispatch (beyond-paper)
+- fabric:        multi-core spike fabric composing the full core interface
+- ppa:           calibration constants shared by the models
+"""
+
+from repro.core import aer, arbiter, cam, event_router, fabric, ppa  # noqa: F401

@@ -1,0 +1,257 @@
+"""Arbitration architectures for the neuromorphic core output interface.
+
+Implements the five schemes compared in the paper (Tables I-III, Fig. 5):
+
+  binary_tree  - flat binary arbiter tree (Boahen-style)
+  greedy_tree  - binary tree with greedy re-grant of hot subtrees
+  token_ring   - single token ring over all N neurons
+  hier_ring    - two-level hierarchical token ring (HTR, Purohit & Manohar)
+  hier_tree    - the paper's HAT: log4(N) levels of shared four-input
+                 arbiters, 2 address bits encoded per level, with the
+                 asynchronous encoding pipeline holding higher-level grants
+                 while a cluster drains.
+
+Two complementary models:
+
+  * closed-form unit-domain costs (re-exported from :mod:`repro.core.ppa`),
+  * a mechanistic discrete-event simulator (`simulate`) in pure JAX whose
+    emergent latencies match the closed forms (exactly for sparse mode, to
+    within a few percent for burst mode - the same gap the paper reports
+    between theory and pre-layout simulation).
+
+TPU adaptation (DESIGN.md §2): arbitration on a deterministic machine is a
+*scheduling policy*, not an analog race.  Ties break by ascending address;
+metastability/grant-overlap become testable determinism properties.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ppa
+
+SCHEMES = ppa.SCHEMES
+
+# Re-export the closed forms so callers have one import surface.
+sparse_latency_units = ppa.sparse_latency_units
+burst_latency_units = ppa.burst_latency_units
+area_units = ppa.area_units
+sparse_latency_ns = ppa.sparse_latency_ns
+burst_latency_ns = ppa.burst_latency_ns
+area_normalized = ppa.area_normalized
+
+INF = jnp.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class ArbiterConfig:
+    """Static description of one arbitration architecture instance."""
+
+    scheme: str
+    n: int                      # neurons per core (power of two)
+    branching: int = 4          # HAT: four-input arbiter per hierarchy level
+    pipeline_fill: int = 3      # HAT: static-HC pipeline fill latency (units)
+
+    def __post_init__(self):
+        if self.scheme not in SCHEMES:
+            raise ValueError(f"unknown scheme {self.scheme!r}")
+        if self.n & (self.n - 1):
+            raise ValueError("n must be a power of two")
+
+    @property
+    def levels(self) -> int:
+        """HAT hierarchy levels (2 address bits per level)."""
+        return max(1, round(math.log(self.n, self.branching)))
+
+    @property
+    def addr_bits(self) -> int:
+        return int(math.log2(self.n))
+
+
+# ---------------------------------------------------------------------------
+# Discrete-event simulation.
+#
+# State carried through the lax.scan (one step = one granted event):
+#   clock        server-free time (units)
+#   token_hi/lo  ring token positions (ring schemes)
+#   prev_addr    last granted address (cluster-switch penalties, HAT)
+#   served       bool mask of granted events
+# ---------------------------------------------------------------------------
+
+
+def _ring_dist(frm, to, n):
+    return jnp.mod(to - frm, n)
+
+
+@partial(jax.jit, static_argnames=("scheme", "n", "levels", "fill"))
+def _simulate(request_times, scheme: str, n: int, levels: int, fill: int):
+    """Serve every finite request; returns grant_times (inf where no request)."""
+    lg = float(math.log2(n))
+    sqrt_n = int(round(math.sqrt(n)))
+    addrs = jnp.arange(n)
+    active = jnp.isfinite(request_times)
+    num_active = jnp.sum(active)
+
+    def step(state, _):
+        clock, tok_hi, tok_lo, prev_addr, served, granted_any = state
+        pending = active & ~served
+        arr = jnp.where(pending, request_times, INF)
+
+        # --- selection policy: who is granted next -----------------------
+        arrived = pending & (arr <= clock)
+        any_arrived = jnp.any(arrived)
+        if scheme in ("binary_tree", "greedy_tree", "hier_tree"):
+            # trees grant the lowest pending address (deterministic tie-break);
+            # if nothing has arrived yet, wait for the earliest arrival.
+            key_arrived = jnp.where(arrived, addrs.astype(jnp.float32), INF)
+            key_waiting = arr * jnp.float32(n) + addrs  # earliest arrival, addr tiebreak
+            sel = jnp.where(any_arrived, jnp.argmin(key_arrived), jnp.argmin(key_waiting))
+        else:
+            # rings grant the nearest pending request downstream of the token.
+            if scheme == "token_ring":
+                dist = _ring_dist(tok_hi, addrs, n)
+            else:  # hier_ring: two-level distance
+                hi, lo = addrs // sqrt_n, addrs % sqrt_n
+                dist = _ring_dist(tok_hi, hi, sqrt_n) * (sqrt_n + 2) + _ring_dist(
+                    jnp.where(hi == tok_hi, tok_lo, 0), lo, sqrt_n)
+            key_arrived = jnp.where(arrived, dist.astype(jnp.float32), INF)
+            key_waiting = arr * jnp.float32(n) + addrs
+            sel = jnp.where(any_arrived, jnp.argmin(key_arrived), jnp.argmin(key_waiting))
+
+        sel_arr = request_times[sel]
+        start = jnp.maximum(sel_arr, clock)
+        backlog = clock > sel_arr  # pipeline already busy when the event arrived
+
+        # --- per-scheme grant delay --------------------------------------
+        if scheme == "binary_tree":
+            delay = jnp.float32(2.0 * (lg - 1.0))           # full round trip, always
+        elif scheme == "greedy_tree":
+            # greedy re-grant services backlog at leaf level (~3 units);
+            # a lone event still pays the full climb.
+            delay = jnp.where(backlog, 3.0, 2.0 * (lg - 1.0)).astype(jnp.float32)
+        elif scheme == "token_ring":
+            # idle: token travels dist hops then grants (+1); backlogged: the
+            # hop overlaps the previous handshake -> 1 unit/event (burst = N).
+            dist = _ring_dist(tok_hi, sel, n).astype(jnp.float32)
+            delay = jnp.where(backlog, jnp.maximum(dist, 1.0), dist + 1.0)
+        elif scheme == "hier_ring":
+            hi, lo = sel // sqrt_n, sel % sqrt_n
+            d_hi = _ring_dist(tok_hi, hi, sqrt_n).astype(jnp.float32)
+            d_lo = _ring_dist(jnp.where(hi == tok_hi, tok_lo, 0), lo,
+                              sqrt_n).astype(jnp.float32)
+            # idle: top hops + bottom hops + grant; backlogged: 1 unit/event
+            # with a 3-unit section-switch penalty (enter/exit the sub-ring).
+            delay = jnp.where(backlog,
+                              jnp.maximum(d_lo + 3.0 * d_hi, 1.0),
+                              d_hi + d_lo + 1.0)
+        else:  # hier_tree (HAT)
+            # Sparse (idle pipeline): 2 two-input stages per level = log2 N.
+            # Backlogged: 1 unit/event + 1 unit when the level-2 cluster
+            # (16 neurons) switches, + one-off pipeline fill.
+            cluster = sel // (4 ** (levels - 1))
+            prev_cluster = prev_addr // (4 ** (levels - 1))
+            switch = (cluster != prev_cluster).astype(jnp.float32)
+            first = (~granted_any).astype(jnp.float32)
+            delay = jnp.where(backlog, 1.0 + switch + first * fill, 2.0 * levels)
+            delay = delay.astype(jnp.float32)
+
+        grant = start + delay
+
+        # --- state update -------------------------------------------------
+        if scheme == "token_ring":
+            tok_hi = jnp.where(pending[sel], sel, tok_hi)
+        elif scheme == "hier_ring":
+            tok_hi = jnp.where(pending[sel], sel // sqrt_n, tok_hi)
+            tok_lo = jnp.where(pending[sel], sel % sqrt_n, tok_lo)
+        served = served.at[sel].set(served[sel] | pending[sel])
+        clock = jnp.where(pending[sel], grant, clock)
+        prev_addr = jnp.where(pending[sel], sel, prev_addr)
+        granted_any = granted_any | pending[sel]
+        out = (sel, jnp.where(pending[sel], grant, INF))
+        return (clock, tok_hi, tok_lo, prev_addr, served, granted_any), out
+
+    init = (jnp.float32(0.0), jnp.int32(0), jnp.int32(0), jnp.int32(0),
+            jnp.zeros(n, dtype=bool), jnp.bool_(False))
+    (_, _, _, _, _, _), (sel_seq, grant_seq) = jax.lax.scan(step, init, None, length=n)
+
+    grant_times = jnp.full(n, INF, dtype=jnp.float32)
+    grant_times = grant_times.at[sel_seq].min(grant_seq)
+    # steps beyond num_active re-select already-served events; .min keeps first.
+    del num_active
+    return grant_times
+
+
+class Arbiter:
+    """Discrete-event model of one core-output arbiter."""
+
+    def __init__(self, config: ArbiterConfig):
+        self.config = config
+
+    def simulate(self, request_times) -> jnp.ndarray:
+        """request_times: (n,) float, inf = no request → grant_times (n,)."""
+        request_times = jnp.asarray(request_times, dtype=jnp.float32)
+        if request_times.shape != (self.config.n,):
+            raise ValueError(f"expected shape ({self.config.n},)")
+        return _simulate(request_times, self.config.scheme, self.config.n,
+                         self.config.levels, self.config.pipeline_fill)
+
+    # ---- experiment drivers (paper §III-D) -------------------------------
+
+    def sparse_event_latency(self, key, num_trials: int = 64) -> jnp.ndarray:
+        """Average latency of isolated random single-neuron events (units)."""
+        n = self.config.n
+        positions = jax.random.randint(key, (num_trials,), 0, n)
+
+        def one(pos):
+            req = jnp.full((n,), INF, dtype=jnp.float32).at[pos].set(0.0)
+            return self.simulate(req)[pos]
+
+        return jnp.mean(jax.vmap(one)(positions))
+
+    def burst_latency(self) -> jnp.ndarray:
+        """Completion time of a full-frame burst (all neurons fire at t=0)."""
+        req = jnp.zeros((self.config.n,), dtype=jnp.float32)
+        grants = self.simulate(req)
+        return jnp.max(grants)
+
+    # ---- closed forms ----------------------------------------------------
+
+    def theoretical_sparse_units(self) -> float:
+        return sparse_latency_units(self.config.scheme, self.config.n)
+
+    def theoretical_burst_units(self) -> float:
+        return burst_latency_units(self.config.scheme, self.config.n)
+
+    def theoretical_area_units(self) -> float:
+        return area_units(self.config.scheme, self.config.n)
+
+
+# ---------------------------------------------------------------------------
+# Encoding energy model (paper §II-A / §III-B): flat trees drive log2(N)
+# address lines per event; HAT re-encodes a level only when its cluster
+# grant changes.  Units: address-line toggles per event.
+# ---------------------------------------------------------------------------
+
+
+def encode_energy_units(scheme: str, n: int, addr_seq) -> jnp.ndarray:
+    """Average address-line toggles/event for a granted address sequence."""
+    addr_seq = jnp.asarray(addr_seq)
+    bits = int(math.log2(n))
+    if scheme in ("binary_tree", "greedy_tree", "token_ring", "hier_ring"):
+        return jnp.float32(bits) * jnp.ones((), jnp.float32)
+    # hier_tree: level l (0 = low) re-encoded iff the address prefix above
+    # level l changed vs. the previous event.
+    levels = max(1, round(math.log(n, 4)))
+    prev = jnp.concatenate([jnp.array([-1], addr_seq.dtype), addr_seq[:-1]])
+    toggles = jnp.zeros(addr_seq.shape, jnp.float32)
+    for lvl in range(levels):
+        # level l's arbiter re-fires (re-encoding its 2 bits) whenever the
+        # address prefix from level l upward changes.
+        changed = (addr_seq // (4 ** lvl)) != (prev // (4 ** lvl))
+        toggles = toggles + jnp.where(changed, 2.0, 0.0)
+    return jnp.mean(toggles)

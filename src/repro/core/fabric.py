@@ -1,0 +1,166 @@
+"""Multi-core spike-routing fabric: cores composed through the core interface.
+
+Implements the system of Fig. 1: each core has
+  * an **output interface** - arbiter + AER encoding pipeline (HAT by
+    default) that serializes the core's spike vector into address events,
+  * an **input interface** - a CAM routing LUT whose entries are
+    (source tag -> synapse row, weight); an incoming event is broadcast on
+    the CAM search lines and every matching synapse injects current.
+
+The fabric is pure-functional JAX: `step` maps (per-core spike vectors) to
+(per-core synaptic input currents) and an accounting record of
+latency/energy/area from the behavioural PPA models, so an SNN simulation
+built on top (models/snn.py) reports core-interface costs per timestep -
+the quantity the paper optimizes.
+
+Tag space: a global neuron address (core_id * neurons_per_core + neuron_id)
+encoded in `tag_bits`.  This is the DYNAPs-style multi-tag scheme [6].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import arbiter as arb
+from repro.core import cam as cam_mod
+from repro.core import ppa
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricConfig:
+    cores: int = 4
+    neurons_per_core: int = 256
+    cam_entries_per_core: int = 512     # synapses with addressable tags
+    scheme: str = "hier_tree"
+    cam: cam_mod.CamConfig | None = None
+
+    def __post_init__(self):
+        if self.cam is None:
+            object.__setattr__(self, "cam",
+                               cam_mod.CamConfig(entries=self.cam_entries_per_core))
+
+    @property
+    def tag_bits(self) -> int:
+        return max(1, math.ceil(math.log2(self.cores * self.neurons_per_core)))
+
+
+class FabricParams(NamedTuple):
+    """Learnable/configurable routing state."""
+    tags: jnp.ndarray      # (cores, entries, tag_bits) {0,1} stored source tags
+    valid: jnp.ndarray     # (cores, entries) bool
+    weights: jnp.ndarray   # (cores, entries) float synaptic weight
+    targets: jnp.ndarray   # (cores, entries) int32 target neuron within core
+
+
+class StepStats(NamedTuple):
+    events: jnp.ndarray            # scalar: total address events this tick
+    encode_latency: jnp.ndarray    # scalar: max grant latency (units)
+    encode_energy: jnp.ndarray     # scalar: address-line toggles
+    cam_searches: jnp.ndarray      # scalar: CAM search operations
+    cam_energy: jnp.ndarray        # scalar: CAM model energy units
+    cam_time_ns: jnp.ndarray       # scalar: serialized CAM search time
+
+
+def int_to_bits(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    return ((x[..., None] >> jnp.arange(bits - 1, -1, -1)) & 1).astype(jnp.int32)
+
+
+def random_connectivity(key, cfg: FabricConfig, fan_in: float = 0.9) -> FabricParams:
+    """Random routing tables: each CAM entry subscribes to a random source."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    total = cfg.cores * cfg.neurons_per_core
+    src = jax.random.randint(k1, (cfg.cores, cfg.cam.entries), 0, total)
+    tags = int_to_bits(src, cfg.tag_bits)
+    valid = jax.random.bernoulli(k2, fan_in, (cfg.cores, cfg.cam.entries))
+    weights = jax.random.normal(k3, (cfg.cores, cfg.cam.entries)) * 0.5 + 1.0
+    targets = jax.random.randint(k4, (cfg.cores, cfg.cam.entries), 0,
+                                 cfg.neurons_per_core)
+    return FabricParams(tags, valid, weights, targets)
+
+
+def step(params: FabricParams, spikes: jnp.ndarray, cfg: FabricConfig
+         ) -> tuple[jnp.ndarray, StepStats]:
+    """One fabric tick.
+
+    spikes: (cores, neurons_per_core) bool
+    returns: currents (cores, neurons_per_core) float32, stats
+    """
+    cores, n = spikes.shape
+    assert n == cfg.neurons_per_core and cores == cfg.cores
+
+    # ---- output interface: arbitrate + encode each core's spikes ----------
+    def encode_core(core_spikes):
+        req = jnp.where(core_spikes, 0.0, jnp.inf).astype(jnp.float32)
+        grants = arb.Arbiter(arb.ArbiterConfig(cfg.scheme, n)).simulate(req)
+        lat = jnp.where(jnp.any(core_spikes),
+                        jnp.max(jnp.where(jnp.isfinite(grants), grants, 0.0)), 0.0)
+        return lat
+
+    latencies = jax.vmap(encode_core)(spikes)
+
+    # global source tags of every spiking neuron (dense mask form)
+    neuron_global = (jnp.arange(cores)[:, None] * n + jnp.arange(n)[None, :])
+    src_bits = int_to_bits(neuron_global, cfg.tag_bits)      # (cores, n, bits)
+
+    # ---- NoC broadcast + input interface: CAM search per target core ------
+    # match[c_tgt, entry, c_src, neuron] = entry subscribed to that source
+    def core_inputs(tags_c, valid_c, weights_c, targets_c):
+        # (entries, bits) vs (cores*n, bits)
+        flat_bits = src_bits.reshape(-1, cfg.tag_bits)
+        eq = jnp.all(tags_c[:, None, :] == flat_bits[None, :, :], axis=-1)
+        hit = eq & valid_c[:, None] & spikes.reshape(-1)[None, :]
+        entry_drive = jnp.sum(hit, axis=1).astype(jnp.float32)  # events per entry
+        contrib = entry_drive * weights_c
+        currents = jnp.zeros((n,), jnp.float32).at[targets_c].add(contrib)
+        return currents, jnp.sum(hit)
+
+    currents, hits = jax.vmap(core_inputs)(params.tags, params.valid,
+                                           params.weights, params.targets)
+
+    # ---- PPA accounting -----------------------------------------------------
+    total_events = jnp.sum(spikes).astype(jnp.float32)
+    addr_seq, _ = jax.vmap(lambda s: _hat_order(s, n))(spikes)
+    enc_energy = jax.vmap(
+        lambda seq: arb.encode_energy_units(cfg.scheme, n, seq))(addr_seq)
+    searches = total_events * cores            # every event searched in every core
+    valid_cnt = jnp.sum(params.valid, axis=1).astype(jnp.float32)
+    match_per_search = jnp.sum(hits).astype(jnp.float32) / jnp.maximum(searches, 1.0)
+    mismatch_per_search = jnp.mean(valid_cnt) - match_per_search
+    cam_energy = searches * _cam_energy(cfg.cam, match_per_search,
+                                        mismatch_per_search)
+    cam_time = searches * cam_mod.cycle_time_ns(cfg.cam)
+
+    stats = StepStats(events=total_events,
+                      encode_latency=jnp.max(latencies),
+                      encode_energy=jnp.sum(enc_energy * jnp.sum(spikes, 1)),
+                      cam_searches=searches,
+                      cam_energy=cam_energy,
+                      cam_time_ns=cam_time)
+    return currents, stats
+
+
+def _hat_order(spikes, n):
+    idx = jnp.arange(n, dtype=jnp.int32)
+    key = jnp.where(spikes, idx, n)
+    return jnp.sort(key), jnp.sum(spikes)
+
+
+def _cam_energy(cfg: cam_mod.CamConfig, n_match, n_mismatch):
+    return cam_mod._energy_jnp(cfg, n_match, n_mismatch)
+
+
+def interface_area_um2(cfg: FabricConfig) -> dict:
+    """Static area report for one core's interface (model units/um^2)."""
+    return {
+        "arbiter_norm_area": arb.area_normalized(cfg.scheme, cfg.neurons_per_core),
+        "arbiter_units": arb.area_units(cfg.scheme, cfg.neurons_per_core),
+        "cam_um2": cam_mod.area_um2(cfg.cam),
+        "cam_um2_baseline": cam_mod.area_um2(
+            cam_mod.CamConfig(cfg.cam.entries, cscd=False, feedback=False,
+                              speculative=False)),
+    }

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the core-interface hot spots.
+
+Each kernel package ships kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd wrapper with impl dispatch: "xla" oracle path | "pallas"), and
+ref.py (pure-jnp oracle).  Kernels validate in interpret mode on CPU; the
+XLA path is the default so dry-run cost analysis stays meaningful.
+"""

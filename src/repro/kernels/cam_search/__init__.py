@@ -1,0 +1,1 @@
+"""cam_search kernel package."""

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: packed-bit CAM associative search.
+
+TPU-native realization of the paper's CAM array (DESIGN.md §2): tags are
+bit-packed into int32 lanes; a search broadcasts the query block against a
+tag block resident in VMEM and reduces equality across words.  The MXU is
+not needed - this is a VPU compare/reduce - but tiling follows the same
+(8, 128)-aligned layout rules.
+
+Grid: (B / bB, E / bE).  Each program compares a (bB, W) query tile with a
+(bE, W) tag tile and writes a (bB, bE) {0,1} int32 match tile.
+
+The speculative-sense analogue (two-pass filtered search) lives in ops.py:
+a cheap last-word prefilter masks the full-width compare, cutting HBM
+traffic for mismatching entries exactly as the circuit cuts DC current.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_B = 128
+DEFAULT_BLOCK_E = 128
+
+
+def _cam_search_kernel(q_ref, t_ref, valid_ref, out_ref):
+    q = q_ref[...]                      # (bB, W) int32
+    t = t_ref[...]                      # (bE, W) int32
+    v = valid_ref[...]                  # (1, bE) int32
+    # (bB, bE, W) equality, reduced over words
+    eq = (q[:, None, :] == t[None, :, :]).all(axis=-1)
+    out_ref[...] = (eq & (v[0][None, :] != 0)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_e", "interpret"))
+def cam_search_pallas(q_packed: jnp.ndarray, t_packed: jnp.ndarray,
+                      valid: jnp.ndarray, *, block_b: int = DEFAULT_BLOCK_B,
+                      block_e: int = DEFAULT_BLOCK_E,
+                      interpret: bool = False) -> jnp.ndarray:
+    """(B, W) x (E, W) x (E,) -> (B, E) int32 match matrix."""
+    b, w = q_packed.shape
+    e, w2 = t_packed.shape
+    assert w == w2, (w, w2)
+    bb = min(block_b, b)
+    be = min(block_e, e)
+    if b % bb or e % be:
+        raise ValueError(f"B={b} and E={e} must divide block sizes ({bb},{be})")
+    grid = (b // bb, e // be)
+    valid2d = valid.astype(jnp.int32).reshape(1, e)
+    return pl.pallas_call(
+        _cam_search_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((be, w), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, be), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, be), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, e), jnp.int32),
+        interpret=interpret,
+    )(q_packed, t_packed, valid2d)

@@ -1,0 +1,50 @@
+"""Public ops for CAM search: impl dispatch + speculative-sense variant."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cam_search import ref
+from repro.kernels.cam_search.kernel import cam_search_pallas
+
+pack_bits = ref.pack_bits
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def cam_search(q_packed, t_packed, valid, *, impl: str = "xla",
+               interpret: bool = False) -> jnp.ndarray:
+    """Batched associative tag match: (B, W), (E, W), (E,) -> (B, E) int32."""
+    if impl == "xla":
+        return ref.cam_search_ref(q_packed, t_packed, valid)
+    if impl == "pallas":
+        return cam_search_pallas(q_packed, t_packed, valid, interpret=interpret)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def cam_first_match(q_packed, t_packed, valid, *, impl: str = "xla",
+                    interpret: bool = False) -> jnp.ndarray:
+    m = cam_search(q_packed, t_packed, valid, impl=impl, interpret=interpret)
+    return ref.first_match_ref(m)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def cam_search_speculative(q_packed, t_packed, valid, *, impl: str = "xla",
+                           interpret: bool = False) -> jnp.ndarray:
+    """Two-pass filtered search - the speculative-sense analogue.
+
+    Pass 1 compares only the *last* packed word (the paper senses the last
+    n cells nearest the MLSA); entries failing it are masked out of the
+    full-width pass.  Bit-exact with `cam_search`; on real hardware the
+    second pass touches only surviving entries, cutting HBM traffic by
+    ~P(ss) for mismatching entries.  The benchmark quantifies the saving.
+    """
+    last_q = q_packed[:, -1:]
+    last_t = t_packed[:, -1:]
+    prefilter = cam_search(last_q, last_t, valid, impl=impl, interpret=interpret)
+    survivors = prefilter.astype(bool)
+    full = cam_search(q_packed, t_packed, valid, impl=impl, interpret=interpret)
+    return jnp.where(survivors, full, 0)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the cam_search kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack_bits(bits: jnp.ndarray, word_bits: int = 32) -> jnp.ndarray:
+    """(..., nbits) {0,1} -> (..., ceil(nbits/word)) int32, little-endian words."""
+    nbits = bits.shape[-1]
+    nwords = -(-nbits // word_bits)
+    pad = nwords * word_bits - nbits
+    b = jnp.pad(bits.astype(jnp.uint32), [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+    b = b.reshape(*bits.shape[:-1], nwords, word_bits)
+    weights = (jnp.uint32(1) << jnp.arange(word_bits, dtype=jnp.uint32))
+    return jnp.sum(b * weights, axis=-1, dtype=jnp.uint32).astype(jnp.int32)
+
+
+def cam_search_ref(q_packed: jnp.ndarray, t_packed: jnp.ndarray,
+                   valid: jnp.ndarray) -> jnp.ndarray:
+    """match[b, e] = valid[e] & all-words-equal.
+
+    q_packed: (B, W) int32; t_packed: (E, W) int32; valid: (E,) bool/int
+    returns (B, E) int32 in {0, 1}
+    """
+    eq = jnp.all(q_packed[:, None, :] == t_packed[None, :, :], axis=-1)
+    return (eq & (valid.astype(bool))[None, :]).astype(jnp.int32)
+
+
+def first_match_ref(match: jnp.ndarray) -> jnp.ndarray:
+    """(B, E) match matrix -> (B,) index of lowest matching entry (E if none)."""
+    b, e = match.shape
+    idx = jnp.arange(e, dtype=jnp.int32)
+    return jnp.min(jnp.where(match.astype(bool), idx, e), axis=-1)
+
+
+def match_count_ref(match: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(match, axis=-1).astype(jnp.int32)

@@ -1,0 +1,1 @@
+"""hat_encode kernel package."""

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: hierarchical address-event encoding (the HAT tree).
+
+The paper's HAT arbitrates 2 bits per level with small shared arbiters; on
+a systolic machine the same hierarchy becomes a two-level prefix scan done
+on the MXU (DESIGN.md §2):
+
+  low level   - within-row inclusive scan:  (R, C) @ upper-tri (C, C)
+  high level  - across-row exclusive scan:  strict-lower-tri (R, R) @ sums
+
+The spike bitmap (N,) is reshaped to (R, C); each row is a "cluster".  The
+kernel emits the service rank of every neuron (ascending-address
+arbitration), per-cluster event counts, and the total event count.  The
+triangular matmuls are exact in f32 for N < 2^24.
+
+Single-program kernel (whole bitmap in VMEM): N <= 2^16 int32 = 256 KiB,
+well inside VMEM; ops.py falls back to the XLA oracle beyond that.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hat_encode_kernel(spikes_ref, ranks_ref, counts_ref, total_ref):
+    s = spikes_ref[...].astype(jnp.float32)            # (R, C) {0,1}
+    r, c = s.shape
+    # low level: inclusive scan within each row (cluster) on the MXU
+    col = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    row = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    upper_incl = (col <= row).astype(jnp.float32)      # U[j, k] = 1 if j <= k
+    row_scan = jnp.dot(s, upper_incl, preferred_element_type=jnp.float32)
+    row_sums = row_scan[:, c - 1:c]                    # (R, 1) cluster counts
+    # high level: exclusive scan across rows (clusters)
+    ri = jax.lax.broadcasted_iota(jnp.int32, (r, r), 0)
+    rj = jax.lax.broadcasted_iota(jnp.int32, (r, r), 1)
+    strict_lower = (rj < ri).astype(jnp.float32)       # L[i, j] = 1 if j < i
+    offsets = jnp.dot(strict_lower, row_sums,
+                      preferred_element_type=jnp.float32)  # (R, 1)
+    rank = offsets + row_scan - 1.0
+    ranks_ref[...] = jnp.where(s > 0, rank, -1.0).astype(jnp.int32)
+    counts_ref[...] = row_sums.astype(jnp.int32)
+    total_ref[...] = (offsets[r - 1:r] + row_sums[r - 1:r]).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("row", "interpret"))
+def hat_encode_pallas(spikes: jnp.ndarray, *, row: int = 256,
+                      interpret: bool = False):
+    """(N,) {0,1} -> (ranks (N,), count (), cluster_counts (N//row,))."""
+    n = spikes.shape[0]
+    if n % row:
+        raise ValueError(f"N={n} must be a multiple of row={row}")
+    r = n // row
+    s2 = spikes.astype(jnp.int32).reshape(r, row)
+    ranks2, counts2, total = pl.pallas_call(
+        _hat_encode_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((r, row), lambda i: (0, 0))],
+        out_specs=[
+            pl.BlockSpec((r, row), lambda i: (0, 0)),
+            pl.BlockSpec((r, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, row), jnp.int32),
+            jax.ShapeDtypeStruct((r, 1), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(s2)
+    return ranks2.reshape(n), total.reshape(()), counts2.reshape(r)

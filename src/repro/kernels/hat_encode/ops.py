@@ -1,0 +1,38 @@
+"""Public ops for hierarchical address-event encoding."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hat_encode import ref
+from repro.kernels.hat_encode.kernel import hat_encode_pallas
+
+MAX_PALLAS_N = 1 << 16
+
+
+@functools.partial(jax.jit, static_argnames=("row", "impl", "interpret"))
+def hat_encode(spikes, *, row: int = 256, impl: str = "xla",
+               interpret: bool = False):
+    """Service ranks + counts for a spike bitmap (see kernel docstring)."""
+    n = spikes.shape[0]
+    if impl == "pallas" and n <= MAX_PALLAS_N and n % row == 0:
+        return hat_encode_pallas(spikes, row=row, interpret=interpret)
+    if impl == "pallas":
+        raise ValueError(f"pallas hat_encode supports N % {row} == 0 and "
+                         f"N <= {MAX_PALLAS_N}; got N={n}")
+    if impl != "xla":
+        raise ValueError(f"unknown impl {impl!r}")
+    r = row if n % row == 0 else 1
+    return ref.hat_encode_ref(spikes, row=r)
+
+
+@functools.partial(jax.jit, static_argnames=("row", "impl", "interpret"))
+def encode_stream(spikes, *, row: int = 256, impl: str = "xla",
+                  interpret: bool = False):
+    """Compacted AER stream: active addresses in service order, padded N."""
+    ranks, count, _ = hat_encode(spikes, row=row, impl=impl,
+                                 interpret=interpret)
+    return ref.compact_stream(ranks, count), count

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the hat_encode kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hat_encode_ref(spikes: jnp.ndarray, row: int = 256):
+    """Hierarchical event encoding oracle.
+
+    spikes: (N,) bool/int {0,1}
+    returns:
+      ranks   (N,) int32 - service order of each active neuron (ascending
+              address = the DES tie-break), -1 for inactive
+      count   ()   int32 - number of events
+      cluster_counts (N // row,) int32 - events per high-level cluster
+    """
+    s = spikes.astype(jnp.int32)
+    n = s.shape[0]
+    incl = jnp.cumsum(s)
+    ranks = jnp.where(s > 0, incl - 1, -1).astype(jnp.int32)
+    count = incl[-1].astype(jnp.int32)
+    cluster_counts = jnp.sum(s.reshape(n // row, row), axis=1).astype(jnp.int32)
+    return ranks, count, cluster_counts
+
+
+def compact_stream(ranks: jnp.ndarray, count: jnp.ndarray) -> jnp.ndarray:
+    """ranks -> AER stream: addresses in service order, padded with N."""
+    del count
+    n = ranks.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    target = jnp.where(ranks >= 0, ranks, n)  # inactive -> OOB, dropped
+    return jnp.full((n,), n, jnp.int32).at[target].set(idx, mode="drop")

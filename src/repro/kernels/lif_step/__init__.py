@@ -1,0 +1,1 @@
+"""lif_step kernel package."""

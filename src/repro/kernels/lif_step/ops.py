@@ -1,0 +1,24 @@
+"""Public ops for the LIF neuron update."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.lif_step import ref
+from repro.kernels.lif_step.kernel import lif_step_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("decay", "threshold", "v_reset",
+                                             "impl", "interpret"))
+def lif_step(v, current, *, decay: float, threshold: float,
+             v_reset: float = 0.0, impl: str = "xla",
+             interpret: bool = False):
+    if impl == "xla":
+        return ref.lif_step_ref(v, current, decay=decay, threshold=threshold,
+                                v_reset=v_reset)
+    if impl == "pallas":
+        return lif_step_pallas(v, current, decay=decay, threshold=threshold,
+                               v_reset=v_reset, interpret=interpret)
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the lif_step kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lif_step_ref(v: jnp.ndarray, current: jnp.ndarray, *, decay: float,
+                 threshold: float, v_reset: float = 0.0):
+    """One leaky-integrate-and-fire update.
+
+    v, current: (..., N) float32
+    returns (v_next, spikes {0,1} float32)
+    """
+    v_new = v * decay + current
+    spikes = (v_new >= threshold).astype(v.dtype)
+    v_next = jnp.where(spikes > 0, v_reset, v_new)
+    return v_next, spikes

@@ -1,0 +1,1 @@
+"""moe_dispatch kernel package."""

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: capacity-ordered MoE dispatch positions.
+
+The event-router analogue of HAT arbitration (DESIGN.md §2): an event
+stream of expert choices is "arbitrated" into per-expert queues.  The
+kernel computes, for every event, its arrival-order position within its
+expert - the quantity that decides capacity drops - plus per-expert loads,
+WITHOUT a sort (XLA MoE implementations pay an O(M log M) sort here).
+
+Structure = the HAT tree:
+  low level   - within-row scan: one-hot (C, bE) column-cumsum via a
+                triangular matmul on the MXU,
+  high level  - running per-expert totals carried across rows in a VMEM
+                scratch accumulator (Pallas TPU grids execute sequentially).
+
+Grid: (J, R) with J = expert tiles (major), R = event rows (minor).
+For each expert tile j, rows sweep 0..R-1 carrying the accumulator; the
+position output block (1, C) for row r is accumulated across the J sweeps
+(an event belongs to exactly one expert tile).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_ROW = 256
+DEFAULT_BLOCK_E = 128
+
+
+def _dispatch_kernel(ids_ref, pos_ref, load_ref, acc_ref):
+    j = pl.program_id(0)
+    r = pl.program_id(1)
+    nr = pl.num_programs(1)
+    c = ids_ref.shape[1]
+    be = acc_ref.shape[1]
+
+    @pl.when(r == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ids = ids_ref[...]                                   # (1, C) int32
+    first_expert = j * be
+    local = ids - first_expert                           # in-tile expert index
+    in_tile = (local >= 0) & (local < be)
+    eidx = jax.lax.broadcasted_iota(jnp.int32, (c, be), 1)
+    onehot = ((local.reshape(c, 1) == eidx) &
+              in_tile.reshape(c, 1)).astype(jnp.float32)  # (C, bE)
+
+    # low level: exclusive scan down the rows of onehot via strict-lower tri
+    ci = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    cj = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    strict_lower = (cj < ci).astype(jnp.float32)
+    before_in_row = jnp.dot(strict_lower, onehot,
+                            preferred_element_type=jnp.float32)  # (C, bE)
+    totals = jnp.sum(onehot, axis=0, keepdims=True)      # (1, bE)
+
+    # high level: add the running totals from previous rows
+    pos_full = before_in_row + acc_ref[...]              # (C, bE)
+    # gather each event's own expert column: sum(onehot * pos) over lanes
+    pos_row = jnp.sum(onehot * pos_full, axis=1).reshape(1, c)
+    contrib = jnp.where(in_tile, pos_row, 0.0)
+
+    @pl.when(j == 0)
+    def _():
+        pos_ref[...] = jnp.zeros_like(pos_ref)
+
+    pos_ref[...] += contrib.astype(jnp.int32)
+    acc_ref[...] += totals
+
+    @pl.when(r == nr - 1)
+    def _():
+        load_ref[...] = acc_ref[...].astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_experts", "row", "block_e",
+                                    "interpret"))
+def dispatch_positions_pallas(expert_ids: jnp.ndarray, *, num_experts: int,
+                              row: int = DEFAULT_ROW,
+                              block_e: int = DEFAULT_BLOCK_E,
+                              interpret: bool = False):
+    """(M,) int32 -> (pos (M,) int32, load (E,) int32)."""
+    m = expert_ids.shape[0]
+    if m % row:
+        raise ValueError(f"M={m} must be a multiple of row={row}")
+    # largest divisor of num_experts that fits the requested tile width
+    be = max(d for d in range(1, min(block_e, num_experts) + 1)
+             if num_experts % d == 0)
+    r = m // row
+    j = num_experts // be
+    ids2 = expert_ids.astype(jnp.int32).reshape(r, row)
+    pos2, load2 = pl.pallas_call(
+        _dispatch_kernel,
+        grid=(j, r),
+        in_specs=[pl.BlockSpec((1, row), lambda j_, r_: (r_, 0))],
+        out_specs=[
+            pl.BlockSpec((1, row), lambda j_, r_: (r_, 0)),
+            pl.BlockSpec((1, be), lambda j_, r_: (0, j_)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, row), jnp.int32),
+            jax.ShapeDtypeStruct((1, num_experts), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, be), jnp.float32)],
+        interpret=interpret,
+    )(ids2)
+    return pos2.reshape(m), load2.reshape(num_experts)

@@ -1,0 +1,27 @@
+"""Public ops for MoE dispatch positions."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_dispatch import ref
+from repro.kernels.moe_dispatch.kernel import dispatch_positions_pallas
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_experts", "impl", "row", "interpret"))
+def dispatch_positions(expert_ids, *, num_experts: int, impl: str = "xla",
+                       row: int = 256, interpret: bool = False):
+    """Arrival-order position within expert + per-expert load.
+
+    expert_ids: (M,) int32 -> (pos (M,) int32, load (E,) int32)
+    """
+    if impl == "xla":
+        return ref.dispatch_positions_ref(expert_ids, num_experts)
+    if impl == "pallas":
+        return dispatch_positions_pallas(expert_ids, num_experts=num_experts,
+                                         row=row, interpret=interpret)
+    raise ValueError(f"unknown impl {impl!r}")

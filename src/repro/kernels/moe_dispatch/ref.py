@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the moe_dispatch kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dispatch_positions_ref(expert_ids: jnp.ndarray, num_experts: int):
+    """Arrival-order position of each event within its expert.
+
+    expert_ids: (M,) int32 event stream in arbitration order.
+    returns: pos (M,) int32   - #earlier events with the same expert
+             load (E,) int32  - events per expert
+    """
+    onehot = (expert_ids[:, None] == jnp.arange(num_experts)[None, :]
+              ).astype(jnp.int32)                         # (M, E)
+    csum = jnp.cumsum(onehot, axis=0)
+    pos = jnp.take_along_axis(csum, expert_ids[:, None].astype(jnp.int32),
+                              axis=1)[:, 0] - 1
+    return pos.astype(jnp.int32), jnp.sum(onehot, axis=0).astype(jnp.int32)

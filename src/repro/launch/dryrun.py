@@ -1,0 +1,423 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any jax import: jax locks the device
+count on first initialization, and the production meshes need 512
+placeholder host devices.  (Smoke tests and benchmarks never import this
+module, so they see 1 device.)
+
+Per cell this script:
+  1. builds the production mesh (16x16 or 2x16x16),
+  2. constructs ShapeDtypeStruct stand-ins for params / optimizer state /
+     batch / caches with their production shardings (no allocation),
+  3. jit-lowers and COMPILES the cell's program (train_step /
+     prefill_step / decode_step),
+  4. records memory_analysis(), cost_analysis() and the collective-bytes
+     breakdown parsed from the post-SPMD HLO into
+     experiments/dryrun/<cell>.json (consumed by benchmarks/roofline.py
+     and EXPERIMENTS.md §Dry-run).
+
+Usage:
+  python -m repro.launch.dryrun --arch internlm2-1.8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+from repro.parallel import sharding as shd
+from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.train import step as ts
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../experiments/dryrun")
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _sds(tree, mesh, specs):
+    """Abstract tree -> ShapeDtypeStructs carrying NamedShardings."""
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        tree, specs)
+
+
+def _batch_shapes(cfg: ModelConfig, shape: configs.Shape):
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    if cfg.frontend.kind == "audio":
+        d = {"frames": jax.ShapeDtypeStruct((b, s, cfg.frontend.d_in),
+                                            jnp.float32),
+             "mask": jax.ShapeDtypeStruct((b, s), jnp.bool_)}
+        if shape.kind == "train":
+            d["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return d
+    d = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.frontend.kind == "vision":
+        d["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend.max_prefix, cfg.frontend.d_in), jnp.float32)
+    if shape.kind == "train":
+        d["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return d
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective bytes, parsed from the post-SPMD module.
+
+    Post-optimization HLO references operands by bare %names, so we read
+    the RESULT shapes on the left of the op (equal to operand bytes for
+    all-reduce / all-to-all / collective-permute; the gathered size for
+    all-gather, i.e. bytes received per device).  reduce-scatter results
+    are scaled by group size (bytes contributed per device).  NOTE: ops
+    inside `while` bodies (scanned layers) are counted ONCE - the dry-run
+    corrects this via the unrolled calibration variants (cost_calibrated).
+    """
+    totals: dict = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        left = line[:m.start()]
+        nbytes = 0
+        for dt, dims in SHAPE_RE.findall(left):
+            if dt not in DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * DTYPE_BYTES[dt]
+        if op == "reduce-scatter":
+            g = GROUPS_RE.search(line)
+            if g:
+                nbytes *= int(g.group(2))
+        totals[op] = totals.get(op, 0) + nbytes
+    totals["total"] = sum(v for k, v in totals.items() if k != "total")
+    return totals
+
+
+def _unrolled_variant(cfg: ModelConfig, k: int) -> ModelConfig:
+    """k repeats of the layer pattern, fully unrolled (no lax.scan)."""
+    import dataclasses as dc
+    g = cfg.scan_group
+    base = cfg.moe.first_k_dense if cfg.moe is not None else 0
+    n = base + k * max(g, 1)
+    return dc.replace(cfg, n_layers=n, scan_group=n)
+
+
+class _loop_free:
+    """Context: unroll every inner chunk scan (flash tiles / WKV chunks /
+    SSM chunks) so HLO cost analysis - which visits while bodies once -
+    sees the production algorithm as straight-line code.  Tile sizes are
+    unchanged, so the counted flops/bytes/collectives are the real ones."""
+
+    def __enter__(self):
+        from repro.models import calibrate
+        self._saved = calibrate.UNROLL
+        calibrate.UNROLL = True
+        return self
+
+    def __exit__(self, *exc):
+        from repro.models import calibrate
+        calibrate.UNROLL = self._saved
+        return False
+
+
+def calibrated_costs(arch: str, shape_name: str, cfg: ModelConfig, *,
+                     multi_pod: bool, opt_overrides=None, mesh_shape=None,
+                     train_kwargs=None) -> dict:
+    """Exact per-device costs via two unrolled, loop-free lowerings.
+
+    cost(L) is affine in the layer-pattern repeat count k; lowering k=1 and
+    k=2 pins both coefficients, then we extrapolate to the real depth.
+    Only LOWERED (never executed), so the loop-free variants' giant
+    attention temporaries are irrelevant.
+    """
+    import dataclasses as dc
+    g = max(cfg.scan_group, 1)
+    base = cfg.moe.first_k_dense if cfg.moe is not None else 0
+    reps_full = (cfg.n_layers - base) / g
+    out = {}
+    with _loop_free():
+        costs = []
+        for k in (1, 2):
+            vcfg = _unrolled_variant(cfg, k)
+            rec = _lower_one(vcfg, shape_name, multi_pod=multi_pod,
+                             opt_overrides=opt_overrides, compile_only=True,
+                             mesh_shape=mesh_shape, train_kwargs=train_kwargs)
+            costs.append(rec)
+    for key in ("flops", "bytes accessed"):
+        c1 = costs[0]["cost"].get(key, 0.0)
+        c2 = costs[1]["cost"].get(key, 0.0)
+        per_rep = c2 - c1
+        fixed = c1 - per_rep
+        out[key] = fixed + per_rep * reps_full
+    coll = {}
+    keys = set(costs[0]["collectives"]) | set(costs[1]["collectives"])
+    for key in keys:
+        c1 = costs[0]["collectives"].get(key, 0)
+        c2 = costs[1]["collectives"].get(key, 0)
+        per_rep = c2 - c1
+        coll[key] = c1 - per_rep + per_rep * reps_full
+    out["collectives"] = coll
+    out["calib_compile_s"] = [c["compile_s"] for c in costs]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# §Perf hillclimb variants: each maps to (config transform, train-step
+# kwargs, mesh shape override).  See EXPERIMENTS.md §Perf for the
+# hypothesis -> change -> before/after log.
+# ---------------------------------------------------------------------------
+
+def _v_serve_tp32(cfg):
+    import dataclasses as dc
+    moe = dc.replace(cfg.moe, quant_int8=True) if cfg.moe else None
+    return dc.replace(cfg, serve_tp_only=True, moe=moe)
+
+
+def _v_serve_tp32_bf16(cfg):
+    import dataclasses as dc
+    return dc.replace(cfg, serve_tp_only=True)
+
+
+def _v_rwkv48(cfg):
+    import dataclasses as dc
+    return dc.replace(cfg, rwkv_pad_heads=48)
+
+
+def _v_rwkv48_c64(cfg):
+    import dataclasses as dc
+    return dc.replace(cfg, rwkv_pad_heads=48,
+                      rwkv=dc.replace(cfg.rwkv, chunk=64))
+
+
+VARIANTS = {
+    "baseline": {},
+    # cell A: deepseek-v2-236b decode_32k (collective-bound)
+    "serve_tp32": {"cfg_fn": _v_serve_tp32, "mesh_shape": (8, 32)},
+    "serve_tp32_bf16": {"cfg_fn": _v_serve_tp32_bf16, "mesh_shape": (8, 32)},
+    # cell B: qwen3-32b train_4k (memory/collective-bound, temp > HBM)
+    "mb8": {"train_kwargs": {"microbatch": 8}},
+    "remat_dots": {"train_kwargs": {"remat_policy": "dots"}},
+    "mb8_dots": {"train_kwargs": {"microbatch": 8, "remat_policy": "dots"}},
+    # cell C: rwkv6-3b train_4k (memory-bound, WKV replicated over model)
+    "rwkv48": {"cfg_fn": _v_rwkv48},
+    "rwkv48_c64": {"cfg_fn": _v_rwkv48_c64},
+}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               opt_overrides: dict | None = None,
+               variant: str = "baseline", calibrate: bool = True,
+               cfg: ModelConfig | None = None):
+    spec = VARIANTS.get(variant, {})
+    cfg = cfg or configs.get_config(arch)
+    if "cfg_fn" in spec:
+        cfg = spec["cfg_fn"](cfg)
+    mesh_shape = spec.get("mesh_shape")
+    train_kwargs = spec.get("train_kwargs", {})
+    merged = {**configs.train_overrides(arch), **(opt_overrides or {})}
+    record = _lower_one(cfg, shape_name, multi_pod=multi_pod,
+                        opt_overrides=merged, mesh_shape=mesh_shape,
+                        train_kwargs=train_kwargs)
+    record["arch"] = arch
+    record["variant"] = variant
+    if calibrate:
+        record["cost_calibrated"] = calibrated_costs(
+            arch, shape_name, cfg, multi_pod=multi_pod, opt_overrides=merged,
+            mesh_shape=mesh_shape, train_kwargs=train_kwargs)
+    return record
+
+
+def _lower_one(cfg: ModelConfig, shape_name: str, *, multi_pod: bool,
+               opt_overrides: dict | None = None, compile_only: bool = False,
+               mesh_shape=None, train_kwargs: dict | None = None):
+    train_kwargs = train_kwargs or {}
+    shape = configs.SHAPES[shape_name]
+    arch = cfg.name
+    mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
+    ctx = shd.make_shard_ctx(mesh, cfg)
+    dp_total = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    opt_cfg = AdamWConfig(**(opt_overrides or {}))
+    record = {"arch": arch, "shape": shape_name,
+              "multi_pod": multi_pod, "mesh": dict(mesh.shape),
+              "kind": shape.kind, "seq_len": shape.seq_len,
+              "global_batch": shape.global_batch}
+
+    with jax.set_mesh(mesh):
+        # ---- abstract params (+ shardings) --------------------------------
+        p_abs = jax.eval_shape(lambda k: lm.init_model(k, cfg),
+                               jax.random.PRNGKey(0))
+        p_specs = shd.params_pspecs(p_abs, cfg, ctx)
+        p_sds = _sds(p_abs, mesh, p_specs)
+
+        batch_abs = _batch_shapes(cfg, shape)
+        bspec = ctx.batch_spec if shape.global_batch >= dp_total else None
+        b_specs = {k: shd.sanitize_spec(
+            P(bspec, *([None] * (v.ndim - 1))), v.shape, ctx)
+            for k, v in batch_abs.items()}
+        b_sds = _sds(batch_abs, mesh, b_specs)
+
+        t0 = time.time()
+        if shape.kind == "train":
+            opt_abs = jax.eval_shape(lambda p: adamw.init(opt_cfg, p), p_abs)
+            state_abs = ts.TrainState(
+                params=p_sds,
+                opt=type(opt_abs)(
+                    step=jax.ShapeDtypeStruct(
+                        (), jnp.int32, sharding=NamedSharding(mesh, P())),
+                    mu=_sds(opt_abs.mu, mesh, p_specs),
+                    nu=_sds(opt_abs.nu, mesh, p_specs)),
+                step=jax.ShapeDtypeStruct(
+                    (), jnp.int32, sharding=NamedSharding(mesh, P())))
+            fn = ts.make_train_step(cfg, opt_cfg, ctx=ctx, **train_kwargs)
+            lowered = jax.jit(fn).lower(state_abs, b_sds)
+        else:
+            cache_abs = jax.eval_shape(
+                lambda: lm.init_cache(cfg, shape.global_batch,
+                                      _cache_len(cfg, shape)))
+            c_specs = shd.cache_pspecs(cache_abs, cfg, ctx)
+            if bspec is None:  # batch too small for DP: replicate batch dims
+                c_specs = jax.tree.map(
+                    lambda s: P(None, None, *s[2:]), c_specs,
+                    is_leaf=lambda x: isinstance(x, P))
+                b_specs = {k: P(*([None] * v.ndim))
+                           for k, v in batch_abs.items()}
+                b_sds = _sds(batch_abs, mesh, b_specs)
+            c_sds = _sds(cache_abs, mesh, c_specs)
+            if shape.kind == "prefill":
+                fn = make_prefill_step(cfg, ctx=ctx)
+                lowered = jax.jit(fn).lower(p_sds, b_sds, c_sds)
+            else:
+                fn = make_decode_step(cfg, ctx=ctx)
+                clen = jax.ShapeDtypeStruct((), jnp.int32,
+                                            sharding=NamedSharding(mesh, P()))
+                lowered = jax.jit(fn).lower(p_sds, c_sds, b_sds["tokens"],
+                                            clen)
+        record["lower_s"] = round(time.time() - t0, 2)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t0, 2)
+
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        }
+        cost = compiled.cost_analysis()
+        record["cost"] = {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))and k in
+                          ("flops", "bytes accessed", "transcendentals")}
+        record["collectives"] = collective_bytes(compiled.as_text())
+    return record
+
+
+def _cache_len(cfg: ModelConfig, shape: configs.Shape) -> int:
+    extra = cfg.frontend.max_prefix if cfg.frontend.kind == "vision" else 0
+    return shape.seq_len + extra
+
+
+def run_cell(arch, shape_name, multi_pod, out_dir, skip_done=False,
+             variant="baseline", opt_overrides=None):
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{'multipod' if multi_pod else 'singlepod'}"
+    if variant != "baseline":
+        tag += f"__{variant}"
+    path = os.path.join(out_dir, tag + ".json")
+    if skip_done and os.path.exists(path):
+        print(f"[dryrun] skip (done): {tag}")
+        return True
+    ok, why = configs.cell_status(arch, shape_name)
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+               "status": "skipped", "reason": why, "variant": variant}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[dryrun] SKIP {tag}: {why}")
+        return True
+    print(f"[dryrun] lowering {tag} ...", flush=True)
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                         variant=variant, opt_overrides=opt_overrides)
+        rec["status"] = "ok"
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[dryrun] OK {tag}: compile={rec['compile_s']}s "
+              f"flops={rec['cost'].get('flops', 0):.3e} "
+              f"coll={rec['collectives'].get('total', 0):.3e}B", flush=True)
+        return True
+    except Exception as e:  # noqa: BLE001 - record the failure, keep going
+        rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[dryrun] FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--variant", default="baseline", choices=sorted(VARIANTS))
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in configs.ARCHS:
+            for shape in configs.SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            if not run_cell(arch, shape, mp, args.out,
+                            skip_done=args.skip_done, variant=args.variant):
+                failures += 1
+    print(f"[dryrun] done, failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

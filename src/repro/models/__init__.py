@@ -1,0 +1,1 @@
+"""Model zoo: unified LM builder + family-specific layers + multicore SNN."""

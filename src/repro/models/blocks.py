@@ -1,0 +1,741 @@
+"""Shared transformer building blocks, pure-functional JAX.
+
+Conventions
+-----------
+* params are nested dicts of jnp arrays; `init_*` builds them, `*_apply`
+  consumes them.  Layer stacks are scanned, so init functions are vmapped
+  over a key axis by the model builder.
+* activations flow as (B, T, d_model); attention internals use
+  (B, T, KH, rep, Dh) so GQA is explicit and head-TP shards KH*rep.
+* attention is flash-style chunked (two-level online-softmax scan) in pure
+  jnp - O(chunk^2) working set, exact.  Local (sliding-window) layers use
+  a banded variant that only touches the in-window KV chunks, keeping the
+  compiled FLOPs O(T * window) - this is what the roofline sees.
+* all matmuls run in `compute_dtype` (bf16 by default) with f32
+  accumulation via preferred_element_type.
+
+Distribution: blocks are sharding-agnostic except for an optional
+`ShardCtx` enabling shard_map paths (sequence-parallel attention, EP MoE,
+sequence-sharded decode).  With ctx=None everything is local - smoke tests
+run the identical code on one CPU device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import event_router
+from repro.models import calibrate
+from repro.models.config import ModelConfig
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Names of mesh axes; None disables shard_map paths (single device)."""
+    data_axes: tuple = ("data",)     # batch axes ("pod","data") when multi-pod
+    model_axis: str = "model"
+    model_size: int = 1
+    enabled: bool = False
+    axis_sizes: tuple = ()           # ((axis, size), ...) for spec sanitizing
+
+    @property
+    def batch_spec(self):
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+
+LOCAL = ShardCtx(enabled=False)
+
+
+def _bspec_for(ctx: ShardCtx, batch: int):
+    """Batch spec, or None (replicate) when batch doesn't divide the DP
+    extent (e.g. long_500k's single sequence)."""
+    dp = 1
+    for a, sz in ctx.axis_sizes:
+        if a in ctx.data_axes:
+            dp *= sz
+    return ctx.batch_spec if batch % max(dp, 1) == 0 else None
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope / activations
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, cfg: ModelConfig) -> Params:
+    return {"scale": jnp.zeros((d,), _pdtype(cfg))}
+
+
+def rms_norm(x, p, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu2": lambda x: jnp.square(jax.nn.relu(x))}[name]
+
+
+def rope_tables(positions, dim: int, theta: float):
+    """positions (...,) int -> cos/sin (..., dim/2) f32."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (B, T, ..., D); cos/sin (B|1, T, D/2) broadcast over middle dims."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    extra = x.ndim - cos.ndim              # head-ish dims between T and D
+    shape = cos.shape[:-1] + (1,) * extra + cos.shape[-1:]
+    c = cos.reshape(shape).astype(x.dtype)
+    s = sin.reshape(shape).astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash-style chunked attention (exact, pure jnp)
+# ---------------------------------------------------------------------------
+
+
+def _attn_chunk(q, k, v, q_pos, k_pos, causal, window, scale, kv_len=None):
+    """One (q-chunk x kv-chunk) tile -> (scores-applied partials).
+
+    q: (B, Cq, KH, R, D); k/v: (B, Ck, KH, D).  Returns (m, l, acc) partials
+    in f32: m (B,KH,R,Cq), l (B,KH,R,Cq), acc (B,Cq,KH,R,Dv).
+    """
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if kv_len is not None:
+        mask &= k_pos[None, :] < kv_len       # padded KV tail
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)                                   # (B,KH,R,Cq)
+    # guard fully-masked rows
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhrqk,bkhd->bqhrd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return m_safe, l, acc
+
+
+def _merge(carry, new):
+    m0, l0, a0 = carry
+    m1, l1, a1 = new
+    m = jnp.maximum(m0, m1)
+    e0 = jnp.exp(m0 - m)
+    e1 = jnp.exp(m1 - m)
+    l = l0 * e0 + l1 * e1
+    a = a0 * _blh(e0) + a1 * _blh(e1)
+    return m, l, a
+
+
+def _blh(x):
+    """(B,KH,R,Cq) -> (B,Cq,KH,R,1) broadcast helper."""
+    return jnp.transpose(x, (0, 3, 1, 2))[..., None]
+
+
+# Default flash chunk sizes.  The dry-run calibration pass sets these to a
+# huge value so attention lowers loop-free (exact HLO cost analysis); the
+# production path keeps 1024-token tiles (VMEM-sized working set).
+DEFAULT_Q_CHUNK = 1024
+DEFAULT_KV_CHUNK = 1024
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    q_chunk=None, kv_chunk=None):
+    """Exact chunked attention.
+
+    q: (B, Tq, KH, R, D); k, v: (B, Tk, KH, D) -> (B, Tq, KH, R, Dv).
+    `q_offset`: absolute position of q[0] (prefill continuation / decode).
+    """
+    q_chunk = q_chunk or DEFAULT_Q_CHUNK
+    kv_chunk = kv_chunk or DEFAULT_KV_CHUNK
+    b, tq, kh, r, d = q.shape
+    tk = k.shape[1]
+    tq_orig, tk_orig = tq, tk
+    scale = 1.0 / math.sqrt(d)
+    q_chunk = min(q_chunk, tq)
+    kv_chunk = min(kv_chunk, tk)
+    if tq % q_chunk:  # pad to chunk multiples (vision prefixes etc.)
+        pad = q_chunk - tq % q_chunk
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        tq += pad
+    if tk % kv_chunk:
+        pad = kv_chunk - tk % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        tk += pad
+    nq = tq // q_chunk
+    nk = tk // kv_chunk
+
+    # initial carries must inherit the inputs' varying-axes tags so the
+    # scan typechecks inside shard_map (sequence-parallel attention path)
+    veil = (q.reshape(-1)[0] * 0 + k.reshape(-1)[0] * 0).astype(jnp.float32)
+
+    def one_q_chunk(i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, axis=1)
+        q_pos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, j):
+            kj = jax.lax.dynamic_slice_in_dim(k, j * kv_chunk, kv_chunk, axis=1)
+            vj = jax.lax.dynamic_slice_in_dim(v, j * kv_chunk, kv_chunk, axis=1)
+            k_pos = j * kv_chunk + jnp.arange(kv_chunk)
+            new = _attn_chunk(qi, kj, vj, q_pos, k_pos, causal, window, scale,
+                              kv_len=tk_orig)
+            return _merge(carry, new), None
+
+        m0 = jnp.full((b, kh, r, q_chunk), -jnp.inf, jnp.float32) + veil
+        l0 = jnp.zeros((b, kh, r, q_chunk), jnp.float32) + veil
+        a0 = jnp.zeros((b, q_chunk, kh, r, v.shape[-1]), jnp.float32) + veil
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk),
+                                      unroll=calibrate.UNROLL)
+        out = acc / jnp.maximum(_blh(l)[..., 0], 1e-30)[..., None]
+        return out.astype(q.dtype), None
+
+    _, (outs, _) = jax.lax.scan(lambda c, i: (c, one_q_chunk(i)),
+                                None, jnp.arange(nq),
+                                unroll=calibrate.UNROLL)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, tq, kh, r, v.shape[-1])
+    return out[:, :tq_orig]
+
+
+def banded_attention(q, k, v, *, window: int, causal=True):
+    """Sliding-window attention touching only in-window KV: O(T*window).
+
+    Chunks q by `window`; chunk i attends to kv chunks {i-1, i} only.
+    q: (B, T, KH, R, D); k, v: (B, T, KH, D).
+    """
+    b, t, kh, r, d = q.shape
+    w = window
+    t_orig = t
+    if t % w:  # pad to a window multiple; causal mask hides the padding
+        pad = w - t % w
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        t = t + pad
+    nc = t // w
+    scale = 1.0 / math.sqrt(d)
+    kc = k.reshape(b, nc, w, kh, d)
+    vc = v.reshape(b, nc, w, kh, v.shape[-1])
+    # previous chunk (zeros before chunk 0)
+    kp = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    vp = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    kwin = jnp.concatenate([kp, kc], axis=2)              # (B, nc, 2w, KH, D)
+    vwin = jnp.concatenate([vp, vc], axis=2)
+    qc = q.reshape(b, nc, w, kh, r, d)
+    s = jnp.einsum("bnqhrd,bnkhd->bnhrqk", qc, kwin,
+                   preferred_element_type=jnp.float32) * scale
+    q_pos = jnp.arange(w)[:, None] + w                    # within 2w frame
+    k_pos = jnp.arange(2 * w)[None, :]
+    mask = (k_pos <= q_pos) if causal else jnp.ones((w, 2 * w), bool)
+    mask &= k_pos > q_pos - w
+    first = jnp.arange(2 * w)[None, :] >= w               # chunk 0: no prev
+    mask_first = mask & first
+    full_mask = jnp.where(jnp.arange(nc)[:, None, None] == 0,
+                          mask_first[None], mask[None])
+    s = jnp.where(full_mask[None, :, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bnhrqk,bnkhd->bnqhrd", p.astype(vwin.dtype), vwin,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, t, kh, r, v.shape[-1]).astype(q.dtype)
+    return o[:, :t_orig]
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                     ctx: ShardCtx = LOCAL):
+    """Single-token attention against a KV cache, optionally seq-sharded.
+
+    q: (B, 1, KH, R, D); caches (B, S, KH, D) - S is the *local* shard
+    length when ctx.enabled (cache sharded over model axis along S).
+    cache_len: () int32 - global number of valid cache positions.
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+
+    def local(q_, k_, v_, shard_idx):
+        s_loc = k_.shape[1]
+        pos = shard_idx * s_loc + jnp.arange(s_loc)
+        valid = pos < cache_len
+        if window:
+            valid &= pos >= cache_len - window
+        s = jnp.einsum("bqhrd,bkhd->bhrqk", q_, k_,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+        m = jnp.max(s, axis=-1)
+        m_safe = jnp.where(jnp.isfinite(m), m, -1e30)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(valid[None, None, None, None, :], p, 0.0)
+        l = jnp.sum(p, axis=-1)
+        acc = jnp.einsum("bhrqk,bkhd->bqhrd", p.astype(v_.dtype), v_,
+                         preferred_element_type=jnp.float32)
+        return m_safe, l, acc
+
+    if not ctx.enabled:
+        m, l, acc = local(q, k_cache, v_cache, jnp.int32(0))
+        out = acc / jnp.maximum(_blh(l)[..., 0], 1e-30)[..., None]
+        return out.astype(q.dtype)
+
+    def sharded(q_, k_, v_):
+        idx = jax.lax.axis_index(ctx.model_axis)
+        m, l, acc = local(q_, k_, v_, idx)
+        # distributed LSE combine across sequence shards
+        m_g = jax.lax.pmax(m, ctx.model_axis)
+        w = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * w, ctx.model_axis)
+        acc_g = jax.lax.psum(acc * _blh(w), ctx.model_axis)
+        out = acc_g / jnp.maximum(_blh(l_g)[..., 0], 1e-30)[..., None]
+        return out.astype(q_.dtype)
+
+    bspec = _bspec_for(ctx, q.shape[0])
+    return jax.shard_map(
+        sharded,
+        in_specs=(P(bspec, None, None, None, None),
+                  P(bspec, ctx.model_axis, None, None),
+                  P(bspec, ctx.model_axis, None, None)),
+        out_specs=P(bspec, None, None, None, None),
+    )(q, k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 6)
+    d, h, kh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pdt = _pdtype(cfg)
+    p = {
+        "wq": _dense_init(keys[0], (d, h * dh), pdt),
+        "wk": _dense_init(keys[1], (d, kh * dh), pdt),
+        "wv": _dense_init(keys[2], (d, kh * dh), pdt),
+        "wo": _dense_init(keys[3], (h * dh, d), pdt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh, cfg)
+        p["k_norm"] = init_rmsnorm(dh, cfg)
+    return p
+
+
+def attention_apply(p, x, cfg: ModelConfig, *, is_local: bool,
+                    positions=None, cache=None, cache_len=None,
+                    ctx: ShardCtx = LOCAL, causal=True):
+    """x (B, T, d) -> (B, T, d).  cache: dict(k, v) updated functionally."""
+    b, t, _ = x.shape
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    rep = h // kh
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(b, t, kh, rep, dh)
+    k = (x @ p["wk"].astype(dt)).reshape(b, t, kh, dh)
+    v = (x @ p["wv"].astype(dt)).reshape(b, t, kh, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if positions is None:
+        positions = jnp.arange(t)[None, :]
+    theta = cfg.rope_theta_local if (is_local and cfg.rope_theta_local) \
+        else cfg.rope_theta
+    cos, sin = rope_tables(positions, dh, theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    window = cfg.sliding_window if is_local else 0
+    new_cache = None
+    if cache is not None and cache_len is not None:
+        # decode: append k/v at cache_len, attend over the cache
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache_len, axis=1) \
+            if not ctx.enabled else _sharded_cache_update(
+                cache["k"], k, cache_len, ctx)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache_len, axis=1) \
+            if not ctx.enabled else _sharded_cache_update(
+                cache["v"], v, cache_len, ctx)
+        new_cache = {"k": k_cache, "v": v_cache}
+        o = decode_attention(q, k_cache, v_cache, cache_len + t,
+                             window=window, ctx=ctx)
+    elif cache is not None:
+        # prefill: fill the cache, run full attention
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+        new_cache = {"k": k_cache, "v": v_cache}
+        o = _prefill_attention(q, k, v, cfg, window, causal, ctx)
+    else:
+        o = _prefill_attention(q, k, v, cfg, window, causal, ctx)
+
+    o = o.reshape(b, t, h * dh)
+    out = o @ p["wo"].astype(dt)
+    return (out, new_cache) if cache is not None else (out, None)
+
+
+def _sharded_cache_update(cache, kv, cache_len, ctx: ShardCtx):
+    """Write one token into a sequence-sharded cache at global cache_len."""
+    def upd(c, kv_, ln):
+        s_loc = c.shape[1]
+        idx = jax.lax.axis_index(ctx.model_axis)
+        local_pos = ln[0] - idx * s_loc
+        in_range = (local_pos >= 0) & (local_pos < s_loc)
+        pos = jnp.clip(local_pos, 0, s_loc - 1)
+        cur = jax.lax.dynamic_slice_in_dim(c, pos, kv_.shape[1], axis=1)
+        newv = jnp.where(in_range, kv_.astype(c.dtype), cur)
+        return jax.lax.dynamic_update_slice_in_dim(c, newv, pos, axis=1)
+
+    bspec = _bspec_for(ctx, cache.shape[0])
+    return jax.shard_map(
+        upd,
+        in_specs=(P(bspec, ctx.model_axis, None, None),
+                  P(bspec, None, None, None), P(None)),
+        out_specs=P(bspec, ctx.model_axis, None, None),
+    )(cache, kv, cache_len.reshape(1))
+
+
+def _prefill_attention(q, k, v, cfg: ModelConfig, window, causal,
+                       ctx: ShardCtx):
+    if ctx.enabled and cfg.attn_shard == "heads":
+        # head-TP: fold GQA reps into flat heads and shard H over `model`;
+        # kv is computed replicated (kv_heads rarely divide the axis) and
+        # the repeat materializes only the local H/model slice per shard.
+        b, t, kh, rep, d = q.shape
+        h = kh * rep
+        qf = q.reshape(b, t, h, 1, d)
+        kf = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+        vf = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+        bspec = ctx.batch_spec
+        qf = jax.lax.with_sharding_constraint(
+            qf, P(bspec, None, ctx.model_axis, None, None))
+        kf = jax.lax.with_sharding_constraint(
+            kf, P(bspec, None, ctx.model_axis, None))
+        vf = jax.lax.with_sharding_constraint(
+            vf, P(bspec, None, ctx.model_axis, None))
+        if window:
+            o = banded_attention(qf, kf, vf, window=window, causal=causal)
+        else:
+            o = flash_attention(qf, kf, vf, causal=causal)
+        return o.reshape(b, t, kh, rep, o.shape[-1])
+    if window:
+        return banded_attention(q, k, v, window=window, causal=causal)
+    if ctx.enabled and cfg.attn_shard == "sequence":
+        # sequence-parallel attention: q sharded over T, KV all-gathered
+        def sp(q_, k_, v_):
+            idx = jax.lax.axis_index(ctx.model_axis)
+            t_loc = q_.shape[1]
+            kg = jax.lax.all_gather(k_, ctx.model_axis, axis=1, tiled=True)
+            vg = jax.lax.all_gather(v_, ctx.model_axis, axis=1, tiled=True)
+            return flash_attention(q_, kg, vg, causal=causal,
+                                   q_offset=idx * t_loc)
+        bspec = _bspec_for(ctx, q.shape[0])
+        return jax.shard_map(
+            sp,
+            in_specs=(P(bspec, ctx.model_axis, None, None, None),
+                      P(bspec, ctx.model_axis, None, None),
+                      P(bspec, ctx.model_axis, None, None)),
+            out_specs=P(bspec, ctx.model_axis, None, None, None),
+        )(q, k, v)
+    return flash_attention(q, k, v, causal=causal)
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2), with absorbed decode path
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig) -> Params:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    keys = jax.random.split(key, 8)
+    pdt = _pdtype(cfg)
+    p = {}
+    if m.q_lora:
+        p["wq_a"] = _dense_init(keys[0], (d, m.q_lora), pdt)
+        p["q_norm"] = init_rmsnorm(m.q_lora, cfg)
+        p["wq_b"] = _dense_init(keys[1], (m.q_lora, h * qk), pdt)
+    else:
+        p["wq"] = _dense_init(keys[0], (d, h * qk), pdt)
+    p["wkv_a"] = _dense_init(keys[2], (d, m.kv_lora + m.qk_rope_dim), pdt)
+    p["kv_norm"] = init_rmsnorm(m.kv_lora, cfg)
+    p["wk_b"] = _dense_init(keys[3], (m.kv_lora, h * m.qk_nope_dim), pdt)
+    p["wv_b"] = _dense_init(keys[4], (m.kv_lora, h * m.v_head_dim), pdt)
+    p["wo"] = _dense_init(keys[5], (h * m.v_head_dim, d), pdt)
+    return p
+
+
+def mla_apply(p, x, cfg: ModelConfig, *, positions=None, cache=None,
+              cache_len=None, ctx: ShardCtx = LOCAL):
+    """MLA attention.  Cache stores the latent (c_kv, k_rope) only."""
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    dt = x.dtype
+    if m.q_lora:
+        q = rms_norm(x @ p["wq_a"].astype(dt), p["q_norm"], cfg.norm_eps)
+        q = q @ p["wq_b"].astype(dt)
+    else:
+        q = x @ p["wq"].astype(dt)
+    q = q.reshape(b, t, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+
+    kv_a = x @ p["wkv_a"].astype(dt)
+    c_kv = rms_norm(kv_a[..., :m.kv_lora], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., m.kv_lora:]                       # (B, T, rope_dim)
+
+    if positions is None:
+        positions = jnp.arange(t)[None, :]
+    cos, sin = rope_tables(positions, m.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    new_cache = None
+    if cache is not None and cache_len is not None:
+        # --- absorbed decode: score in latent space ------------------------
+        ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], c_kv.astype(cache["ckv"].dtype), cache_len, axis=1)
+        kr_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], k_rope.astype(cache["kr"].dtype), cache_len, axis=1)
+        new_cache = {"ckv": ckv_cache, "kr": kr_cache}
+        # absorb wk_b into q: q_eff (B,T,H,kv_lora)
+        wk_b = p["wk_b"].astype(dt).reshape(m.kv_lora, h, m.qk_nope_dim)
+        q_eff = jnp.einsum("bthd,lhd->bthl", q_nope, wk_b)
+        scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+        o_lat = _mla_decode(q_eff, q_rope, ckv_cache, kr_cache,
+                            cache_len + t, scale, ctx)    # (B,T,H,kv_lora)
+        wv_b = p["wv_b"].astype(dt).reshape(m.kv_lora, h, m.v_head_dim)
+        o = jnp.einsum("bthl,lhd->bthd", o_lat, wv_b)
+    else:
+        # --- train/prefill: materialize per-head k, v ----------------------
+        k_nope = (c_kv @ p["wk_b"].astype(dt)).reshape(b, t, h, m.qk_nope_dim)
+        val = (c_kv @ p["wv_b"].astype(dt)).reshape(b, t, h, m.v_head_dim)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, t, h, m.qk_rope_dim))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # GQA layout with KH=H, rep=1
+        o = flash_attention(q_full[:, :, :, None, :], k_full, val, causal=True)
+        o = o.reshape(b, t, h, m.v_head_dim)
+        if cache is not None:
+            ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], c_kv.astype(cache["ckv"].dtype), 0, axis=1)
+            kr_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["kr"], k_rope.astype(cache["kr"].dtype), 0, axis=1)
+            new_cache = {"ckv": ckv_cache, "kr": kr_cache}
+
+    out = o.reshape(b, t, h * m.v_head_dim) @ p["wo"].astype(dt)
+    return (out, new_cache) if cache is not None else (out, None)
+
+
+def _mla_decode(q_eff, q_rope, ckv, kr, cache_len, scale, ctx: ShardCtx):
+    """Latent-space decode attention; caches may be seq-sharded."""
+
+    def local(q_eff_, q_rope_, ckv_, kr_, shard_idx):
+        s_loc = ckv_.shape[1]
+        pos = shard_idx * s_loc + jnp.arange(s_loc)
+        valid = pos < cache_len
+        s = (jnp.einsum("bthl,bsl->bhts", q_eff_, ckv_,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bthr,bsr->bhts", q_rope_, kr_,
+                          preferred_element_type=jnp.float32)) * scale
+        s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+        msk = jnp.max(s, axis=-1)
+        m_safe = jnp.where(jnp.isfinite(msk), msk, -1e30)
+        pr = jnp.exp(s - m_safe[..., None])
+        pr = jnp.where(valid[None, None, None, :], pr, 0.0)
+        l = jnp.sum(pr, axis=-1)
+        acc = jnp.einsum("bhts,bsl->bthl", pr.astype(ckv_.dtype), ckv_,
+                         preferred_element_type=jnp.float32)
+        return m_safe, l, acc
+
+    if not ctx.enabled:
+        m, l, acc = local(q_eff, q_rope, ckv, kr, jnp.int32(0))
+        lt = jnp.transpose(l, (0, 2, 1))[..., None]
+        return (acc / jnp.maximum(lt, 1e-30)).astype(q_eff.dtype)
+
+    def sharded(q_eff_, q_rope_, ckv_, kr_):
+        idx = jax.lax.axis_index(ctx.model_axis)
+        m, l, acc = local(q_eff_, q_rope_, ckv_, kr_, idx)
+        m_g = jax.lax.pmax(m, ctx.model_axis)
+        w = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * w, ctx.model_axis)
+        wt = jnp.transpose(w, (0, 2, 1))[..., None]
+        acc_g = jax.lax.psum(acc * wt, ctx.model_axis)
+        lt = jnp.transpose(l_g, (0, 2, 1))[..., None]
+        return (acc_g / jnp.maximum(lt, 1e-30)).astype(q_eff_.dtype)
+
+    bspec = _bspec_for(ctx, q_eff.shape[0])
+    return jax.shard_map(
+        sharded,
+        in_specs=(P(bspec, None, None, None), P(bspec, None, None, None),
+                  P(bspec, ctx.model_axis, None),
+                  P(bspec, ctx.model_axis, None)),
+        out_specs=P(bspec, None, None, None),
+    )(q_eff, q_rope, ckv, kr)
+
+
+# ---------------------------------------------------------------------------
+# MLPs and MoE
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, d_ff: int, cfg: ModelConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    pdt = _pdtype(cfg)
+    return {"w_gate": _dense_init(k1, (d, d_ff), pdt),
+            "w_up": _dense_init(k2, (d, d_ff), pdt),
+            "w_down": _dense_init(k3, (d_ff, d), pdt)}
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    g = act_fn(cfg.act)(x @ p["w_gate"].astype(dt))
+    u = x @ p["w_up"].astype(dt)
+    return (g * u) @ p["w_down"].astype(dt)
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    mo = cfg.moe
+    d = cfg.d_model
+    keys = jax.random.split(key, 5)
+    pdt = _pdtype(cfg)
+    e = mo.num_experts
+    p = {"router": _dense_init(keys[0], (d, e), pdt, scale=0.02)}
+    for name, k_, shape in (("w_gate", keys[1], (e, d, mo.d_expert)),
+                            ("w_up", keys[2], (e, d, mo.d_expert)),
+                            ("w_down", keys[3], (e, mo.d_expert, d))):
+        w = _dense_init(k_, shape, jnp.float32)
+        if mo.quant_int8:
+            # weight-only int8 with per-(expert, out-channel) scales
+            scale = jnp.max(jnp.abs(w), axis=1, keepdims=True) / 127.0
+            p[name] = jnp.clip(jnp.round(w / jnp.maximum(scale, 1e-12)),
+                               -127, 127).astype(jnp.int8)
+            p[name + "_scale"] = scale.astype(jnp.float32)
+        else:
+            p[name] = w.astype(pdt)
+    if mo.num_shared:
+        p["shared"] = init_mlp(keys[4], d, mo.d_expert * mo.num_shared, cfg)
+    return p
+
+
+def _moe_weight(p, name, dt):
+    if name + "_scale" in p:
+        return (p[name].astype(dt)
+                * p[name + "_scale"].astype(dt))   # dequant on the fly
+    return p[name].astype(dt)
+
+
+def _expert_ffn(xe, wg, wu, wd, act):
+    """(E, C, d) through per-expert SwiGLU FFNs."""
+    dt = xe.dtype
+    g = act(jnp.einsum("ecd,edf->ecf", xe, wg,
+                       preferred_element_type=jnp.float32).astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", xe, wu,
+                   preferred_element_type=jnp.float32).astype(dt)
+    return jnp.einsum("ecf,efd->ecd", g * u, wd,
+                      preferred_element_type=jnp.float32).astype(dt)
+
+
+def moe_apply(p, x, cfg: ModelConfig, ctx: ShardCtx = LOCAL):
+    """Event-routed MoE layer.  Returns (y, aux_metrics).
+
+    Distributed path: the whole layer runs under shard_map - tokens stay on
+    their data shard (routing is per-shard, the AER semantics: each core
+    arbitrates its own events), experts are EP-sharded over the model axis,
+    and expert outputs combine with one psum (same volume as a TP FFN).
+    """
+    mo = cfg.moe
+    b, t, d = x.shape
+    dt = x.dtype
+    act = act_fn(cfg.act)
+
+    def local_moe(xf, router_w, ws, shard_idx, e_loc):
+        tokens = xf.shape[0]
+        capacity = max(8, int(mo.capacity_factor * mo.top_k * tokens
+                              / mo.num_experts))
+        logits = xf @ router_w
+        route = event_router.hat_route(logits, mo.top_k, capacity,
+                                       num_experts=mo.num_experts)
+        first = shard_idx * e_loc
+        # local slice of the (global) buffer: experts [first, first+e_loc)
+        buf = jax.lax.dynamic_slice_in_dim(route.buffer_rows, first, e_loc, 0)
+        safe = jnp.maximum(buf, 0)
+        xe = jnp.where((buf >= 0)[..., None], xf[safe], 0.0)
+        # dequantize (if int8) AFTER any resharding so wires carry int8
+        wg = _moe_weight(ws, "w_gate", dt)
+        wu = _moe_weight(ws, "w_up", dt)
+        wd = _moe_weight(ws, "w_down", dt)
+        ye = _expert_ffn(xe, wg, wu, wd, act)             # (E_loc, C, d)
+        mine = ((route.expert_ids >= first)
+                & (route.expert_ids < first + e_loc) & route.kept)
+        ev = ye[jnp.clip(route.expert_ids - first, 0, e_loc - 1),
+                jnp.maximum(route.event_slot, 0)]         # (T, k, d)
+        wgt = (route.weights * mine.astype(route.weights.dtype)).astype(ev.dtype)
+        y = jnp.einsum("tkd,tk->td", ev, wgt)
+        return y, route.aux_loss, route.z_loss
+
+    xf = x.reshape(b * t, d)
+    ws = {k_: v_ for k_, v_ in p.items()
+          if k_.startswith(("w_gate", "w_up", "w_down"))}
+    if ctx.enabled:
+        e_loc = mo.num_experts // ctx.model_size
+        # tokens shard over data axes only when they divide; tiny decode
+        # batches (long_500k: 1 token) replicate instead
+        bspec = _bspec_for(ctx, b * t)
+
+        def body(xf_, router_w, ws_):
+            idx = jax.lax.axis_index(ctx.model_axis)
+            y, aux, z = local_moe(xf_, router_w, ws_, idx, e_loc)
+            y = jax.lax.psum(y, ctx.model_axis)
+            # aux losses: identical on every model shard; mean over data
+            if bspec is not None:
+                aux = jax.lax.pmean(aux, ctx.data_axes)
+                z = jax.lax.pmean(z, ctx.data_axes)
+            return y, aux, z
+
+        w_specs = {k_: P(ctx.model_axis, *([None] * (v_.ndim - 1)))
+                   for k_, v_ in ws.items()}
+        y, aux_l, z_l = jax.shard_map(
+            body,
+            in_specs=(P(bspec, None), P(None, None), w_specs),
+            out_specs=(P(bspec, None), P(), P()),
+        )(xf, p["router"].astype(dt), ws)
+    else:
+        y, aux_l, z_l = local_moe(xf, p["router"].astype(dt), ws,
+                                  jnp.int32(0), mo.num_experts)
+
+    if mo.num_shared:
+        y = y + mlp_apply(p["shared"], xf, cfg)
+    aux = {"moe_aux": aux_l * mo.aux_loss_weight,
+           "moe_z": z_l * mo.z_loss_weight}
+    return y.reshape(b, t, d), aux

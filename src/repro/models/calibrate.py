@@ -1,0 +1,14 @@
+"""Calibration switch: unroll inner scans so HLO cost analysis is exact.
+
+HloCostAnalysis visits `while` bodies once.  During the dry-run's cost
+calibration we lower with UNROLL=True: every chunked inner loop (flash
+attention tiles, WKV chunks, SSM chunks) runs the SAME algorithm with the
+SAME tile sizes, but as straight-line HLO - so flops / bytes / collective
+counts are exact.  Production lowering keeps rolled loops (small HLO).
+"""
+
+UNROLL = False
+
+
+def unroll_flag() -> bool:
+    return UNROLL

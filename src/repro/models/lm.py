@@ -1,0 +1,315 @@
+"""Unified language model: builds any assigned architecture from ModelConfig.
+
+Structure: embed/frontend -> scanned homogeneous layer groups -> final norm
+-> lm head.  Per-layer kinds (attn / mamba / rwkv), MoE-vs-dense MLP,
+local-vs-global attention and sandwich norms all resolve statically from
+the config's layer pattern, so each scan group has a fixed body.
+
+Layer parameters are stacked over the group's repeat count and scanned
+with lax.scan (+ optional jax.checkpoint), keeping compile time and HLO
+size independent of depth.  KV/SSM caches mirror the same stacking.
+
+Modes:
+  train   - causal (or bidirectional for encoders), no cache, logits
+  prefill - causal forward that also fills the decode cache
+  decode  - single-token step against the cache (cache_len scalar)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import blocks, mamba, rwkv6
+from repro.models.blocks import LOCAL, ShardCtx
+from repro.models.config import ModelConfig
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig, idx: int) -> Params:
+    kind = cfg.layer_kind(idx)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {"ln1": blocks.init_rmsnorm(cfg.d_model, cfg)}
+    if kind == "attn":
+        p["mix"] = (blocks.init_mla(k1, cfg) if cfg.mla is not None
+                    else blocks.init_attention(k1, cfg))
+    elif kind == "mamba":
+        p["mix"] = mamba.init_mamba(k1, cfg)
+    else:  # rwkv
+        p["mix"] = rwkv6.init_time_mix(k1, cfg)
+    p["ln2"] = blocks.init_rmsnorm(cfg.d_model, cfg)
+    if kind == "rwkv":
+        p["ffn"] = rwkv6.init_channel_mix(k2, cfg)
+    elif cfg.layer_is_moe(idx):
+        p["ffn"] = blocks.init_moe(k2, cfg)
+    else:
+        d_ff = cfg.d_ff
+        if cfg.moe is not None and idx < cfg.moe.first_k_dense:
+            d_ff = cfg.moe.d_ff_dense or cfg.d_ff
+        p["ffn"] = blocks.init_mlp(k3, cfg.d_model, d_ff, cfg)
+    if cfg.post_norms:
+        p["post_ln1"] = blocks.init_rmsnorm(cfg.d_model, cfg)
+        p["post_ln2"] = blocks.init_rmsnorm(cfg.d_model, cfg)
+    return p
+
+
+def init_model(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 8)
+    pdt = jnp.dtype(cfg.param_dtype)
+    p: Params = {}
+    if cfg.frontend.kind == "none":
+        p["embed"] = (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model))
+                      * 0.02).astype(pdt)
+    else:
+        p["embed"] = (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model))
+                      * 0.02).astype(pdt)
+        p["frontend_proj"] = blocks._dense_init(
+            keys[1], (cfg.frontend.d_in, cfg.d_model), pdt)
+        if cfg.frontend.kind == "audio":
+            p["mask_embed"] = (jax.random.normal(keys[2], (cfg.d_model,))
+                               * 0.02).astype(pdt)
+    # scanned layer groups: params stacked over repeats of each group body
+    p["groups"] = []
+    for start, length in cfg.scan_groups():
+        g = cfg.scan_group
+        n_rep = length // g
+        body = []
+        for pos in range(g):
+            layer_keys = jnp.stack([
+                jax.random.fold_in(keys[3], start + r * g + pos)
+                for r in range(n_rep)])
+            stacked = jax.vmap(
+                lambda k, i=start + pos: _init_layer(k, cfg, i))(layer_keys)
+            body.append(stacked)
+        p["groups"].append(body)
+    p["final_norm"] = blocks.init_rmsnorm(cfg.d_model, cfg)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = blocks._dense_init(keys[4], (cfg.d_model, cfg.vocab),
+                                          pdt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache_shape(cfg: ModelConfig, idx: int, b: int, s: int):
+    kind = cfg.layer_kind(idx)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if kind == "attn":
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {"ckv": jnp.zeros((b, s, m.kv_lora), cdt),
+                    "kr": jnp.zeros((b, s, m.qk_rope_dim), cdt)}
+        return {"k": jnp.zeros((b, s, cfg.n_kv_heads, cfg.head_dim), cdt),
+                "v": jnp.zeros((b, s, cfg.n_kv_heads, cfg.head_dim), cdt)}
+    if kind == "mamba":
+        di = mamba.d_inner(cfg)
+        return {"conv": jnp.zeros((b, cfg.mamba.d_conv - 1, di), cdt),
+                "ssm": jnp.zeros((b, di, cfg.mamba.d_state), jnp.float32)}
+    return {"prev_x_tm": jnp.zeros((b, 1, cfg.d_model), cdt),
+            "prev_x_cm": jnp.zeros((b, 1, cfg.d_model), cdt),
+            "wkv": jnp.zeros((b, cfg.d_model // cfg.rwkv.head_dim,
+                              cfg.rwkv.head_dim, cfg.rwkv.head_dim),
+                             jnp.float32)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked cache pytree matching the scanned group structure."""
+    groups = []
+    for start, length in cfg.scan_groups():
+        g = cfg.scan_group
+        n_rep = length // g
+        body = []
+        for pos in range(g):
+            one = _layer_cache_shape(cfg, start + pos, batch, max_len)
+            body.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (n_rep,) + x.shape).copy()
+                if n_rep > 1 else x[None], one))
+        groups.append(body)
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(lp, x, cfg: ModelConfig, idx: int, *, mode: str,
+                 cache, cache_len, positions, ctx: ShardCtx):
+    kind = cfg.layer_kind(idx)
+    is_local = cfg.layer_is_local(idx)
+    aux = {}
+    h = blocks.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    new_cache = cache
+    if kind == "attn":
+        if cfg.mla is not None:
+            o, new_cache = blocks.mla_apply(
+                lp["mix"], h, cfg, positions=positions, cache=cache,
+                cache_len=cache_len, ctx=ctx)
+        else:
+            o, new_cache = blocks.attention_apply(
+                lp["mix"], h, cfg, is_local=is_local, positions=positions,
+                cache=cache, cache_len=cache_len, ctx=ctx,
+                causal=not cfg.encoder_only)
+    elif kind == "mamba":
+        o, new_cache = mamba.mamba_apply(lp["mix"], h, cfg, state=cache)
+    else:
+        o, new_cache = rwkv6.time_mix_apply(lp["mix"], h, cfg, state=cache,
+                                            chunked=(mode != "decode"),
+                                            ctx=ctx)
+    if cfg.post_norms:
+        o = blocks.rms_norm(o, lp["post_ln1"], cfg.norm_eps)
+    x = x + o
+    h = blocks.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if kind == "rwkv":
+        o, new_cache2 = rwkv6.channel_mix_apply(lp["ffn"], h, cfg,
+                                                state=new_cache)
+        new_cache = new_cache2 if new_cache2 is not None else new_cache
+    elif cfg.layer_is_moe(idx):
+        o, aux = blocks.moe_apply(lp["ffn"], h, cfg, ctx=ctx)
+    else:
+        o = blocks.mlp_apply(lp["ffn"], h, cfg)
+    if cfg.post_norms:
+        o = blocks.rms_norm(o, lp["post_ln2"], cfg.norm_eps)
+    x = x + o
+    return x, new_cache, aux
+
+
+def _embed(params, batch, cfg: ModelConfig):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.frontend.kind == "audio":
+        x = batch["frames"].astype(cdt) @ params["frontend_proj"].astype(cdt)
+        if "mask" in batch:
+            x = jnp.where(batch["mask"][..., None],
+                          params["mask_embed"].astype(cdt)[None, None], x)
+        return x
+    tok = params["embed"][batch["tokens"]].astype(cdt)
+    if cfg.frontend.kind == "vision" and "image_embeds" in batch:
+        img = (batch["image_embeds"].astype(cdt)
+               @ params["frontend_proj"].astype(cdt))
+        return jnp.concatenate([img, tok], axis=1)
+    if cfg.family != "rwkv":
+        x = tok * jnp.sqrt(jnp.float32(cfg.d_model)).astype(cdt)
+        return x
+    return tok
+
+
+REMAT_POLICIES = {
+    None: None,
+    "none": None,
+    "dots": "dots_with_no_batch_dims_saveable",
+    "dots_batch": "dots_saveable",
+    "everything": "everything_saveable",
+}
+
+
+def forward(params, batch, cfg: ModelConfig, *, mode: str = "train",
+            cache=None, cache_len=None, ctx: ShardCtx = LOCAL,
+            remat: bool = True, remat_policy: str | None = None):
+    """Returns dict(logits, aux, cache)."""
+    x = _embed(params, batch, cfg)
+    b, t, _ = x.shape
+    if mode == "decode":
+        positions = cache_len + jnp.arange(t)[None, :]
+    else:
+        positions = jnp.arange(t)[None, :]
+
+    if ctx.enabled:
+        x = _constrain_acts(x, cfg, ctx)
+
+    aux_total: dict = {}
+    new_cache_groups = [] if cache is not None else None
+    layer_idx = 0
+    for gi, (start, length) in enumerate(cfg.scan_groups()):
+        g = cfg.scan_group
+        n_rep = length // g
+        body_params = params["groups"][gi]
+        body_cache = cache[gi] if cache is not None else [None] * g
+
+        def group_body(x_, stacked, gi=gi, start=start):
+            """One repeat of the group: applies g layers (pos 0..g-1)."""
+            lps, caches = stacked
+            aux_acc = {}
+            new_caches = []
+            for pos in range(g):
+                lp = lps[pos]
+                c = caches[pos] if caches is not None else None
+                x_, nc, aux = _apply_layer(
+                    lp, x_, cfg, start + pos, mode=mode, cache=c,
+                    cache_len=cache_len, positions=positions, ctx=ctx)
+                new_caches.append(nc)
+                for k_, v_ in aux.items():
+                    aux_acc[k_] = aux_acc.get(k_, 0.0) + v_
+            if ctx.enabled:
+                x_ = _constrain_acts(x_, cfg, ctx)
+            return x_, new_caches, aux_acc
+
+        if remat:
+            pol_name = REMAT_POLICIES.get(remat_policy, remat_policy)
+            policy = (getattr(jax.checkpoint_policies, pol_name)
+                      if pol_name else None)
+            group_body = jax.checkpoint(group_body, policy=policy)
+
+        if n_rep == 1:
+            lps = [jax.tree.map(lambda a: a[0], bp) for bp in body_params]
+            cs = ([jax.tree.map(lambda a: a[0], bc) for bc in body_cache]
+                  if cache is not None else None)
+            x, ncs, aux = group_body(x, (lps, cs))
+            if cache is not None:
+                new_cache_groups.append(
+                    [jax.tree.map(lambda a: a[None], nc) for nc in ncs])
+            for k_, v_ in aux.items():
+                aux_total[k_] = aux_total.get(k_, 0.0) + v_
+        else:
+            def scan_step(carry, stacked):
+                x_, aux_c = carry
+                x_, ncs, aux = group_body(x_, stacked)
+                aux_c = {k_: aux_c.get(k_, 0.0) + v_ for k_, v_ in aux.items()} \
+                    if aux else aux_c
+                return (x_, aux_c), ncs
+
+            aux0 = {"moe_aux": jnp.float32(0.0), "moe_z": jnp.float32(0.0)} \
+                if any(cfg.layer_is_moe(i) for i in range(start, start + length)) \
+                else {}
+            (x, aux), ncs = jax.lax.scan(
+                scan_step, (x, aux0),
+                (body_params, body_cache if cache is not None else None))
+            if cache is not None:
+                new_cache_groups.append(ncs)
+            for k_, v_ in aux.items():
+                aux_total[k_] = aux_total.get(k_, 0.0) + v_
+        layer_idx += length
+
+    x = blocks.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+    logits = x @ head
+    if ctx.enabled:
+        bspec = blocks._bspec_for(ctx, logits.shape[0])
+        vspec = ctx.model_axis if cfg.vocab % ctx.model_size == 0 else None
+        logits = jax.lax.with_sharding_constraint(
+            logits, P(bspec, None, vspec))
+    return {"logits": logits, "aux": aux_total,
+            "cache": new_cache_groups}
+
+
+def _constrain_acts(x, cfg: ModelConfig, ctx: ShardCtx):
+    bspec = blocks._bspec_for(ctx, x.shape[0])
+    if (cfg.attn_shard == "sequence" and x.shape[1] > 1
+            and x.shape[1] % ctx.model_size == 0):
+        return jax.lax.with_sharding_constraint(
+            x, P(bspec, ctx.model_axis, None))
+    return jax.lax.with_sharding_constraint(x, P(bspec, None, None))

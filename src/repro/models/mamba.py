@@ -1,0 +1,152 @@
+"""Mamba (selective SSM) layer for the Jamba hybrid architecture.
+
+Selective state-space recurrence with diagonal A:
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D * x_t
+
+Training path: chunked lax.scan - within a chunk the diagonal recurrence
+is evaluated with an associative scan over time, the chunk boundary state
+is carried sequentially.  Chunking bounds the (B, chunk, d_inner, d_state)
+working set so a 500k-token sequence never materializes the full state
+tensor (DESIGN.md §4).  Decode path: single-step recurrence against a
+(conv window, ssm state) cache.
+
+TP: d_inner is sharded over the model axis by the layer above; everything
+here is elementwise in d_inner, so no collectives are needed inside.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import calibrate
+from repro.models.config import ModelConfig
+from repro.models.blocks import _dense_init, _pdtype
+
+SCAN_CHUNK = 512
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.mamba.expand * cfg.d_model
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return cfg.mamba.dt_rank or max(1, cfg.d_model // 16)
+
+
+def init_mamba(key, cfg: ModelConfig):
+    m = cfg.mamba
+    d, di, dr = cfg.d_model, d_inner(cfg), dt_rank(cfg)
+    ks = jax.random.split(key, 8)
+    pdt = _pdtype(cfg)
+    a = jnp.broadcast_to(jnp.arange(1, m.d_state + 1, dtype=jnp.float32),
+                         (di, m.d_state))
+    return {
+        "w_in": _dense_init(ks[0], (d, 2 * di), pdt),
+        "conv_w": (_dense_init(ks[1], (m.d_conv, di), pdt)),
+        "conv_b": jnp.zeros((di,), pdt),
+        "w_bc": _dense_init(ks[2], (di, 2 * m.d_state), pdt),
+        "w_dt_a": _dense_init(ks[3], (di, dr), pdt),
+        "w_dt_b": _dense_init(ks[4], (dr, di), pdt),
+        "dt_bias": jnp.full((di,), math.log(math.e - 1) * 0.1, pdt),
+        "a_log": jnp.log(a).astype(pdt),
+        "d_skip": jnp.ones((di,), pdt),
+        "w_out": _dense_init(ks[5], (di, d), pdt),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv1d.  x (B,T,di); w (K,di); returns (y, new_state)."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                 # (B, T+K-1, di)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    y = y + b[None, None]
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return y, new_state
+
+
+def _ssm_scan_chunked(u, dt, b_t, c_t, a, ssm_state):
+    """u,dt (B,T,di); b_t,c_t (B,T,N); a (di,N); state (B,di,N) f32."""
+    bsz, t, di = u.shape
+    n = a.shape[1]
+    chunk = min(SCAN_CHUNK, t)
+    if t % chunk:
+        raise ValueError(f"T={t} must divide chunk={chunk}")
+    nc = t // chunk
+    # precompute per-step decay and input in f32
+    dt_f = dt.astype(jnp.float32)
+    decay = jnp.exp(dt_f[..., None] * (-jnp.exp(a.astype(jnp.float32)))[None, None])
+    inp = (dt_f * u.astype(jnp.float32))[..., None] * \
+        b_t.astype(jnp.float32)[:, :, None, :]             # (B,T,di,N)
+
+    dec_c = decay.reshape(bsz, nc, chunk, di, n).transpose(1, 0, 2, 3, 4)
+    inp_c = inp.reshape(bsz, nc, chunk, di, n).transpose(1, 0, 2, 3, 4)
+    c_c = c_t.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, args):
+        dec, xin, c = args                                 # (B,chunk,di,N)
+        # associative scan over the chunk: (a,b) pairs compose as
+        # (a2*a1, a2*b1 + b2)
+        def combine(p, q):
+            return p[0] * q[0], q[0] * p[1] + q[1]
+        a_cum, b_cum = jax.lax.associative_scan(combine, (dec, xin), axis=1)
+        states = a_cum * h[:, None] + b_cum                # (B,chunk,di,N)
+        y = jnp.einsum("btdn,btn->btd", states, c)
+        return states[:, -1], y
+
+    ssm_state, ys = jax.lax.scan(chunk_step, ssm_state.astype(jnp.float32),
+                                 (dec_c, inp_c, c_c),
+                                 unroll=calibrate.UNROLL)
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, t, di)
+    return y, ssm_state
+
+
+def mamba_apply(p, x, cfg: ModelConfig, state=None):
+    """x (B,T,d) -> (y, new_state).  state: dict(conv, ssm) or None."""
+    m = cfg.mamba
+    bsz, t, _ = x.shape
+    dt_ = x.dtype
+    di = d_inner(cfg)
+    xz = x @ p["w_in"].astype(dt_)                         # (B,T,2*di)
+    u, z = xz[..., :di], xz[..., di:]
+
+    conv_state = state["conv"] if state is not None else None
+    u_c, new_conv = _causal_conv(u, p["conv_w"].astype(dt_),
+                                 p["conv_b"].astype(dt_), conv_state)
+    u_c = jax.nn.silu(u_c)
+
+    bc = u_c @ p["w_bc"].astype(dt_)                       # (B,T,2N)
+    b_t, c_t = bc[..., :m.d_state], bc[..., m.d_state:]
+    dt_low = u_c @ p["w_dt_a"].astype(dt_)
+    delta = jax.nn.softplus(dt_low @ p["w_dt_b"].astype(dt_)
+                            + p["dt_bias"].astype(dt_))    # (B,T,di)
+
+    ssm_state = state["ssm"] if state is not None else jnp.zeros(
+        (bsz, di, m.d_state), jnp.float32)
+    if t == 1:
+        # decode: single recurrence step
+        dec = jnp.exp(delta.astype(jnp.float32)[..., None]
+                      * (-jnp.exp(p["a_log"].astype(jnp.float32)))[None, None])
+        xin = (delta.astype(jnp.float32) * u_c.astype(jnp.float32))[..., None] \
+            * b_t.astype(jnp.float32)[:, :, None, :]
+        h = dec[:, 0] * ssm_state + xin[:, 0]
+        y = jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32)[:, 0])[:, None]
+        new_ssm = h
+    else:
+        y, new_ssm = _ssm_scan_chunked(u_c, delta, b_t, c_t, p["a_log"],
+                                       ssm_state)
+    y = y.astype(dt_) + u_c * p["d_skip"].astype(dt_)[None, None]
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(dt_)
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv, "ssm": new_ssm}
+    return out, new_state

@@ -1,0 +1,249 @@
+"""RWKV6 "Finch" layer: data-dependent-decay time mix + channel mix.
+
+Faithful to arXiv:2404.05892 at the block level: ddlerp token-shift with a
+low-rank MLP producing the five mix coefficients, a per-channel
+data-dependent decay w_t = exp(-exp(d_t)) from a LoRA head, bonus term u,
+per-head GroupNorm, silu output gate, and a relu^2 channel mix.
+
+Two equivalent WKV evaluators:
+
+  * `wkv_recurrent` - lax.scan over tokens (decode path + test oracle);
+  * `wkv_chunked`   - chunked parallel form (training path): within a
+    chunk the decay kernel is factored as
+        A[t, j] = sum_i r_t[i] * k_j[i] * exp(lw[t-1, i] - lw[j, i]) ,
+    evaluated with the bounded factorization  (r .* exp(lw - lw_max)) @
+    (k .* exp(lw_chunk_end-ish...)); we keep chunks short (16) and clamp
+    exp(decay) <= 4 so all factored exponents stay inside f32 range (see
+    DESIGN.md §7 - a TPU-numerics adaptation, negligible semantically).
+
+State is f32; activations bf16 outside the WKV core.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import calibrate
+from repro.models.config import ModelConfig
+from repro.models.blocks import _dense_init, _pdtype, rms_norm
+
+CHUNK = 16
+DECAY_CLAMP = 4.0  # exp(decay_logit) clamp; w >= exp(-4) per step
+
+
+def init_time_mix(key, cfg: ModelConfig):
+    d = cfg.d_model
+    r = cfg.rwkv
+    h = d // r.head_dim
+    ks = jax.random.split(key, 12)
+    pdt = _pdtype(cfg)
+    u = 0.5 * (jnp.arange(d) % r.head_dim) / r.head_dim
+    return {
+        "maa_base": jnp.zeros((5, d), pdt),
+        "maa_x": jnp.zeros((d,), pdt),
+        "maa_w1": _dense_init(ks[0], (d, 5 * r.lora_mix), pdt, scale=1e-3),
+        "maa_w2": (_dense_init(ks[1], (5, r.lora_mix, d), pdt, scale=1e-3)),
+        "decay_base": jnp.full((d,), -1.0, pdt),
+        "decay_w1": _dense_init(ks[2], (d, r.lora_decay), pdt, scale=1e-3),
+        "decay_w2": _dense_init(ks[3], (r.lora_decay, d), pdt, scale=1e-3),
+        "bonus": u.astype(pdt).reshape(h, r.head_dim),
+        "wr": _dense_init(ks[4], (d, d), pdt),
+        "wk": _dense_init(ks[5], (d, d), pdt),
+        "wv": _dense_init(ks[6], (d, d), pdt),
+        "wg": _dense_init(ks[7], (d, d), pdt),
+        "wo": _dense_init(ks[8], (d, d), pdt),
+        "ln_x": {"scale": jnp.zeros((d,), pdt)},
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig):
+    d, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    pdt = _pdtype(cfg)
+    return {
+        "maa_k": jnp.zeros((d,), pdt),
+        "maa_r": jnp.zeros((d,), pdt),
+        "wk": _dense_init(ks[0], (d, dff), pdt),
+        "wv": _dense_init(ks[1], (dff, d), pdt),
+        "wr": _dense_init(ks[2], (d, d), pdt),
+    }
+
+
+def _token_shift(x, prev):
+    """x (B,T,d), prev (B,1,d) -> previous-token stream."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, xs):
+    """Data-dependent lerp producing the five mixed streams (w,k,v,r,g)."""
+    dt = x.dtype
+    dx = xs - x
+    xxx = x + dx * p["maa_x"].astype(dt)
+    b, t, d = x.shape
+    mixer = jnp.tanh(xxx @ p["maa_w1"].astype(dt))        # (B,T,5*rank)
+    rank = mixer.shape[-1] // 5
+    mixer = mixer.reshape(b, t, 5, rank)
+    offs = jnp.einsum("btfr,frd->btfd", mixer, p["maa_w2"].astype(dt))
+    base = p["maa_base"].astype(dt)                        # (5, d)
+    mixed = x[:, :, None, :] + dx[:, :, None, :] * (base + offs)
+    return [mixed[:, :, i] for i in range(5)]              # w,k,v,r,g
+
+
+def wkv_recurrent(r, k, v, w, u, state):
+    """Token-by-token WKV.  r,k,v,w: (B,T,H,D) f32; u: (H,D); state (B,H,D,D).
+
+    S[i,j] accumulates k[i]*v[j] with per-i decay; out[j] = sum_i r[i] *
+    (S_prev[i,j] + u[i]*k[i]*v[j]).
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                          # (B,H,D)
+        kv = k_t[..., :, None] * v_t[..., None, :]        # (B,H,D,D)
+        out = jnp.einsum("bhi,bhij->bhj", r_t, s + u[None] [..., None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, out
+
+    (r_, k_, v_, w_) = [jnp.moveaxis(a, 1, 0) for a in (r, k, v, w)]
+    state, outs = jax.lax.scan(step, state, (r_, k_, v_, w_))
+    return jnp.moveaxis(outs, 0, 1), state                # (B,T,H,D)
+
+
+def wkv_chunked(r, k, v, w, u, state, chunk: int = CHUNK):
+    """Chunked parallel WKV, bit-compatible with wkv_recurrent (f32).
+
+    Chunks of `chunk` tokens: intra-chunk via the bounded factored kernel,
+    inter-chunk via the carried state.
+    """
+    b, t, h, d = r.shape
+    if t % chunk:
+        raise ValueError(f"T={t} must divide chunk={chunk}")
+    nc = t // chunk
+    re, ke, ve, we = [a.reshape(b, nc, chunk, h, d).transpose(1, 0, 3, 2, 4)
+                      for a in (r, k, v, w)]              # (nc,B,H,C,D)
+    lw = jnp.log(we)                                      # <= 0
+    lw_cum = jnp.cumsum(lw, axis=-2)                      # inclusive within chunk
+
+    tri_lower = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def chunk_step(s, inp):
+        rc, kc, vc, lwc, lw_cumc = inp
+        # decay from chunk start to just before token t (exclusive of t)
+        lw_before = lw_cumc - lwc                         # (B,H,C,D)
+        # intra-chunk: A[t,j] = sum_i r[t,i] k[j,i] exp(lw_before[t]-lw_cum[j])
+        # factored exponents stay in f32 range: lw_before in [-C*clamp, 0]
+        # (so exp <= 1) and -lw_cum in [0, C*clamp] (exp <= e^64 ~ 6e27).
+        r_dec = rc * jnp.exp(lw_before)
+        k_dec = kc * jnp.exp(-lw_cumc)
+        a = jnp.einsum("bhti,bhji->bhtj", r_dec, k_dec)
+        a = jnp.where(tri_lower[None, None], a, 0.0)
+        diag = jnp.einsum("bhti,bhti->bht", rc * u[None, :, None, :], kc)
+        out = jnp.einsum("bhtj,bhjd->bhtd", a, vc)
+        out += diag[..., None] * vc
+        # cross-chunk: state contribution decayed to before token t
+        out += jnp.einsum("bhti,bhid->bhtd", rc * jnp.exp(lw_before), s)
+        # state update: decay full chunk + inject each k_j v_j decayed to end
+        decay_all = jnp.exp(lw_cumc[..., -1, :])          # (B,H,D)
+        k_tail = kc * jnp.exp(lw_cumc[..., -1:, :] - lw_cumc)
+        s = decay_all[..., :, None] * s + jnp.einsum(
+            "bhji,bhjd->bhid", k_tail, vc)
+        return s, out
+
+    state, outs = jax.lax.scan(chunk_step, state, (re, ke, ve, lw, lw_cum),
+                               unroll=calibrate.UNROLL)
+    # (nc, B, H, C, D) -> (B, T, H, D)
+    return outs.transpose(1, 0, 3, 2, 4).reshape(b, t, h, d), state
+
+
+def time_mix_apply(p, x, cfg: ModelConfig, state=None, chunked=True,
+                   ctx=None):
+    """x (B,T,d) -> (out, new_state).  state: dict(prev_x, wkv) or None.
+
+    With cfg.rwkv_pad_heads = H' > H, the WKV runs on zero-padded heads
+    sharded over the model axis (beyond-paper optimization: the faithful
+    40-head config replicates WKV on every model shard; padding to 48
+    shards it 16 ways at 20% pad overhead - DESIGN.md §7.5 / §Perf).
+    """
+    b, t, d = x.shape
+    r_cfg = cfg.rwkv
+    h = d // r_cfg.head_dim
+    dt = x.dtype
+    prev_x = state["prev_x_tm"] if state is not None else jnp.zeros(
+        (b, 1, d), dt)
+    xs = _token_shift(x, prev_x.astype(dt))
+    xw, xk, xv, xr, xg = _ddlerp(p, x, xs)
+
+    decay_logit = (p["decay_base"].astype(jnp.float32)
+                   + jnp.tanh(xw.astype(jnp.float32)
+                              @ p["decay_w1"].astype(jnp.float32))
+                   @ p["decay_w2"].astype(jnp.float32))
+    w = jnp.exp(-jnp.minimum(jnp.exp(decay_logit), DECAY_CLAMP))
+
+    r = (xr @ p["wr"].astype(dt)).reshape(b, t, h, r_cfg.head_dim)
+    k = (xk @ p["wk"].astype(dt)).reshape(b, t, h, r_cfg.head_dim)
+    v = (xv @ p["wv"].astype(dt)).reshape(b, t, h, r_cfg.head_dim)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+
+    h_pad = max(cfg.rwkv_pad_heads, h)
+    u = p["bonus"].astype(jnp.float32)
+    w4 = w.reshape(b, t, h, r_cfg.head_dim)
+    wkv_state = state["wkv"] if state is not None else jnp.zeros(
+        (b, h, r_cfg.head_dim, r_cfg.head_dim), jnp.float32)
+    if h_pad > h:
+        pads = ((0, 0), (0, 0), (0, h_pad - h), (0, 0))
+        r = jnp.pad(r, pads)
+        k = jnp.pad(k, pads)
+        v = jnp.pad(v, pads)
+        w4 = jnp.pad(w4, pads, constant_values=1.0)  # decay 1 on pad heads
+        u = jnp.pad(u, ((0, h_pad - h), (0, 0)))
+        wkv_state = jnp.pad(wkv_state, ((0, 0), (0, h_pad - h), (0, 0),
+                                        (0, 0)))
+        if ctx is not None and ctx.enabled:
+            from jax.sharding import PartitionSpec as P
+            from repro.models.blocks import _bspec_for
+            bspec = _bspec_for(ctx, b)
+            spec = P(bspec, None, ctx.model_axis, None)
+            r, k, v, w4 = (jax.lax.with_sharding_constraint(a, spec)
+                           for a in (r, k, v, w4))
+
+    args = (r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), w4.astype(jnp.float32), u, wkv_state)
+    if chunked and t % r_cfg.chunk == 0 and t > 1:
+        o, new_wkv = wkv_chunked(*args, chunk=r_cfg.chunk)
+    else:
+        o, new_wkv = wkv_recurrent(*args)
+
+    if h_pad > h:
+        o = o[:, :, :h]
+        new_wkv = new_wkv[:, :h]
+
+    # per-head group norm (per-channel scale reshaped to heads)
+    ln = {"scale": p["ln_x"]["scale"].reshape(h, r_cfg.head_dim)}
+    o = rms_norm(o, ln, eps=1e-5 * 64)                    # (B,T,H,D) per head
+    o = o.reshape(b, t, d).astype(dt) * g
+    out = o @ p["wo"].astype(dt)
+    new_state = None
+    if state is not None:
+        new_state = dict(state)
+        new_state["prev_x_tm"] = x[:, -1:, :]
+        new_state["wkv"] = new_wkv
+    return out, new_state
+
+
+def channel_mix_apply(p, x, cfg: ModelConfig, state=None):
+    b, t, d = x.shape
+    dt = x.dtype
+    prev_x = state["prev_x_cm"] if state is not None else jnp.zeros(
+        (b, 1, d), dt)
+    xs = _token_shift(x, prev_x.astype(dt))
+    dx = xs - x
+    xk = x + dx * p["maa_k"].astype(dt)
+    xr = x + dx * p["maa_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt)))
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(dt)) * (k @ p["wv"].astype(dt))
+    new_state = None
+    if state is not None:
+        new_state = dict(state)
+        new_state["prev_x_cm"] = x[:, -1:, :]
+    return out, new_state

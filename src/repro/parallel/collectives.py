@@ -1,0 +1,99 @@
+"""Distributed-optimization collectives: compressed gradient all-reduce.
+
+int8 block-quantized psum with error feedback - the cross-pod gradient
+sync trick for multi-pod training, where the pod-to-pod links are the
+scarce resource.  4x fewer bytes on the wire; error feedback keeps the
+quantization noise from biasing convergence (residual carried between
+steps, standard EF-SGD analysis applies).
+
+Usage (multi-pod): grads within a pod reduce in full precision (cheap ICI);
+`compressed_psum(..., axis="pod")` handles the expensive hop.  Tests
+verify (a) exactness bounds per call and (b) EF residual convergence.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+BLOCK = 256
+
+
+def quantize_int8(x: jnp.ndarray):
+    """Per-block symmetric int8 quantization.  x: flat f32 (N,)."""
+    n = x.shape[0]
+    pad = (-n) % BLOCK
+    xp = jnp.pad(x, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(xp), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xp / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q, scale, n):
+    x = q.astype(jnp.float32) * scale
+    return x.reshape(-1)[:n]
+
+
+def compressed_psum(x: jnp.ndarray, axis: str):
+    """int8-compressed psum over a named axis (inside shard_map)."""
+    n = x.size
+    flat = x.reshape(-1).astype(jnp.float32)
+    q, scale = quantize_int8(flat)
+    # psum int8 payloads in int32 to avoid overflow across shards
+    qsum = jax.lax.psum(q.astype(jnp.int32), axis)
+    ssum = jax.lax.psum(scale, axis)  # conservative shared scale path
+    nshards = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+    # each shard contributed q_i * scale_i; approximating scale_i ~ mean
+    mean_scale = ssum / nshards
+    out = dequantize_int8(qsum, mean_scale, n)
+    return out.reshape(x.shape)
+
+
+def compressed_psum_exact_scales(x: jnp.ndarray, axis: str):
+    """All-gather per-shard scales for exact per-block dequantization.
+
+    Wire carries int8 payloads + f32 block scales (~4x less than f32).
+    The final pmean re-establishes replicated typing for shard_map (the
+    summed gather is already shard-invariant; the pmean is a no-op on
+    values)."""
+    n = x.size
+    flat = x.reshape(-1).astype(jnp.float32)
+    q, scale = quantize_int8(flat)
+    qg = jax.lax.all_gather(q, axis)            # (S, blocks, BLOCK)
+    sg = jax.lax.all_gather(scale, axis)        # (S, blocks, 1)
+    out = jnp.sum(qg.astype(jnp.float32) * sg, axis=0)
+    out = jax.lax.pmean(out, axis)  # values already equal; fixes vma typing
+    return out.reshape(-1)[:n].reshape(x.shape)
+
+
+def make_ef_sync(axis: str, exact: bool = True):
+    """Error-feedback compressed sync: (grad, residual) -> (synced, new_res)."""
+    psum_fn = compressed_psum_exact_scales if exact else compressed_psum
+
+    def sync(g: jnp.ndarray, residual: jnp.ndarray):
+        corrected = g + residual
+        synced = psum_fn(corrected, axis)
+        nshards = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+        synced = synced / nshards
+        # local quantization error -> carried to the next step
+        q, s = quantize_int8(corrected.reshape(-1).astype(jnp.float32))
+        sent = dequantize_int8(q, s, corrected.size).reshape(corrected.shape)
+        new_res = corrected - sent
+        return synced, new_res
+
+    return sync
+
+
+def pod_sync_grads(grads, residuals, axis: str = "pod", exact: bool = True):
+    """Compress-sync a gradient pytree across `axis` (call inside shard_map).
+
+    Returns (synced_grads, new_residuals).
+    """
+    sync = make_ef_sync(axis, exact)
+    pairs = jax.tree.map(sync, grads, residuals)
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2
+    synced = jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair)
+    new_res = jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair)
+    return synced, new_res

@@ -1,0 +1,221 @@
+"""Logical-axis sharding rules: parameter/batch/cache PartitionSpecs per arch.
+
+Mesh contract (launch/mesh.py):
+  single-pod  (data=16, model=16)            - 256 chips
+  multi-pod   (pod=2, data=16, model=16)     - 512 chips; `pod` is pure DP
+
+Parameter placement = TP over `model` + FSDP over `data` (GSPMD inserts
+the use-site all-gathers; optimizer state inherits the same sharding, so
+ZeRO-1/3 falls out of the specs).  Per-family rules:
+
+  dense/moe/hybrid attention   column-TP wq/wk/wv, row-TP wo over `model`
+                               (kv heads < model size -> kv replicated at
+                               compute time, see blocks.attention_apply)
+  attn_shard == "sequence"     weights replicated over `model`; activations
+                               sequence-sharded (llama3.2: 24 heads % 16)
+  MoE experts                  EP: leading expert dim over `model`
+  mamba                        d_inner over `model`
+  rwkv time-mix                replicated over `model` (40 heads), FSDP
+                               over `data`; channel-mix FFN + vocab TP
+  embed / lm_head              vocab over `model`, d_model over `data`
+
+Caches: KV/latent caches are sequence-sharded over `model` (uniform rule -
+kv-head counts rarely divide the axis); SSM/RWKV states shard d_inner /
+replicate per DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.blocks import ShardCtx
+from repro.models.config import ModelConfig
+
+
+def make_shard_ctx(mesh, cfg: ModelConfig | None = None) -> ShardCtx:
+    axes = mesh.axis_names
+    data_axes = ("pod", "data") if "pod" in axes else ("data",)
+    return ShardCtx(data_axes=data_axes, model_axis="model",
+                    model_size=mesh.shape["model"], enabled=True,
+                    axis_sizes=tuple(mesh.shape.items()))
+
+
+def sanitize_spec(spec: P, shape, ctx: ShardCtx) -> P:
+    """Drop axis assignments whose size doesn't divide the dimension.
+
+    Keeps the rules table simple: hubert's 504-entry unit vocabulary, tiny
+    smoke dims, etc. silently fall back to replication per-dimension."""
+    sizes = dict(ctx.axis_sizes)
+    new = []
+    for d, ax in enumerate(spec):
+        if ax is None:
+            new.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        prod = 1
+        for a in axes:
+            prod *= sizes.get(a, 1)
+        new.append(ax if shape[d] % prod == 0 else None)
+    return P(*new)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_spec(path_s: str, ndim: int, cfg: ModelConfig, dp) -> P:
+    """PartitionSpec for one parameter (without the layer-stack dim)."""
+    seq = cfg.attn_shard == "sequence"
+    name = path_s.rsplit("/", 1)[-1]
+    in_mix = "/mix/" in path_s or path_s.endswith("mix")
+    in_ffn = "/ffn/" in path_s
+    rwkv_tm = cfg.family == "rwkv" and in_mix
+    rwkv_cm = cfg.family == "rwkv" and in_ffn
+
+    # ---- top-level ---------------------------------------------------------
+    if name == "embed":
+        return P("model", dp)
+    if name == "lm_head":
+        return P(dp, "model")
+    if name in ("frontend_proj", "mask_embed"):
+        return P(dp, None) if ndim == 2 else P(None)
+
+    # ---- rwkv --------------------------------------------------------------
+    if rwkv_tm:
+        if ndim == 2 and name in ("wr", "wk", "wv", "wg", "wo"):
+            return P(dp, None)
+        if name in ("maa_w1", "decay_w1"):
+            return P(dp, None)
+        if name == "maa_w2":
+            return P(None, None, None)
+        if name == "decay_w2":
+            return P(None, dp)
+        return P(*([None] * ndim))
+    if rwkv_cm:
+        if name == "wk":
+            return P(dp, "model")
+        if name == "wv":
+            return P("model", dp)
+        if name == "wr":
+            return P(dp, None)
+        return P(*([None] * ndim))
+
+    # ---- mamba -------------------------------------------------------------
+    if name == "w_in":
+        return P(dp, "model")
+    if name == "conv_w":
+        return P(None, "model")
+    if name in ("conv_b", "dt_bias", "d_skip"):
+        return P("model")
+    if name == "w_bc" or name == "w_dt_a":
+        return P("model", None)
+    if name == "w_dt_b":
+        return P(None, "model")
+    if name == "a_log":
+        return P("model", None)
+    if name == "w_out":
+        return P("model", dp)
+
+    # ---- MoE (3D expert weights; 2D shared/dense fall through to MLP) ------
+    if name == "router":
+        return P(dp, None)
+    if name.endswith("_scale"):
+        return P("model", None, None)
+    if ndim == 3 and name in ("w_gate", "w_up"):
+        return P("model", dp, None)
+    if ndim == 3 and name == "w_down":
+        return P("model", None, dp)
+
+    # ---- MLP ----------------------------------------------------------------
+    if name in ("w_gate", "w_up"):
+        return P(dp, None) if seq else P(dp, "model")
+    if name == "w_down":
+        return P(None, dp) if seq else P("model", dp)
+
+    # ---- attention / MLA ----------------------------------------------------
+    if name in ("wq", "wk", "wv", "wq_b", "wk_b", "wv_b"):
+        return P(dp, None) if seq else P(dp, "model")
+    if name in ("wq_a", "wkv_a"):
+        return P(dp, None)
+    if name == "wo":
+        return P(None, dp) if seq else P("model", dp)
+
+    # ---- norms & everything small ------------------------------------------
+    return P(*([None] * ndim))
+
+
+def params_pspecs(params, cfg: ModelConfig, ctx: ShardCtx):
+    """Pytree of PartitionSpecs matching `params` (layer-stacked aware)."""
+    dp = ctx.batch_spec
+
+    def one(path, leaf):
+        s = _path_str(path)
+        stacked = s.startswith("groups/")
+        ndim = leaf.ndim - (1 if stacked else 0)
+        spec = param_spec(s, ndim, cfg, dp)
+        if cfg.serve_tp_only:
+            # serving: drop the FSDP (data) dimension from weight specs so
+            # no per-step weight all-gathers are needed (params must fit
+            # the TP shard - pair with a wider model axis and/or int8)
+            spec = P(*(None if a == dp else a for a in spec))
+        if stacked:
+            spec = P(None, *spec)
+        return sanitize_spec(spec, leaf.shape, ctx)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_pspecs(batch_shapes: dict, cfg: ModelConfig, ctx: ShardCtx):
+    """Input batch PartitionSpecs (tokens/labels/frames/...)."""
+    dp = ctx.batch_spec
+    specs = {}
+    for k, v in batch_shapes.items():
+        if hasattr(v, "ndim"):
+            nd = v.ndim
+        else:
+            nd = len(v)
+        specs[k] = P(dp, *([None] * (nd - 1)))
+    return specs
+
+
+def cache_pspecs(cache, cfg: ModelConfig, ctx: ShardCtx):
+    """Decode-cache PartitionSpecs: sequence-sharded KV, sharded SSM state."""
+    dp = ctx.batch_spec
+
+    def one(path, leaf):
+        s = _path_str(path)
+        name = s.rsplit("/", 1)[-1]
+        # leading dim is the layer stack
+        if name in ("k", "v"):          # (L, B, S, KH, D) -> shard S
+            spec = P(None, dp, "model", None, None)
+        elif name in ("ckv", "kr"):     # (L, B, S, d) -> shard S
+            spec = P(None, dp, "model", None)
+        elif name == "ssm":             # (L, B, di, N) -> shard di
+            spec = P(None, dp, "model", None)
+        elif name == "conv":            # (L, B, K-1, di) -> shard di
+            spec = P(None, dp, None, "model")
+        elif name == "wkv":             # (L, B, H, D, D) - replicate heads
+            spec = P(None, dp, None, None, None)
+        else:
+            spec = P(None, dp, *([None] * (leaf.ndim - 2)))
+        return sanitize_spec(spec, leaf.shape, ctx)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def to_named(specs_tree, mesh):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,113 @@
+"""Training step factory: loss, microbatch accumulation, optimizer update.
+
+`make_train_step(cfg, opt_cfg, ctx)` builds the jit-able function
+  train_step(state, batch) -> (state, metrics)
+used identically by the smoke tests (1 CPU device, ctx=LOCAL) and the
+production dry-run (pjit over the 256/512-chip mesh) - the distribution
+is entirely in the shardings, not the code.
+
+Microbatching: with `microbatch > 1` the global batch is split along
+axis 0 and gradients accumulate in f32 through a lax.scan - the standard
+gradient-accumulation trick for fitting large global batches.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.blocks import LOCAL, ShardCtx
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: adamw.AdamWState
+    step: jnp.ndarray
+
+
+def init_state(key, cfg: ModelConfig, opt_cfg: adamw.AdamWConfig) -> TrainState:
+    params = lm.init_model(key, cfg)
+    return TrainState(params=params, opt=adamw.init(opt_cfg, params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Stable CE; labels -100 (or mask=0) positions are ignored."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    safe_labels = jnp.maximum(labels, 0)
+    gold = jnp.take_along_axis(logits, safe_labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    valid = labels >= 0
+    if mask is not None:
+        valid = valid & (mask > 0)
+    nll = jnp.where(valid, nll, 0.0)
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    return jnp.sum(nll) / denom
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ctx: ShardCtx, remat=True,
+            remat_policy: str | None = None):
+    out = lm.forward(params, batch, cfg, mode="train", ctx=ctx, remat=remat,
+                     remat_policy=remat_policy)
+    logits = out["logits"]
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:
+        # vision prefix: logits cover [image; text] - score text only
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    loss = cross_entropy(logits, labels, batch.get("loss_mask"))
+    aux_sum = sum(out["aux"].values()) if out["aux"] else 0.0
+    metrics = {"ce_loss": loss, **{k: v for k, v in out["aux"].items()}}
+    return loss + aux_sum, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    ctx: ShardCtx = LOCAL, microbatch: int = 1,
+                    remat: bool = True, remat_policy: str | None = None):
+    def train_step(state: TrainState, batch):
+        if microbatch == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch, cfg, ctx, remat,
+                                       remat_policy)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatch, b // microbatch, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mb, cfg, ctx, remat, remat_policy)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+            from repro.models import calibrate
+            (grads, loss), ms = jax.lax.scan(acc_step, (g0, 0.0), micro,
+                                             unroll=calibrate.UNROLL)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = loss / microbatch
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+
+        new_params, new_opt, opt_metrics = adamw.update(
+            opt_cfg, grads, state.opt, state.params)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return TrainState(params=new_params, opt=new_opt,
+                          step=state.step + 1), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, ctx: ShardCtx = LOCAL):
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch, cfg, ctx, remat=False)
+        return {"loss": loss, **metrics}
+    return eval_step

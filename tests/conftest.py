@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Tests run on the single default CPU device (the dry-run sets its own
+# device count in a separate process; never here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,162 @@
+"""Model zoo behaviour: family forwards, decode==train, WKV/SSM equivalence."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import lm, mamba, rwkv6
+from repro.models.config import (MLAConfig, MambaConfig, ModelConfig,
+                                 MoEConfig, RWKVConfig)
+
+KEY = jax.random.PRNGKey(0)
+B, T = 2, 16
+
+
+def _dense():
+    return ModelConfig(name="d", family="dense", n_layers=3, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=128, vocab=100,
+                       head_dim=16, qk_norm=True, compute_dtype="float32")
+
+
+def _gemma():
+    return ModelConfig(name="g", family="dense", n_layers=6, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=128, vocab=100,
+                       head_dim=16, sliding_window=8, local_global_ratio=2,
+                       post_norms=True, scan_group=3, compute_dtype="float32")
+
+
+def _mla_moe():
+    return ModelConfig(
+        name="m", family="moe", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab=100, head_dim=16,
+        compute_dtype="float32",
+        mla=MLAConfig(kv_lora=32, q_lora=48, qk_nope_dim=16, qk_rope_dim=8,
+                      v_head_dim=16),
+        moe=MoEConfig(num_experts=8, num_shared=1, top_k=2, d_expert=32,
+                      first_k_dense=1, d_ff_dense=128, capacity_factor=8.0))
+
+
+def _rwkv():
+    return ModelConfig(name="r", family="rwkv", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=4, d_ff=224, vocab=100,
+                       rwkv=RWKVConfig(head_dim=16), compute_dtype="float32")
+
+
+def _jamba():
+    return ModelConfig(
+        name="j", family="hybrid", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=100, head_dim=16,
+        compute_dtype="float32", mamba=MambaConfig(d_state=8),
+        attn_layer_period=4, attn_layer_offset=3,
+        moe=MoEConfig(num_experts=4, top_k=2, d_expert=64, every=2,
+                      capacity_factor=8.0), scan_group=4)
+
+
+FAMILIES = {"dense": _dense, "gemma": _gemma, "mla_moe": _mla_moe,
+            "rwkv": _rwkv, "jamba": _jamba}
+
+
+@pytest.mark.parametrize("fam", list(FAMILIES))
+def test_forward_finite(fam):
+    cfg = FAMILIES[fam]()
+    p = lm.init_model(KEY, cfg)
+    toks = jax.random.randint(KEY, (B, T), 0, cfg.vocab)
+    out = lm.forward(p, {"tokens": toks}, cfg, mode="train", remat=False)
+    assert out["logits"].shape == (B, T, cfg.vocab)
+    assert bool(jnp.isfinite(out["logits"]).all())
+
+
+@pytest.mark.parametrize("fam", list(FAMILIES))
+def test_decode_matches_train(fam):
+    """Prefill + token-by-token decode == parallel forward (serving oracle)."""
+    cfg = FAMILIES[fam]()
+    p = lm.init_model(KEY, cfg)
+    toks = jax.random.randint(KEY, (B, T), 0, cfg.vocab)
+    ref = lm.forward(p, {"tokens": toks}, cfg, mode="train", remat=False)
+    tp = T - 4
+    cache = lm.init_cache(cfg, B, T + 8)
+    out = lm.forward(p, {"tokens": toks[:, :tp]}, cfg, mode="prefill",
+                     cache=cache, remat=False)
+    logits, cache, clen = [out["logits"]], out["cache"], jnp.int32(tp)
+    for i in range(tp, T):
+        o = lm.forward(p, {"tokens": toks[:, i:i + 1]}, cfg, mode="decode",
+                       cache=cache, cache_len=clen, remat=False)
+        cache, clen = o["cache"], clen + 1
+        logits.append(o["logits"])
+    dec = jnp.concatenate(logits, axis=1)
+    assert float(jnp.abs(dec - ref["logits"]).max()) < 2e-2
+
+
+def test_remat_does_not_change_values():
+    cfg = _dense()
+    p = lm.init_model(KEY, cfg)
+    toks = jax.random.randint(KEY, (B, T), 0, cfg.vocab)
+    a = lm.forward(p, {"tokens": toks}, cfg, mode="train", remat=False)
+    b = lm.forward(p, {"tokens": toks}, cfg, mode="train", remat=True)
+    assert jnp.allclose(a["logits"], b["logits"], atol=1e-5)
+
+
+def test_wkv_chunked_equals_recurrent():
+    B_, T_, H, D = 2, 64, 4, 16
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B_, T_, H, D))
+    k = jax.random.normal(ks[1], (B_, T_, H, D))
+    v = jax.random.normal(ks[2], (B_, T_, H, D))
+    w = jnp.exp(-jnp.minimum(jnp.exp(jax.random.normal(ks[3],
+                                                       (B_, T_, H, D)) * .5),
+                             4.0))
+    u = jax.random.normal(ks[4], (H, D)) * 0.2
+    s0 = jnp.zeros((B_, H, D, D))
+    o1, s1 = rwkv6.wkv_recurrent(r, k, v, w, u, s0)
+    o2, s2 = rwkv6.wkv_chunked(r, k, v, w, u, s0)
+    assert jnp.allclose(o1, o2, atol=1e-3)
+    assert jnp.allclose(s1, s2, atol=1e-3)
+
+
+def test_mamba_decode_equals_scan():
+    cfg = ModelConfig(name="t", family="hybrid", n_layers=1, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab=10,
+                      mamba=MambaConfig(d_state=8), compute_dtype="float32")
+    p = mamba.init_mamba(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 16, 32)) * 0.3
+    import repro.models.mamba as M
+    old = M.SCAN_CHUNK
+    M.SCAN_CHUNK = 8
+    try:
+        y, _ = mamba.mamba_apply(p, x, cfg)
+    finally:
+        M.SCAN_CHUNK = old
+    s = {"conv": jnp.zeros((2, 3, 64)), "ssm": jnp.zeros((2, 64, 8))}
+    outs = []
+    for t in range(16):
+        o, s = mamba.mamba_apply(p, x[:, t:t + 1], cfg, state=s)
+        outs.append(o)
+    assert jnp.allclose(jnp.concatenate(outs, 1), y, atol=1e-3)
+
+
+def test_flash_attention_equals_naive():
+    from repro.models.blocks import flash_attention
+    b, t, kh, r, d = 2, 64, 2, 3, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, t, kh, r, d))
+    k = jax.random.normal(ks[1], (b, t, kh, d))
+    v = jax.random.normal(ks[2], (b, t, kh, d))
+    got = flash_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16)
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", q, k) / jnp.sqrt(d)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    want = jnp.einsum("bhrqk,bkhd->bqhrd", jax.nn.softmax(s, -1), v)
+    assert jnp.allclose(got, want, atol=1e-4)
+
+
+def test_banded_equals_masked_full():
+    from repro.models.blocks import banded_attention, flash_attention
+    b, t, kh, r, d, w = 1, 64, 2, 2, 8, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, t, kh, r, d))
+    k = jax.random.normal(ks[1], (b, t, kh, d))
+    v = jax.random.normal(ks[2], (b, t, kh, d))
+    got = banded_attention(q, k, v, window=w)
+    want = flash_attention(q, k, v, causal=True, window=w, q_chunk=32,
+                           kv_chunk=32)
+    assert jnp.allclose(got, want, atol=1e-4)

@@ -1,0 +1,98 @@
+"""Guards for the §Perf hillclimb variants (EXPERIMENTS.md §Perf).
+
+Each optimization must be value-preserving: the variants change layout /
+precision / schedule, never the math (int8 experts excepted - quantized
+by design, checked for sanity).
+"""
+
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import MLAConfig, ModelConfig, MoEConfig, RWKVConfig
+from repro.launch.dryrun import VARIANTS
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rwkv_cfg(**kw):
+    return ModelConfig(name="t", family="rwkv", n_layers=2, d_model=80,
+                       n_heads=5, n_kv_heads=5, d_ff=224, vocab=100,
+                       rwkv=RWKVConfig(head_dim=16), compute_dtype="float32",
+                       **kw)
+
+
+def test_rwkv_pad_heads_is_inert():
+    """rwkv48 variant: zero-padded WKV heads change nothing numerically."""
+    cfg = _rwkv_cfg()
+    p = lm.init_model(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 32), 0, 100)
+    base = lm.forward(p, {"tokens": toks}, cfg, mode="train",
+                      remat=False)["logits"]
+    pad = lm.forward(p, {"tokens": toks}, dc.replace(cfg, rwkv_pad_heads=8),
+                     mode="train", remat=False)["logits"]
+    assert jnp.allclose(base, pad, atol=1e-5)
+
+
+def test_rwkv_chunk_size_invariant():
+    """rwkv48_c64 variant: WKV chunk length is a pure scheduling knob."""
+    cfg = _rwkv_cfg()
+    p = lm.init_model(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 32), 0, 100)
+    base = lm.forward(p, {"tokens": toks}, cfg, mode="train",
+                      remat=False)["logits"]
+    c8 = dc.replace(cfg, rwkv=RWKVConfig(head_dim=16, chunk=8))
+    got = lm.forward(p, {"tokens": toks}, c8, mode="train",
+                     remat=False)["logits"]
+    assert jnp.allclose(base, got, atol=1e-4)
+
+
+def test_int8_moe_close_to_fp():
+    """serve_tp32 variant: int8 weight-only experts approximate fp well."""
+    moe = MoEConfig(num_experts=8, num_shared=1, top_k=2, d_expert=32,
+                    first_k_dense=1, d_ff_dense=128, capacity_factor=8.0)
+    cfg = ModelConfig(name="q", family="moe", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=128, vocab=100,
+                      head_dim=16, compute_dtype="float32", moe=moe)
+    toks = jax.random.randint(KEY, (2, 16), 0, 100)
+    p_fp = lm.init_model(KEY, cfg)
+    out_fp = lm.forward(p_fp, {"tokens": toks}, cfg, mode="train",
+                        remat=False)["logits"]
+    cfg_q = dc.replace(cfg, moe=dc.replace(moe, quant_int8=True))
+    p_q = lm.init_model(KEY, cfg_q)
+    out_q = lm.forward(p_q, {"tokens": toks}, cfg_q, mode="train",
+                       remat=False)["logits"]
+    assert bool(jnp.isfinite(out_q).all())
+    # same init stream, quantization error only
+    rel = float(jnp.abs(out_q - out_fp).max()
+                / jnp.maximum(jnp.abs(out_fp).max(), 1e-6))
+    assert rel < 0.15, rel
+
+
+def test_remat_policy_value_preserving():
+    cfg = ModelConfig(name="d", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=100,
+                      head_dim=16, compute_dtype="float32")
+    p = lm.init_model(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 16), 0, 100)
+    a = lm.forward(p, {"tokens": toks}, cfg, mode="train",
+                   remat=True)["logits"]
+    b = lm.forward(p, {"tokens": toks}, cfg, mode="train", remat=True,
+                   remat_policy="dots")["logits"]
+    assert jnp.allclose(a, b, atol=1e-5)
+
+
+def test_variant_registry_wellformed():
+    from repro import configs
+    for name, spec in VARIANTS.items():
+        assert set(spec) <= {"cfg_fn", "train_kwargs", "mesh_shape"}, name
+        if "cfg_fn" in spec and name.startswith("rwkv"):
+            cfg = spec["cfg_fn"](configs.get_config("rwkv6-3b"))
+            assert cfg.rwkv_pad_heads == 48
+        if "cfg_fn" in spec and name.startswith("serve"):
+            cfg = spec["cfg_fn"](configs.get_config("deepseek-v2-236b"))
+            assert cfg.serve_tp_only
+        if "mesh_shape" in spec:
+            assert spec["mesh_shape"] == (8, 32)
