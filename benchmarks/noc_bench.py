@@ -1,0 +1,138 @@
+"""NoC benchmark: broadcast vs. unicast-mesh vs. multicast-tree, and
+random vs. optimized neuron placement, over core counts 4 -> 64.
+
+    PYTHONPATH=src python benchmarks/noc_bench.py
+
+Two sweeps:
+
+1. **Transport scheme** (fixed random connectivity, fixed spikes): per-tick
+   CAM searches, NoC link events (hops) and energy for the three schemes.
+   Broadcast pays `events x cores` searches; the mesh schemes pay one
+   search per *subscribed* core, and the multicast tree additionally
+   collapses replicated link traversals into shared trunk edges.
+
+2. **Placement** (cluster-structured connectivity, scrambled): traffic
+   cost and CAM searches under identity / random / greedy hyperedge-
+   overlap placement, evaluated both by the analytic objective and by
+   running `fabric.step` on the re-placed fabric.
+
+Also asserts the PR acceptance criterion: at >= 16 cores, multicast-tree +
+optimized placement reduces total CAM searches and NoC link events vs. the
+broadcast baseline, and re-placed fabrics conserve total synaptic current.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fabric
+from repro.noc import placement, topology
+
+CORE_SWEEP = (4, 16, 64)
+NEURONS = 16          # per core: kept small so the 64-core dense sweep fits
+RATE = 0.2
+
+
+def _spikes(cfg, seed=1):
+    return jax.random.bernoulli(jax.random.PRNGKey(seed), RATE,
+                                (cfg.cores, cfg.neurons_per_core))
+
+
+def scheme_sweep():
+    print("== transport scheme sweep (random connectivity, rate %.2f) ==" % RATE)
+    print(f"{'cores':>5} {'scheme':>14} {'events':>7} {'cam_searches':>12} "
+          f"{'noc_hops':>9} {'noc_energy':>11} {'noc_latency':>11}")
+    results = {}
+    for cores in CORE_SWEEP:
+        base = fabric.FabricConfig(cores=cores, neurons_per_core=NEURONS,
+                                   cam_entries_per_core=2 * NEURONS)
+        params = fabric.random_connectivity(jax.random.PRNGKey(0), base)
+        sp = _spikes(base)
+        cur_ref = None
+        for scheme in ("broadcast", "unicast", "multicast_tree"):
+            cfg = dataclasses.replace(base, noc=topology.NocConfig(scheme))
+            cur, st = jax.jit(fabric.step, static_argnums=2)(params, sp, cfg)
+            if cur_ref is None:
+                cur_ref = cur
+            assert bool(jnp.all(cur == cur_ref)), "currents must not depend on scheme"
+            results[(cores, scheme)] = st
+            print(f"{cores:>5} {scheme:>14} {float(st.events):>7.0f} "
+                  f"{float(st.cam_searches):>12.0f} {float(st.noc_hops):>9.0f} "
+                  f"{float(st.noc_energy):>11.0f} {float(st.noc_latency):>11.1f}")
+    return results
+
+
+def placement_sweep():
+    print("\n== placement sweep (clustered connectivity, scrambled) ==")
+    print(f"{'cores':>5} {'placement':>10} {'traffic_cost':>12} "
+          f"{'cam_searches':>12} {'step_searches':>13} {'step_hops':>9}")
+    results = {}
+    for cores in CORE_SWEEP:
+        cfg = fabric.FabricConfig(cores=cores, neurons_per_core=NEURONS,
+                                  cam_entries_per_core=4 * NEURONS,
+                                  noc=topology.NocConfig("multicast_tree"))
+        params = placement.clustered_connectivity(
+            0, cfg, cluster_size=NEURONS, fan_in=4)
+        a = placement.fanout_adjacency(params, cfg)
+        total = cores * NEURONS
+        placements = {
+            "identity": placement.identity_placement(total),
+            "random": placement.random_placement(7, total),
+            "greedy": placement.greedy_overlap_placement(a, cores, NEURONS),
+        }
+        sp = _spikes(cfg)
+        base_current = None
+        for name, perm in placements.items():
+            cost = placement.traffic_cost(a, perm, cores, NEURONS)
+            searches = placement.cam_search_count(a, perm, cores, NEURONS)
+            p2, cfg2 = placement.apply_placement(params, cfg, perm)
+            # spikes follow their neurons to the new layout
+            flat = np.asarray(sp).reshape(-1)
+            sp2 = np.zeros(total, dtype=bool)
+            sp2[np.asarray(perm)] = flat
+            cur2, st2 = fabric.step(p2, jnp.asarray(sp2.reshape(cores, NEURONS)),
+                                    cfg2)
+            tot = float(jnp.sum(cur2))
+            if base_current is None:
+                base_current = tot
+            assert abs(tot - base_current) < 1e-3 * max(1.0, abs(base_current)), \
+                "placement must conserve total synaptic current"
+            results[(cores, name)] = (cost, searches, st2)
+            print(f"{cores:>5} {name:>10} {cost:>12.0f} {searches:>12.0f} "
+                  f"{float(st2.cam_searches):>13.0f} {float(st2.noc_hops):>9.0f}")
+    return results
+
+
+def main():
+    scheme = scheme_sweep()
+    placed = placement_sweep()
+
+    print("\n== acceptance checks ==")
+    ok = True
+    for cores in (16, 64):
+        bcast = scheme[(cores, "broadcast")]
+        mtree = scheme[(cores, "multicast_tree")]
+        s_ok = float(mtree.cam_searches) < float(bcast.cam_searches)
+        h_ok = float(mtree.noc_hops) < float(bcast.noc_hops)
+        _, _, st_greedy = placed[(cores, "greedy")]
+        _, _, st_random = placed[(cores, "random")]
+        p_ok = (float(st_greedy.cam_searches) <= float(st_random.cam_searches)
+                and float(st_greedy.noc_hops) <= float(st_random.noc_hops))
+        print(f"  {cores:>2} cores: multicast<broadcast searches={s_ok} "
+              f"hops={h_ok}; greedy<=random placement={p_ok}")
+        ok &= s_ok and h_ok and p_ok
+    if not ok:
+        raise SystemExit("acceptance criteria FAILED")
+    print("  all passed")
+
+
+if __name__ == "__main__":
+    main()

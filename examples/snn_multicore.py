@@ -11,6 +11,8 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import dataclasses as dc
+
 import jax
 import jax.numpy as jnp
 
@@ -18,6 +20,7 @@ from repro.configs import paper_dynaps
 from repro.core import arbiter, cam, fabric
 from repro.data.pipeline import snn_batch
 from repro.models import snn
+from repro.noc import placement, topology
 from repro.optim import adamw
 
 
@@ -70,6 +73,33 @@ def main():
         e = cam.search_energy(c, n_match=1, n_mismatch=511)
         t = cam.cycle_time_ns(c)
         print(f"  {name:22s} energy {e:8.1f}  cycle {t:5.2f} ns")
+
+    # --- NoC: what the inter-core transport costs on this trained net ------
+    fab = snn.fabric_params(params, topo)
+    sp = jax.random.bernoulli(jax.random.PRNGKey(3), float(rates.mean()),
+                              (cfg.fabric.cores, cfg.fabric.neurons_per_core))
+    print("\n[noc] transport schemes (same spikes, same currents):")
+    for scheme in ("broadcast", "unicast", "multicast_tree"):
+        c2 = dc.replace(cfg.fabric, noc=topology.NocConfig(scheme))
+        _, st2 = fabric.step(fab, sp, c2)
+        print(f"  {scheme:14s} cam_searches {float(st2.cam_searches):8.0f}"
+              f"  noc_hops {float(st2.noc_hops):7.0f}"
+              f"  noc_energy {float(st2.noc_energy):9.0f}")
+
+    print("\n[noc] neuron-to-core placement (hyperedge-overlap optimizer):")
+    a = placement.fanout_adjacency(fab, cfg.fabric)
+    total = cfg.fabric.cores * cfg.fabric.neurons_per_core
+    for name, perm in {
+        "identity": placement.identity_placement(total),
+        "greedy": placement.greedy_overlap_placement(
+            a, cfg.fabric.cores, cfg.fabric.neurons_per_core),
+    }.items():
+        cost = placement.traffic_cost(a, perm, cfg.fabric.cores,
+                                      cfg.fabric.neurons_per_core)
+        srch = placement.cam_search_count(a, perm, cfg.fabric.cores,
+                                          cfg.fabric.neurons_per_core)
+        print(f"  {name:10s} traffic_cost {cost:8.0f}  cam_searches/tick"
+              f" (all-fire) {srch:8.0f}")
 
 
 if __name__ == "__main__":

@@ -7,11 +7,30 @@ Implements the system of Fig. 1: each core has
     (source tag -> synapse row, weight); an incoming event is broadcast on
     the CAM search lines and every matching synapse injects current.
 
+Between the two sits the inter-core transport, modelled by `repro.noc`: a
+2D mesh with XY dimension-order routing.  Events are delivered only to
+*subscribed* cores - cores holding at least one valid CAM entry for the
+source tag - rather than flooded everywhere, so the CAM search count (and
+its energy/time) scales with actual fan-out, not with core count.  Set
+``FabricConfig.noc.scheme = "broadcast"`` to recover the flood model (the
+seed behaviour, and the paper's implicit worst case).
+
 The fabric is pure-functional JAX: `step` maps (per-core spike vectors) to
 (per-core synaptic input currents) and an accounting record of
 latency/energy/area from the behavioural PPA models, so an SNN simulation
 built on top (models/snn.py) reports core-interface costs per timestep -
 the quantity the paper optimizes.
+
+`StepStats` fields (all scalar jnp arrays, per tick):
+  events          address events emitted (total spikes)
+  encode_latency  worst-core arbitration/encode latency (arbiter units)
+  encode_energy   address-line toggle energy (model units)
+  cam_searches    CAM search operations across all *subscribed* cores
+  cam_energy      CAM energy (model units, `repro.core.cam` calibration)
+  cam_time_ns     serialized CAM search time (ns)
+  noc_hops        mesh link traversals (multicast trees count links once)
+  noc_latency     deepest-path traversal + hottest-link serialization (ns)
+  noc_energy      `noc_hops * ppa.NOC_HOP_ENERGY` (CAM-unit domain)
 
 Tag space: a global neuron address (core_id * neurons_per_core + neuron_id)
 encoded in `tag_bits`.  This is the DYNAPs-style multi-tag scheme [6].
@@ -29,6 +48,8 @@ import jax.numpy as jnp
 from repro.core import arbiter as arb
 from repro.core import cam as cam_mod
 from repro.core import ppa
+from repro.noc import router as noc_router
+from repro.noc import topology as noc_topology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,11 +59,14 @@ class FabricConfig:
     cam_entries_per_core: int = 512     # synapses with addressable tags
     scheme: str = "hier_tree"
     cam: cam_mod.CamConfig | None = None
+    noc: noc_topology.NocConfig | None = None
 
     def __post_init__(self):
         if self.cam is None:
             object.__setattr__(self, "cam",
                                cam_mod.CamConfig(entries=self.cam_entries_per_core))
+        if self.noc is None:
+            object.__setattr__(self, "noc", noc_topology.NocConfig())
 
     @property
     def tag_bits(self) -> int:
@@ -64,6 +88,9 @@ class StepStats(NamedTuple):
     cam_searches: jnp.ndarray      # scalar: CAM search operations
     cam_energy: jnp.ndarray        # scalar: CAM model energy units
     cam_time_ns: jnp.ndarray       # scalar: serialized CAM search time
+    noc_hops: jnp.ndarray          # scalar: mesh link traversals
+    noc_latency: jnp.ndarray       # scalar: NoC delivery latency (ns)
+    noc_energy: jnp.ndarray        # scalar: NoC energy (model units)
 
 
 def int_to_bits(x: jnp.ndarray, bits: int) -> jnp.ndarray:
@@ -83,12 +110,30 @@ def random_connectivity(key, cfg: FabricConfig, fan_in: float = 0.9) -> FabricPa
     return FabricParams(tags, valid, weights, targets)
 
 
-def step(params: FabricParams, spikes: jnp.ndarray, cfg: FabricConfig
+def noc_tables(params: FabricParams, cfg: FabricConfig) -> noc_router.NocTables:
+    """Routing tables for the configured NoC scheme (build once, reuse)."""
+    return noc_router.build_tables(params.tags, params.valid,
+                                   cores=cfg.cores,
+                                   neurons_per_core=cfg.neurons_per_core,
+                                   tag_bits=cfg.tag_bits,
+                                   scheme=cfg.noc.scheme)
+
+
+def step(params: FabricParams, spikes: jnp.ndarray, cfg: FabricConfig,
+         tables: noc_router.NocTables | None = None
          ) -> tuple[jnp.ndarray, StepStats]:
     """One fabric tick.
 
     spikes: (cores, neurons_per_core) bool
+    tables: optional precomputed `noc_tables(params, cfg)` - pass it when
+        stepping in a loop (models/snn.py does) to avoid rebuilding the
+        subscription masks every tick.  They depend only on (params, cfg).
     returns: currents (cores, neurons_per_core) float32, stats
+
+    The synaptic currents are computed by the same dense CAM-match sweep
+    regardless of NoC scheme (delivery only changes *where* searches
+    happen, not their results), so currents are bit-identical across
+    schemes and to the seed broadcast implementation.
     """
     cores, n = spikes.shape
     assert n == cfg.neurons_per_core and cores == cfg.cores
@@ -107,7 +152,7 @@ def step(params: FabricParams, spikes: jnp.ndarray, cfg: FabricConfig
     neuron_global = (jnp.arange(cores)[:, None] * n + jnp.arange(n)[None, :])
     src_bits = int_to_bits(neuron_global, cfg.tag_bits)      # (cores, n, bits)
 
-    # ---- NoC broadcast + input interface: CAM search per target core ------
+    # ---- input interface: CAM match per target core -----------------------
     # match[c_tgt, entry, c_src, neuron] = entry subscribed to that source
     def core_inputs(tags_c, valid_c, weights_c, targets_c):
         # (entries, bits) vs (cores*n, bits)
@@ -122,25 +167,46 @@ def step(params: FabricParams, spikes: jnp.ndarray, cfg: FabricConfig
     currents, hits = jax.vmap(core_inputs)(params.tags, params.valid,
                                            params.weights, params.targets)
 
-    # ---- PPA accounting -----------------------------------------------------
+    # ---- NoC delivery + PPA accounting ------------------------------------
+    if tables is None:
+        tables = noc_tables(params, cfg)
+    assert tables.scheme == cfg.noc.scheme, \
+        f"tables built for {tables.scheme!r}, cfg wants {cfg.noc.scheme!r}"
+    spikes_flat = spikes.reshape(-1)
     total_events = jnp.sum(spikes).astype(jnp.float32)
     addr_seq, _ = jax.vmap(lambda s: _hat_order(s, n))(spikes)
     enc_energy = jax.vmap(
         lambda seq: arb.encode_energy_units(cfg.scheme, n, seq))(addr_seq)
-    searches = total_events * cores            # every event searched in every core
+
     valid_cnt = jnp.sum(params.valid, axis=1).astype(jnp.float32)
+    if cfg.noc.scheme == "broadcast":
+        # flood: every event searched in every core (seed accounting)
+        searches = total_events * cores
+        entries_per_search = jnp.mean(valid_cnt)
+    else:
+        # mesh: an event is searched only where some CAM entry subscribes
+        searches = jnp.sum(spikes_flat * tables.dest_counts).astype(jnp.float32)
+        swept = jnp.sum(valid_cnt[:, None] * tables.subs *
+                        spikes_flat[None, :])
+        entries_per_search = swept / jnp.maximum(searches, 1.0)
     match_per_search = jnp.sum(hits).astype(jnp.float32) / jnp.maximum(searches, 1.0)
-    mismatch_per_search = jnp.mean(valid_cnt) - match_per_search
+    mismatch_per_search = entries_per_search - match_per_search
     cam_energy = searches * _cam_energy(cfg.cam, match_per_search,
                                         mismatch_per_search)
     cam_time = searches * cam_mod.cycle_time_ns(cfg.cam)
+
+    noc_hops, noc_latency, noc_energy, _ = noc_router.noc_step_costs(
+        tables, spikes_flat)
 
     stats = StepStats(events=total_events,
                       encode_latency=jnp.max(latencies),
                       encode_energy=jnp.sum(enc_energy * jnp.sum(spikes, 1)),
                       cam_searches=searches,
                       cam_energy=cam_energy,
-                      cam_time_ns=cam_time)
+                      cam_time_ns=cam_time,
+                      noc_hops=noc_hops,
+                      noc_latency=noc_latency,
+                      noc_energy=noc_energy)
     return currents, stats
 
 

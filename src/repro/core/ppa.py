@@ -187,6 +187,24 @@ def spec_sense_close_probability_exact(n_bits: int, n_sense: int) -> float:
     return (2.0 ** n_bits - 2.0 ** (n_bits - n_sense)) / (2.0 ** n_bits - 1.0)
 
 
+# ---------------------------------------------------------------------------
+# NoC (2D-mesh inter-core transport) behavioural constants.
+#
+# The paper assumes a routing fabric between cores but only optimizes the
+# per-core interface; the mesh model follows the DYNAPs hierarchy (Moradi et
+# al., arXiv:1708.04198): per-hop router traversal latency, per-event link
+# serialization under contention, and per-traversal energy.  Latencies are ns
+# in the same 22FDX-flavoured domain as the arbiter fits above; hop energy is
+# expressed in the CAM model-unit domain (one full-window MISMATCH DC
+# dissipation) so NoC and CAM energies can be summed into a system total: one
+# hop (link drivers + router crossbar) is charged like ~35 CAM mismatch cells.
+# Calibration inputs, not claims - see DESIGN.md §2.
+# ---------------------------------------------------------------------------
+
+NOC_HOP_LATENCY_NS = 1.2         # router traversal + link flight per hop
+NOC_LINK_SERIALIZATION_NS = 0.8  # per event on the most contended link
+NOC_HOP_ENERGY = 35.0            # model units per link traversal
+
 # TPU v5e hardware model used by the roofline analysis (per chip).
 TPU_PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 TPU_HBM_BW = 819e9                # bytes/s

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
+from repro.compat import set_mesh
 from repro.launch.mesh import make_production_mesh
 from repro.models import lm
 from repro.models.config import ModelConfig
@@ -271,7 +272,7 @@ def _lower_one(cfg: ModelConfig, shape_name: str, *, multi_pod: bool,
               "kind": shape.kind, "seq_len": shape.seq_len,
               "global_batch": shape.global_batch}
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         # ---- abstract params (+ shardings) --------------------------------
         p_abs = jax.eval_shape(lambda k: lm.init_model(k, cfg),
                                jax.random.PRNGKey(0))

@@ -8,7 +8,9 @@ initialization).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import (AxisType, set_mesh, shard_map,  # noqa: F401
+                          mesh_axis_kwargs as _axis_kwargs)
 
 
 def make_production_mesh(*, multi_pod: bool = False, shape=None):
@@ -21,8 +23,7 @@ def make_production_mesh(*, multi_pod: bool = False, shape=None):
     else:
         shape = (2, 16, 16) if multi_pod else (16, 16)
         axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(tuple(shape), axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), axes, **_axis_kwargs(len(axes)))
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -30,5 +31,4 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     if data * model > n:
         raise ValueError(f"need {data * model} devices, have {n}")
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return jax.make_mesh((data, model), ("data", "model"), **_axis_kwargs(2))

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import event_router
 from repro.models import calibrate
 from repro.models.config import ModelConfig
@@ -319,7 +320,7 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
         return out.astype(q_.dtype)
 
     bspec = _bspec_for(ctx, q.shape[0])
-    return jax.shard_map(
+    return compat.shard_map(
         sharded,
         in_specs=(P(bspec, None, None, None, None),
                   P(bspec, ctx.model_axis, None, None),
@@ -415,7 +416,7 @@ def _sharded_cache_update(cache, kv, cache_len, ctx: ShardCtx):
         return jax.lax.dynamic_update_slice_in_dim(c, newv, pos, axis=1)
 
     bspec = _bspec_for(ctx, cache.shape[0])
-    return jax.shard_map(
+    return compat.shard_map(
         upd,
         in_specs=(P(bspec, ctx.model_axis, None, None),
                   P(bspec, None, None, None), P(None)),
@@ -458,7 +459,7 @@ def _prefill_attention(q, k, v, cfg: ModelConfig, window, causal,
             return flash_attention(q_, kg, vg, causal=causal,
                                    q_offset=idx * t_loc)
         bspec = _bspec_for(ctx, q.shape[0])
-        return jax.shard_map(
+        return compat.shard_map(
             sp,
             in_specs=(P(bspec, ctx.model_axis, None, None, None),
                       P(bspec, ctx.model_axis, None, None),
@@ -595,7 +596,7 @@ def _mla_decode(q_eff, q_rope, ckv, kr, cache_len, scale, ctx: ShardCtx):
         return (acc_g / jnp.maximum(lt, 1e-30)).astype(q_eff_.dtype)
 
     bspec = _bspec_for(ctx, q_eff.shape[0])
-    return jax.shard_map(
+    return compat.shard_map(
         sharded,
         in_specs=(P(bspec, None, None, None), P(bspec, None, None, None),
                   P(bspec, ctx.model_axis, None),
@@ -725,7 +726,7 @@ def moe_apply(p, x, cfg: ModelConfig, ctx: ShardCtx = LOCAL):
 
         w_specs = {k_: P(ctx.model_axis, *([None] * (v_.ndim - 1)))
                    for k_, v_ in ws.items()}
-        y, aux_l, z_l = jax.shard_map(
+        y, aux_l, z_l = compat.shard_map(
             body,
             in_specs=(P(bspec, None), P(None, None), w_specs),
             out_specs=(P(bspec, None), P(), P()),

@@ -132,8 +132,11 @@ def snn_forward(params, topology, x_seq, cfg: SNNConfig, *, impl: str = "xla",
     if account:
         sp = spikes.reshape(b * cfg.t_steps, cfg.fabric.cores,
                             cfg.fabric.neurons_per_core) > 0.5
+        # subscription/NoC tables depend only on routing state: build once,
+        # reuse across every accounted tick
+        tables = fabric_mod.noc_tables(fab, cfg.fabric)
         def acc(s_t):
-            _, st = fabric_mod.step(fab, s_t, cfg.fabric)
+            _, st = fabric_mod.step(fab, s_t, cfg.fabric, tables=tables)
             return st
         stats_all = jax.lax.map(acc, sp)
         stats = jax.tree.map(lambda a: jnp.sum(a) / (b * cfg.t_steps),

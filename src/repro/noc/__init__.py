@@ -1,0 +1,36 @@
+"""Behavioural 2D-mesh Network-on-Chip between neuromorphic cores.
+
+The core interface (arbiter out, CAM in) is modelled in `repro.core`; this
+package adds the transport fabric between the cores:
+
+  topology.py   mesh coordinates, XY dimension-order routing, hop matrices
+  multicast.py  per-source destination masks from the CAM tables; hop counts
+                for unicast replication vs. a single multicast spanning tree
+  router.py     per-link event loads, contention latency and energy
+  placement.py  neuron-to-core placement (greedy hyperedge-overlap optimizer
+                vs. random/identity baselines) + traffic-cost objective
+
+Everything that runs inside `fabric.step` is pure-functional JAX; the
+placement optimizer is an offline host-side pass (numpy) whose *output*
+feeds the JAX fabric.
+"""
+
+from repro.noc.topology import NocConfig, mesh_dims, core_coords, hop_matrix
+from repro.noc.multicast import (subscription_matrix, dest_core_mask,
+                                 unicast_hops, multicast_tree_hops,
+                                 broadcast_tree_hops)
+from repro.noc.router import NocTables, build_tables, link_loads, noc_step_costs
+from repro.noc.placement import (identity_placement, random_placement,
+                                 greedy_overlap_placement, traffic_cost,
+                                 apply_placement, fanout_adjacency,
+                                 clustered_connectivity)
+
+__all__ = [
+    "NocConfig", "mesh_dims", "core_coords", "hop_matrix",
+    "subscription_matrix", "dest_core_mask", "unicast_hops",
+    "multicast_tree_hops", "broadcast_tree_hops",
+    "NocTables", "build_tables", "link_loads", "noc_step_costs",
+    "identity_placement", "random_placement", "greedy_overlap_placement",
+    "traffic_cost", "apply_placement", "fanout_adjacency",
+    "clustered_connectivity",
+]

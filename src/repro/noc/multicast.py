@@ -1,0 +1,101 @@
+"""Multicast routing: destination masks from CAM tables + spanning-tree costs.
+
+The CAM routing LUTs already encode the network's fan-out: core c holds an
+entry with tag t iff some synapse in c subscribes to source neuron t.  The
+subscription matrix derived here is exactly the per-source destination
+bitmask a mesh multicast router needs - and its row-wise population count
+is the number of CAM searches an event actually triggers (the quantity the
+seed fabric over-counted by broadcasting to every core).
+
+Hop-count models per source neuron:
+  unicast        one routed copy per destination core: sum of Manhattan
+                 distances (replication at the source).
+  multicast tree one copy forwarded along the union of the XY paths, which
+                 under dimension-order routing is always a tree: a row trunk
+                 spanning the destination columns plus one column branch per
+                 destination column (closed form, no search).
+  broadcast      multicast tree whose destination set is every core.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.noc import topology
+
+_INF = jnp.int32(1 << 20)
+
+
+def _int_to_bits(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    return ((x[..., None] >> jnp.arange(bits - 1, -1, -1)) & 1).astype(jnp.int32)
+
+
+def subscription_matrix(tags: jnp.ndarray, valid: jnp.ndarray,
+                        cores: int, neurons_per_core: int,
+                        tag_bits: int) -> jnp.ndarray:
+    """(cores, total) bool: core c holds >=1 valid CAM entry for source s.
+
+    tags: (cores, entries, tag_bits) {0,1}; valid: (cores, entries) bool.
+    """
+    total = cores * neurons_per_core
+    src_bits = _int_to_bits(jnp.arange(total), tag_bits)        # (S, bits)
+    # eq[c, e, s] = entry e of core c stores tag s
+    eq = jnp.all(tags[:, :, None, :] == src_bits[None, None, :, :], axis=-1)
+    return jnp.any(eq & valid[:, :, None], axis=1)
+
+
+def dest_core_mask(tags, valid, cores, neurons_per_core, tag_bits) -> jnp.ndarray:
+    """(total, cores) bool: destination-core bitmask of each source neuron."""
+    return subscription_matrix(tags, valid, cores, neurons_per_core,
+                               tag_bits).T
+
+
+def unicast_hops(dest_mask: jnp.ndarray, src_core: jnp.ndarray,
+                 cores: int) -> jnp.ndarray:
+    """(S,) total mesh hops when each destination gets its own copy.
+
+    dest_mask: (S, cores) bool; src_core: (S,) int core id of each source.
+    """
+    hops = topology.hop_matrix(cores)                            # (C, C)
+    return jnp.sum(dest_mask * hops[src_core], axis=-1).astype(jnp.int32)
+
+
+def multicast_tree_hops(dest_mask: jnp.ndarray, src_core: jnp.ndarray,
+                        cores: int) -> jnp.ndarray:
+    """(S,) edge count of the XY multicast spanning tree per source.
+
+    Closed form: the union of XY paths from one source is a tree made of a
+    horizontal trunk on the source row spanning [min(sx, min dx),
+    max(sx, max dx)] plus, in every destination column, a vertical branch
+    spanning [min(sy, min dy), max(sy, max dy)] over that column's
+    destinations.  For a single destination this degenerates to the plain
+    Manhattan path, so single-destination multicast == unicast by
+    construction (tested).
+    """
+    w, _ = topology.mesh_dims(cores)
+    xy = topology.core_coords(cores)                             # (C, 2)
+    dx, dy = xy[:, 0], xy[:, 1]
+    sx, sy = xy[src_core, 0][:, None], xy[src_core, 1][:, None]  # (S, 1)
+
+    m = dest_mask.astype(bool)                                   # (S, C)
+    any_dest = jnp.any(m, axis=-1)
+
+    minx = jnp.min(jnp.where(m, dx[None, :], _INF), axis=-1, keepdims=True)
+    maxx = jnp.max(jnp.where(m, dx[None, :], -_INF), axis=-1, keepdims=True)
+    trunk = (jnp.maximum(sx, maxx) - jnp.minimum(sx, minx))[:, 0]
+
+    col = (dx[None, :, None] == jnp.arange(w)[None, None, :])    # (1, C, W)
+    in_col = m[:, :, None] & col                                 # (S, C, W)
+    miny = jnp.min(jnp.where(in_col, dy[None, :, None], _INF), axis=1)
+    maxy = jnp.max(jnp.where(in_col, dy[None, :, None], -_INF), axis=1)
+    has_col = jnp.any(in_col, axis=1)                            # (S, W)
+    branch = jnp.where(has_col,
+                       jnp.maximum(sy, maxy) - jnp.minimum(sy, miny), 0)
+    edges = trunk + jnp.sum(branch, axis=-1)
+    return jnp.where(any_dest, edges, 0).astype(jnp.int32)
+
+
+def broadcast_tree_hops(src_core: jnp.ndarray, cores: int) -> jnp.ndarray:
+    """(S,) spanning-tree edges to flood every core from each source."""
+    all_cores = jnp.ones((src_core.shape[0], cores), bool)
+    return multicast_tree_hops(all_cores, src_core, cores)

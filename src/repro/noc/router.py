@@ -1,0 +1,157 @@
+"""Mesh router model: per-link event loads, contention latency, energy.
+
+`build_tables` precomputes, from the CAM routing tables alone, everything
+the per-tick fabric step needs as plain matmuls against the spike vector:
+
+  dest_counts (S,)    cores subscribed to each source  -> CAM search count
+  hops        (S,)    mesh links traversed per event under the NoC scheme
+  depth       (S,)    deepest source->destination path -> traversal latency
+  link_table  (S, L)  events injected on each physical link per source spike
+
+All tables depend only on the routing state (tags/valid), not on spikes, so
+the hot path (`noc_step_costs`, called from `fabric.step`) is O(S * L).
+
+Latency model (constants in `repro.core.ppa`): an event pays one router
+traversal per hop (`NOC_HOP_LATENCY_NS`); concurrent events contend for
+links, so a tick's completion time adds the serialization backlog of the
+most loaded link (`NOC_LINK_SERIALIZATION_NS` per event).  Energy is
+`NOC_HOP_ENERGY` model units per link traversal, the same unit domain as
+the CAM energy model so the two can be summed into a system number.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import ppa
+from repro.noc import multicast, topology
+
+
+class NocTables(NamedTuple):
+    scheme: str
+    subs: jnp.ndarray          # (cores, S) bool subscription matrix
+    dest_counts: jnp.ndarray   # (S,) int32 subscribed-core count
+    hops: jnp.ndarray          # (S,) int32 link traversals per event
+    depth: jnp.ndarray         # (S,) int32 deepest path per event
+    link_table: jnp.ndarray    # (S, L) float32 per-link events per spike
+
+
+def _flatten_links(h_inc: jnp.ndarray, v_inc: jnp.ndarray) -> jnp.ndarray:
+    """(S, H, W-1) + (S, H-1, W) -> (S, L) in topology link order."""
+    s = h_inc.shape[0]
+    return jnp.concatenate([h_inc.reshape(s, -1), v_inc.reshape(s, -1)],
+                           axis=-1)
+
+
+def link_loads(dest_mask: jnp.ndarray, src_core: jnp.ndarray, cores: int,
+               scheme: str) -> jnp.ndarray:
+    """(S, L) events per physical link per source spike.
+
+    Unicast counts one copy per destination on every link of its XY path;
+    multicast counts each tree link once.  Broadcast is the multicast tree
+    over every core.  Closed forms via prefix sums - no path enumeration.
+    """
+    w, h = topology.mesh_dims(cores)
+    xy = topology.core_coords(cores)
+    dx, dy = xy[:, 0], xy[:, 1]
+    sx, sy = xy[src_core, 0], xy[src_core, 1]                  # (S,)
+    s_count = src_core.shape[0]
+
+    if scheme == "broadcast":
+        dest_mask = jnp.ones((s_count, cores), bool)
+        scheme = "multicast_tree"
+    m = dest_mask.astype(jnp.float32)                          # (S, C)
+
+    rows = jnp.arange(h)
+    cols_h = jnp.arange(max(w - 1, 0))
+    rows_v = jnp.arange(max(h - 1, 0))
+    cols = jnp.arange(w)
+
+    if scheme == "unicast":
+        # dests per column / per (column, row)
+        cnt_w = m @ (dx[:, None] == cols[None, :]).astype(jnp.float32)
+        at = ((dx[:, None] == cols[None, :])[:, :, None] &
+              (dy[:, None] == rows[None, :])[:, None, :])      # (C, W, H)
+        cnt_wy = jnp.einsum("sc,cwh->swh", m, at.astype(jnp.float32))
+        pre_w = jnp.cumsum(cnt_w, axis=-1)                     # (S, W)
+        tot_w = pre_w[:, -1:]
+        # horizontal link j on the source row: crossed by dests right/left
+        crossings = jnp.where(cols_h[None, :] >= sx[:, None],
+                              tot_w - pre_w[:, :-1],           # dx > j
+                              pre_w[:, :-1])                   # dx <= j
+        h_inc = (rows[None, :, None] == sy[:, None, None]) * \
+            crossings[:, None, :]                              # (S, H, W-1)
+        pre_y = jnp.cumsum(cnt_wy, axis=-1)                    # (S, W, H)
+        tot_y = pre_y[:, :, -1:]
+        v_cross = jnp.where(rows_v[None, None, :] >= sy[:, None, None],
+                            tot_y - pre_y[:, :, :-1],          # dy > i
+                            pre_y[:, :, :-1])                  # (S, W, H-1)
+        v_inc = jnp.moveaxis(v_cross, 1, 2)                    # (S, H-1, W)
+        return _flatten_links(h_inc, v_inc)
+
+    # multicast spanning tree: row trunk + one column branch per dest column
+    big = jnp.int32(1 << 20)
+    has = jnp.any(dest_mask, axis=-1, keepdims=True)
+    minx = jnp.min(jnp.where(dest_mask, dx[None, :], big), axis=-1)
+    maxx = jnp.max(jnp.where(dest_mask, dx[None, :], -big), axis=-1)
+    lo = jnp.minimum(sx, minx)[:, None]
+    hi = jnp.maximum(sx, maxx)[:, None]
+    h_span = has & (cols_h[None, :] >= lo) & (cols_h[None, :] < hi)
+    h_inc = ((rows[None, :, None] == sy[:, None, None]) &
+             h_span[:, None, :]).astype(jnp.float32)
+
+    in_col = dest_mask[:, :, None] & (dx[None, :, None] == cols[None, None, :])
+    miny = jnp.min(jnp.where(in_col, dy[None, :, None], big), axis=1)
+    maxy = jnp.max(jnp.where(in_col, dy[None, :, None], -big), axis=1)
+    has_col = jnp.any(in_col, axis=1)                          # (S, W)
+    vlo = jnp.minimum(sy[:, None], miny)[:, None, :]           # (S, 1, W)
+    vhi = jnp.maximum(sy[:, None], maxy)[:, None, :]
+    v_inc = (has_col[:, None, :] & (rows_v[None, :, None] >= vlo) &
+             (rows_v[None, :, None] < vhi)).astype(jnp.float32)
+    return _flatten_links(h_inc, v_inc)
+
+
+def build_tables(tags: jnp.ndarray, valid: jnp.ndarray, *, cores: int,
+                 neurons_per_core: int, tag_bits: int,
+                 scheme: str = "multicast_tree") -> NocTables:
+    """Precompute routing tables for `fabric.step` from the CAM state."""
+    subs = multicast.subscription_matrix(tags, valid, cores,
+                                         neurons_per_core, tag_bits)
+    dmask = subs.T                                             # (S, C)
+    total = cores * neurons_per_core
+    src_core = jnp.arange(total, dtype=jnp.int32) // neurons_per_core
+    hopmat = topology.hop_matrix(cores)
+
+    if scheme == "broadcast":
+        hops = multicast.broadcast_tree_hops(src_core, cores)
+        depth = jnp.max(hopmat[src_core], axis=-1).astype(jnp.int32)
+    elif scheme == "unicast":
+        hops = multicast.unicast_hops(dmask, src_core, cores)
+        depth = jnp.max(jnp.where(dmask, hopmat[src_core], 0),
+                        axis=-1).astype(jnp.int32)
+    else:
+        hops = multicast.multicast_tree_hops(dmask, src_core, cores)
+        depth = jnp.max(jnp.where(dmask, hopmat[src_core], 0),
+                        axis=-1).astype(jnp.int32)
+
+    return NocTables(scheme=scheme, subs=subs,
+                     dest_counts=jnp.sum(dmask, axis=-1).astype(jnp.int32),
+                     hops=hops, depth=depth,
+                     link_table=link_loads(dmask, src_core, cores, scheme))
+
+
+def noc_step_costs(tables: NocTables, spikes_flat: jnp.ndarray):
+    """Per-tick NoC cost from a flat (S,) spike vector.
+
+    Returns (hops, latency_ns, energy, per-link loads).
+    """
+    ev = spikes_flat.astype(jnp.float32)
+    hops = jnp.sum(ev * tables.hops)
+    loads = ev @ tables.link_table                             # (L,)
+    depth = jnp.max(jnp.where(spikes_flat > 0, tables.depth, 0))
+    latency = (depth.astype(jnp.float32) * ppa.NOC_HOP_LATENCY_NS +
+               jnp.max(loads, initial=0.0) * ppa.NOC_LINK_SERIALIZATION_NS)
+    energy = hops * ppa.NOC_HOP_ENERGY
+    return hops, latency, energy, loads

@@ -1,0 +1,67 @@
+"""2D-mesh topology: coordinates, XY dimension-order routing, hop matrices.
+
+Cores are laid out on a W x H grid, row-major: core c sits at
+(x, y) = (c % W, c // W).  Routing is XY dimension-order (DYNAPs-style
+deadlock-free DOR): an event first travels along x to the destination
+column, then along y.  A key property this package exploits: the union of
+the XY paths from ONE source to ANY destination set is a tree (paths can
+only branch where they turn from the row into a column), so the multicast
+spanning tree used by `multicast.py` has a closed form - no search needed.
+
+Link indexing convention (used by `router.py`):
+  horizontal link (y, x) connects (x, y) <-> (x+1, y),   x in [0, W-2]
+  vertical   link (y, x) connects (x, y) <-> (x, y+1),   y in [0, H-2]
+Links are bidirectional; loads count events traversing in either direction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class NocConfig:
+    """Inter-core transport configuration for the fabric.
+
+    scheme:
+      "broadcast"      every event is flooded to all cores (seed behaviour:
+                       CAM searches = events x cores); NoC cost = spanning
+                       tree over the full mesh per event.
+      "unicast"        mesh with one routed copy per subscribed core.
+      "multicast_tree" mesh with one XY spanning tree per event covering
+                       exactly the subscribed cores.
+    """
+    scheme: str = "multicast_tree"
+
+    def __post_init__(self):
+        if self.scheme not in ("broadcast", "unicast", "multicast_tree"):
+            raise ValueError(f"unknown NoC scheme: {self.scheme!r}")
+
+
+def mesh_dims(cores: int) -> tuple[int, int]:
+    """Near-square (W, H) factorization with W * H >= cores, W >= H."""
+    w = max(1, math.ceil(math.sqrt(cores)))
+    h = math.ceil(cores / w)
+    return w, h
+
+
+def core_coords(cores: int) -> jnp.ndarray:
+    """(cores, 2) int32 grid coordinates (x, y), row-major placement."""
+    w, _ = mesh_dims(cores)
+    c = jnp.arange(cores, dtype=jnp.int32)
+    return jnp.stack([c % w, c // w], axis=-1)
+
+
+def hop_matrix(cores: int) -> jnp.ndarray:
+    """(cores, cores) Manhattan hop distances under XY routing."""
+    xy = core_coords(cores)
+    d = jnp.abs(xy[:, None, :] - xy[None, :, :])
+    return jnp.sum(d, axis=-1).astype(jnp.int32)
+
+
+def num_links(cores: int) -> int:
+    w, h = mesh_dims(cores)
+    return h * (w - 1) + (h - 1) * w

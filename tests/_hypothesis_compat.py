@@ -1,0 +1,66 @@
+"""`hypothesis` import with a deterministic fallback sampler.
+
+The test suite uses a small slice of hypothesis (`@given` over integer /
+float / list strategies).  When the real library is installed (see
+requirements-dev.txt) it is used unchanged; otherwise this shim replays
+each property over `max_examples` pseudo-random samples from a fixed seed -
+no shrinking, but the properties still execute instead of erroring at
+collection time.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - prefer the real thing
+    from hypothesis import given, settings, strategies  # noqa: F401
+except ImportError:
+    import functools
+    import random
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample  # rng -> value
+
+    class strategies:  # noqa: N801 - mimics `hypothesis.strategies`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, unique=False):
+            def sample(rng):
+                size = rng.randint(min_size, max_size)
+                if not unique:
+                    return [elements.sample(rng) for _ in range(size)]
+                out: list = []
+                for _ in range(100 * max(size, 1)):
+                    v = elements.sample(rng)
+                    if v not in out:
+                        out.append(v)
+                    if len(out) == size:
+                        break
+                return out if len(out) >= min_size else out + [
+                    elements.sample(rng)]
+            return _Strategy(sample)
+
+    def settings(max_examples=100, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0)
+                for _ in range(getattr(wrapper, "_max_examples", 100)):
+                    fn(*args, *(s.sample(rng) for s in strats), **kwargs)
+            # keep pytest from treating the wrapped signature's parameters
+            # as fixtures: present a bare (*args, **kwargs) callable
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

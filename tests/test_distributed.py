@@ -35,7 +35,7 @@ def test_sharded_train_matches_single_device():
         from repro.train import step as ts
         from repro.data.pipeline import Pipeline, DataConfig
         from repro.parallel import sharding as shd
-        from repro.launch.mesh import make_host_mesh
+        from repro.launch.mesh import make_host_mesh, set_mesh, shard_map
 
         cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
                           n_heads=8, n_kv_heads=4, d_ff=128, vocab=128,
@@ -51,7 +51,7 @@ def test_sharded_train_matches_single_device():
 
         mesh = make_host_mesh(data=2, model=4)
         ctx = shd.make_shard_ctx(mesh, cfg)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             specs = shd.params_pspecs(state.params, cfg, ctx)
             sh = shd.to_named(specs, mesh)
             params = jax.device_put(state.params, sh)
@@ -80,7 +80,7 @@ def test_sequence_parallel_attention_matches():
         from repro.models import lm
         from repro.models.blocks import ShardCtx
         from repro.parallel import sharding as shd
-        from repro.launch.mesh import make_host_mesh
+        from repro.launch.mesh import make_host_mesh, set_mesh, shard_map
 
         cfg = ModelConfig(name="sp", family="dense", n_layers=2, d_model=48,
                           n_heads=6, n_kv_heads=2, d_ff=96, vocab=64,
@@ -92,7 +92,7 @@ def test_sequence_parallel_attention_matches():
                          remat=False)["logits"]
         mesh = make_host_mesh(data=2, model=4)
         ctx = shd.make_shard_ctx(mesh, cfg)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             got = jax.jit(lambda pp, tt: lm.forward(
                 pp, {"tokens": tt}, cfg, mode="train", ctx=ctx,
                 remat=False)["logits"])(p, toks)
@@ -107,7 +107,7 @@ def test_seq_sharded_decode_matches_local():
     run_py("""
         import jax, jax.numpy as jnp
         from repro.models.blocks import decode_attention, ShardCtx
-        from repro.launch.mesh import make_host_mesh
+        from repro.launch.mesh import make_host_mesh, set_mesh, shard_map
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         key = jax.random.PRNGKey(0)
@@ -120,7 +120,7 @@ def test_seq_sharded_decode_matches_local():
         mesh = make_host_mesh(data=2, model=4)
         ctx = ShardCtx(data_axes=("data",), model_axis="model",
                        model_size=4, enabled=True)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             ks = jax.device_put(k, NamedSharding(mesh, P("data", "model")))
             vs = jax.device_put(v, NamedSharding(mesh, P("data", "model")))
             got = jax.jit(lambda q_, k_, v_: decode_attention(
@@ -138,15 +138,15 @@ def test_compressed_psum_and_error_feedback():
         import numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.parallel import collectives as C
-        from repro.launch.mesh import make_host_mesh
+        from repro.launch.mesh import make_host_mesh, set_mesh, shard_map
 
         mesh = make_host_mesh(data=8, model=1)
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 1024))
-        with jax.set_mesh(mesh):
-            exact = jax.shard_map(
+        with set_mesh(mesh):
+            exact = shard_map(
                 lambda a: jax.lax.psum(a, "data"),
                 in_specs=P("data", None), out_specs=P(None, None))(x)
-            approx = jax.shard_map(
+            approx = shard_map(
                 lambda a: C.compressed_psum_exact_scales(a, "data"),
                 in_specs=P("data", None), out_specs=P(None, None))(x)
         rel = float(jnp.abs(exact - approx).max() / jnp.abs(exact).max())
@@ -154,13 +154,13 @@ def test_compressed_psum_and_error_feedback():
         assert rel < 0.02  # int8 per-block quantization error bound
 
         # error feedback: accumulated mean of compressed syncs converges
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             def step(res, g):
                 sync = C.make_ef_sync("data")
                 return sync(g, res)
             g = jax.random.normal(jax.random.PRNGKey(1), (8, 512)) * 0.1
             res = jnp.zeros((8, 512))      # residual is per shard
-            f = jax.shard_map(step, in_specs=(P("data", None), P("data", None)),
+            f = shard_map(step, in_specs=(P("data", None), P("data", None)),
                               out_specs=(P(None, None), P("data", None)))
             acc = jnp.zeros((1, 512))
             for i in range(20):
