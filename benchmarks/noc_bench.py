@@ -1,9 +1,9 @@
-"""NoC benchmark: broadcast vs. unicast-mesh vs. multicast-tree, and
-random vs. optimized neuron placement, over core counts 4 -> 64.
+"""NoC benchmark: broadcast vs. unicast-mesh vs. multicast-tree, random
+vs. optimized neuron placement, and old-API vs. session-API wall clock.
 
-    PYTHONPATH=src python benchmarks/noc_bench.py
+    PYTHONPATH=src python benchmarks/noc_bench.py [--cores 4,16,64] [--ticks 16]
 
-Two sweeps:
+Three sweeps:
 
 1. **Transport scheme** (fixed random connectivity, fixed spikes): per-tick
    CAM searches, NoC link events (hops) and energy for the three schemes.
@@ -14,18 +14,28 @@ Two sweeps:
 2. **Placement** (cluster-structured connectivity, scrambled): traffic
    cost and CAM searches under identity / random / greedy hyperedge-
    overlap placement, evaluated both by the analytic objective and by
-   running `fabric.step` on the re-placed fabric.
+   stepping the re-placed fabric through an `InterfaceSession`.
 
-Also asserts the PR acceptance criterion: at >= 16 cores, multicast-tree +
+3. **API wall clock**: the deprecated per-tick pattern (`fabric.step`
+   jitted once, dispatched from a Python loop every tick) against
+   `InterfaceSession.run` (one jit-compiled `lax.scan` over all ticks),
+   so the session speedup is measured, not asserted.
+
+Also asserts the PR acceptance criteria: at >= 16 cores, multicast-tree +
 optimized placement reduces total CAM searches and NoC link events vs. the
-broadcast baseline, and re-placed fabrics conserve total synaptic current.
+broadcast baseline; re-placed fabrics conserve total synaptic current; and
+the session path is not slower than the Python loop.
 """
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import gc
 import os
 import sys
+import time
+import warnings
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -34,24 +44,27 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fabric
+from repro.interface import Interface
 from repro.noc import placement, topology
 
-CORE_SWEEP = (4, 16, 64)
+DEFAULT_CORES = (4, 16, 64)
 NEURONS = 16          # per core: kept small so the 64-core dense sweep fits
 RATE = 0.2
 
 
-def _spikes(cfg, seed=1):
-    return jax.random.bernoulli(jax.random.PRNGKey(seed), RATE,
-                                (cfg.cores, cfg.neurons_per_core))
+def _spikes(cfg, seed=1, ticks=None):
+    shape = (cfg.cores, cfg.neurons_per_core)
+    if ticks is not None:
+        shape = (ticks,) + shape
+    return jax.random.bernoulli(jax.random.PRNGKey(seed), RATE, shape)
 
 
-def scheme_sweep():
+def scheme_sweep(core_sweep):
     print("== transport scheme sweep (random connectivity, rate %.2f) ==" % RATE)
     print(f"{'cores':>5} {'scheme':>14} {'events':>7} {'cam_searches':>12} "
           f"{'noc_hops':>9} {'noc_energy':>11} {'noc_latency':>11}")
     results = {}
-    for cores in CORE_SWEEP:
+    for cores in core_sweep:
         base = fabric.FabricConfig(cores=cores, neurons_per_core=NEURONS,
                                    cam_entries_per_core=2 * NEURONS)
         params = fabric.random_connectivity(jax.random.PRNGKey(0), base)
@@ -59,7 +72,7 @@ def scheme_sweep():
         cur_ref = None
         for scheme in ("broadcast", "unicast", "multicast_tree"):
             cfg = dataclasses.replace(base, noc=topology.NocConfig(scheme))
-            cur, st = jax.jit(fabric.step, static_argnums=2)(params, sp, cfg)
+            cur, st = Interface(cfg).compile(params).step(sp)
             if cur_ref is None:
                 cur_ref = cur
             assert bool(jnp.all(cur == cur_ref)), "currents must not depend on scheme"
@@ -70,12 +83,12 @@ def scheme_sweep():
     return results
 
 
-def placement_sweep():
+def placement_sweep(core_sweep):
     print("\n== placement sweep (clustered connectivity, scrambled) ==")
     print(f"{'cores':>5} {'placement':>10} {'traffic_cost':>12} "
           f"{'cam_searches':>12} {'step_searches':>13} {'step_hops':>9}")
     results = {}
-    for cores in CORE_SWEEP:
+    for cores in core_sweep:
         cfg = fabric.FabricConfig(cores=cores, neurons_per_core=NEURONS,
                                   cam_entries_per_core=4 * NEURONS,
                                   noc=topology.NocConfig("multicast_tree"))
@@ -98,8 +111,8 @@ def placement_sweep():
             flat = np.asarray(sp).reshape(-1)
             sp2 = np.zeros(total, dtype=bool)
             sp2[np.asarray(perm)] = flat
-            cur2, st2 = fabric.step(p2, jnp.asarray(sp2.reshape(cores, NEURONS)),
-                                    cfg2)
+            cur2, st2 = Interface(cfg2).compile(p2).step(
+                jnp.asarray(sp2.reshape(cores, NEURONS)))
             tot = float(jnp.sum(cur2))
             if base_current is None:
                 base_current = tot
@@ -111,13 +124,82 @@ def placement_sweep():
     return results
 
 
-def main():
-    scheme = scheme_sweep()
-    placed = placement_sweep()
+def api_timing_sweep(core_sweep, ticks, repeats=3):
+    """Deprecated per-tick Python loop vs. session scan, wall-clock."""
+    print(f"\n== API wall clock ({ticks} ticks, best of {repeats}) ==")
+    print(f"{'cores':>5} {'old_loop_ms':>12} {'session_ms':>11} {'speedup':>8}")
+    results = {}
+    for cores in core_sweep:
+        gc.collect()
+        cfg = fabric.FabricConfig(cores=cores, neurons_per_core=NEURONS,
+                                  cam_entries_per_core=2 * NEURONS)
+        params = fabric.random_connectivity(jax.random.PRNGKey(0), cfg)
+        sp_t = _spikes(cfg, ticks=ticks)
+
+        # --- old API: per-tick jit, dispatched from a Python loop ----------
+        tables = fabric.noc_tables(params, cfg)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            step_fn = jax.jit(lambda p, s: fabric.step(p, s, cfg, tables))
+
+            def old_loop():
+                acc = None
+                for t in range(ticks):
+                    cur, st = step_fn(params, sp_t[t])
+                    acc = st if acc is None else jax.tree.map(jnp.add, acc, st)
+                jax.block_until_ready((cur, acc))
+                return cur, acc
+
+            old_cur, old_acc = old_loop()                      # compile
+            t_old = min(_timed(old_loop) for _ in range(repeats))
+
+        # --- session API: one lax.scan, tables/plans prebuilt --------------
+        session = Interface(cfg).compile(params)
+
+        def session_run():
+            out = session.run(sp_t)
+            jax.block_until_ready(out)
+            return out
+
+        new_cur, new_acc = session_run()                       # compile
+        t_new = min(_timed(session_run) for _ in range(repeats))
+
+        assert bool(jnp.all(old_cur == new_cur[-1])), \
+            "session currents must match the per-tick loop"
+        assert abs(float(old_acc.events) - float(new_acc.events)) < 1e-3
+
+        speedup = t_old / max(t_new, 1e-9)
+        results[cores] = (t_old, t_new, speedup)
+        print(f"{cores:>5} {t_old * 1e3:>12.2f} {t_new * 1e3:>11.2f} "
+              f"{speedup:>7.1f}x")
+    return results
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--cores", default=",".join(map(str, DEFAULT_CORES)),
+                    help="comma-separated core counts to sweep (default: "
+                         "%(default)s)")
+    ap.add_argument("--ticks", type=int, default=16,
+                    help="timesteps for the API wall-clock sweep "
+                         "(default: %(default)s)")
+    args = ap.parse_args(argv)
+    core_sweep = tuple(int(c) for c in str(args.cores).split(",") if c)
+
+    # wall clock first: a pristine process keeps the comparison honest
+    timing = api_timing_sweep(core_sweep, args.ticks)
+    scheme = scheme_sweep(core_sweep)
+    placed = placement_sweep(core_sweep)
 
     print("\n== acceptance checks ==")
     ok = True
-    for cores in (16, 64):
+    for cores in (c for c in (16, 64) if c in core_sweep):
         bcast = scheme[(cores, "broadcast")]
         mtree = scheme[(cores, "multicast_tree")]
         s_ok = float(mtree.cam_searches) < float(bcast.cam_searches)
@@ -129,6 +211,14 @@ def main():
         print(f"  {cores:>2} cores: multicast<broadcast searches={s_ok} "
               f"hops={h_ok}; greedy<=random placement={p_ok}")
         ok &= s_ok and h_ok and p_ok
+    if args.ticks >= 8:
+        t_ok = all(speedup >= 1.0 for _, _, speedup in timing.values())
+        print(f"  session not slower than per-tick loop on all sizes: {t_ok}")
+        ok &= t_ok
+    else:
+        # a couple of ticks sit inside scheduler noise on shared CI runners;
+        # report the timing but gate only the meaningful sweeps
+        print(f"  (timing reported, not gated: --ticks {args.ticks} < 8)")
     if not ok:
         raise SystemExit("acceptance criteria FAILED")
     print("  all passed")

@@ -7,7 +7,6 @@ Each function returns (rows, derived) where rows are printable dicts and
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import cam, ppa
 from repro.core.arbiter import (Arbiter, ArbiterConfig, SCHEMES,

@@ -9,7 +9,6 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 
 from repro.ckpt.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, Pipeline

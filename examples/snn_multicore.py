@@ -5,7 +5,6 @@ schemes and the CSCD CAM against the conventional one.
     PYTHONPATH=src python examples/snn_multicore.py
 """
 
-import dataclasses
 import os
 import sys
 
@@ -17,8 +16,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import paper_dynaps
-from repro.core import arbiter, cam, fabric
+from repro.core import arbiter, cam
 from repro.data.pipeline import snn_batch
+from repro.interface import Interface, ppa_report
 from repro.models import snn
 from repro.noc import placement, topology
 from repro.optim import adamw
@@ -75,16 +75,26 @@ def main():
         print(f"  {name:22s} energy {e:8.1f}  cycle {t:5.2f} ns")
 
     # --- NoC: what the inter-core transport costs on this trained net ------
+    # one precompiled session per transport scheme; same spikes, and the
+    # currents are bit-identical across sessions (tested invariant)
     fab = snn.fabric_params(params, topo)
     sp = jax.random.bernoulli(jax.random.PRNGKey(3), float(rates.mean()),
                               (cfg.fabric.cores, cfg.fabric.neurons_per_core))
     print("\n[noc] transport schemes (same spikes, same currents):")
     for scheme in ("broadcast", "unicast", "multicast_tree"):
         c2 = dc.replace(cfg.fabric, noc=topology.NocConfig(scheme))
-        _, st2 = fabric.step(fab, sp, c2)
+        _, st2 = Interface(c2).compile(fab).step(sp)
         print(f"  {scheme:14s} cam_searches {float(st2.cam_searches):8.0f}"
               f"  noc_hops {float(st2.noc_hops):7.0f}"
               f"  noc_energy {float(st2.noc_energy):9.0f}")
+
+    # --- unified static PPA report (area / latency / energy per config) ----
+    rep = ppa_report(cfg.fabric)
+    print("\n[ppa] unified interface report:")
+    for section in ("arbiter", "cam", "noc"):
+        vals = ", ".join(f"{k}={v:.3g}" if isinstance(v, float)
+                         else f"{k}={v}" for k, v in rep[section].items())
+        print(f"  {section:8s} {vals}")
 
     print("\n[noc] neuron-to-core placement (hyperedge-overlap optimizer):")
     a = placement.fanout_adjacency(fab, cfg.fabric)

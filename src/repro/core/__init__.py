@@ -6,7 +6,8 @@
 - cam:           asynchronous CAM with CSCD / feedback / speculative sense
                  (Figs. 9-11), functional search + behavioural PPA models
 - event_router:  HAT-style hierarchical MoE token dispatch (beyond-paper)
-- fabric:        multi-core spike fabric composing the full core interface
+- fabric:        DEPRECATED shim over `repro.interface` (the unified,
+                 registry-driven core-interface API with compiled sessions)
 - ppa:           calibration constants shared by the models
 """
 

@@ -19,6 +19,13 @@ Two complementary models:
     within a few percent for burst mode - the same gap the paper reports
     between theory and pre-layout simulation).
 
+Scheme dispatch goes through `repro.interface.registry`: each architecture
+registers an :class:`ArbiterScheme` bundle of policy callables (grant
+selection, grant delay, token update, encode energy) and the simulator is
+a single generic event loop over those callables.  A new architecture
+plugs in with ``register_arbiter(name, ArbiterScheme(...))`` - no edits to
+the simulator or the fabric.
+
 TPU adaptation (DESIGN.md §2): arbitration on a deterministic machine is a
 *scheduling policy*, not an analog race.  Ties break by ascending address;
 metastability/grant-overlap become testable determinism properties.
@@ -29,11 +36,13 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import partial
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import ppa
+from repro.interface import registry as interface_registry
 
 SCHEMES = ppa.SCHEMES
 
@@ -49,6 +58,39 @@ INF = jnp.inf
 
 
 @dataclasses.dataclass(frozen=True)
+class ArbiterContext:
+    """Static per-instance quantities shared by every policy callable."""
+
+    n: int
+    lg: float               # log2(n)
+    sqrt_n: int
+    levels: int             # HAT hierarchy levels
+    fill: int               # HAT pipeline fill latency (units)
+    addrs: jnp.ndarray      # (n,) int32
+
+
+@dataclasses.dataclass(frozen=True)
+class ArbiterScheme:
+    """Registry entry: the policy bundle of one arbitration architecture.
+
+    select_key(ctx, tok_hi, tok_lo) -> (n,) float32
+        priority key among *arrived* requests; argmin wins the grant.
+    grant_delay(ctx, sel, backlog, tok_hi, tok_lo, prev_addr, granted_any)
+        -> float32 scalar delay between service start and grant.
+    token_update(ctx, sel, taken, tok_hi, tok_lo) -> (tok_hi, tok_lo)
+        optional ring-token advance after a grant.
+    encode_energy(n, addr_seq) -> float32
+        average address-line toggles per event for a grant sequence.
+    """
+
+    name: str
+    select_key: Callable
+    grant_delay: Callable
+    encode_energy: Callable
+    token_update: Optional[Callable] = None
+
+
+@dataclasses.dataclass(frozen=True)
 class ArbiterConfig:
     """Static description of one arbitration architecture instance."""
 
@@ -58,8 +100,10 @@ class ArbiterConfig:
     pipeline_fill: int = 3      # HAT: static-HC pipeline fill latency (units)
 
     def __post_init__(self):
-        if self.scheme not in SCHEMES:
-            raise ValueError(f"unknown scheme {self.scheme!r}")
+        if self.scheme not in interface_registry.ARBITERS:
+            raise ValueError(
+                f"unknown scheme {self.scheme!r}; registered arbiters: "
+                f"{', '.join(interface_registry.ARBITERS.names())}")
         if self.n & (self.n - 1):
             raise ValueError("n must be a power of two")
 
@@ -74,13 +118,15 @@ class ArbiterConfig:
 
 
 # ---------------------------------------------------------------------------
-# Discrete-event simulation.
+# Generic discrete-event simulation.
 #
 # State carried through the lax.scan (one step = one granted event):
 #   clock        server-free time (units)
 #   token_hi/lo  ring token positions (ring schemes)
 #   prev_addr    last granted address (cluster-switch penalties, HAT)
 #   served       bool mask of granted events
+# All scheme-specific decisions are deferred to the registered
+# `ArbiterScheme` policies, resolved once per trace from the static name.
 # ---------------------------------------------------------------------------
 
 
@@ -88,14 +134,20 @@ def _ring_dist(frm, to, n):
     return jnp.mod(to - frm, n)
 
 
-@partial(jax.jit, static_argnames=("scheme", "n", "levels", "fill"))
-def _simulate(request_times, scheme: str, n: int, levels: int, fill: int):
-    """Serve every finite request; returns grant_times (inf where no request)."""
-    lg = float(math.log2(n))
-    sqrt_n = int(round(math.sqrt(n)))
-    addrs = jnp.arange(n)
+@partial(jax.jit, static_argnames=("entry", "n", "levels", "fill"))
+def _simulate(request_times, entry: ArbiterScheme, n: int, levels: int,
+              fill: int):
+    """Serve every finite request; returns grant_times (inf where no request).
+
+    `entry` (not its name) is the static jit key, so re-registering a
+    scheme with ``overwrite=True`` cannot serve stale traces of the old
+    policies.
+    """
+    ctx = ArbiterContext(n=n, lg=float(math.log2(n)),
+                         sqrt_n=int(round(math.sqrt(n))), levels=levels,
+                         fill=fill, addrs=jnp.arange(n))
+    addrs = ctx.addrs
     active = jnp.isfinite(request_times)
-    num_active = jnp.sum(active)
 
     def step(state, _):
         clock, tok_hi, tok_lo, prev_addr, served, granted_any = state
@@ -103,76 +155,33 @@ def _simulate(request_times, scheme: str, n: int, levels: int, fill: int):
         arr = jnp.where(pending, request_times, INF)
 
         # --- selection policy: who is granted next -----------------------
+        # If something has arrived, the scheme's priority key decides; if
+        # the pipeline is idle, wait for the earliest arrival (addr tiebreak).
         arrived = pending & (arr <= clock)
         any_arrived = jnp.any(arrived)
-        if scheme in ("binary_tree", "greedy_tree", "hier_tree"):
-            # trees grant the lowest pending address (deterministic tie-break);
-            # if nothing has arrived yet, wait for the earliest arrival.
-            key_arrived = jnp.where(arrived, addrs.astype(jnp.float32), INF)
-            key_waiting = arr * jnp.float32(n) + addrs  # earliest arrival, addr tiebreak
-            sel = jnp.where(any_arrived, jnp.argmin(key_arrived), jnp.argmin(key_waiting))
-        else:
-            # rings grant the nearest pending request downstream of the token.
-            if scheme == "token_ring":
-                dist = _ring_dist(tok_hi, addrs, n)
-            else:  # hier_ring: two-level distance
-                hi, lo = addrs // sqrt_n, addrs % sqrt_n
-                dist = _ring_dist(tok_hi, hi, sqrt_n) * (sqrt_n + 2) + _ring_dist(
-                    jnp.where(hi == tok_hi, tok_lo, 0), lo, sqrt_n)
-            key_arrived = jnp.where(arrived, dist.astype(jnp.float32), INF)
-            key_waiting = arr * jnp.float32(n) + addrs
-            sel = jnp.where(any_arrived, jnp.argmin(key_arrived), jnp.argmin(key_waiting))
+        key_arrived = jnp.where(arrived, entry.select_key(ctx, tok_hi, tok_lo),
+                                INF)
+        key_waiting = arr * jnp.float32(n) + addrs
+        sel = jnp.where(any_arrived, jnp.argmin(key_arrived),
+                        jnp.argmin(key_waiting))
 
         sel_arr = request_times[sel]
         start = jnp.maximum(sel_arr, clock)
         backlog = clock > sel_arr  # pipeline already busy when the event arrived
 
-        # --- per-scheme grant delay --------------------------------------
-        if scheme == "binary_tree":
-            delay = jnp.float32(2.0 * (lg - 1.0))           # full round trip, always
-        elif scheme == "greedy_tree":
-            # greedy re-grant services backlog at leaf level (~3 units);
-            # a lone event still pays the full climb.
-            delay = jnp.where(backlog, 3.0, 2.0 * (lg - 1.0)).astype(jnp.float32)
-        elif scheme == "token_ring":
-            # idle: token travels dist hops then grants (+1); backlogged: the
-            # hop overlaps the previous handshake -> 1 unit/event (burst = N).
-            dist = _ring_dist(tok_hi, sel, n).astype(jnp.float32)
-            delay = jnp.where(backlog, jnp.maximum(dist, 1.0), dist + 1.0)
-        elif scheme == "hier_ring":
-            hi, lo = sel // sqrt_n, sel % sqrt_n
-            d_hi = _ring_dist(tok_hi, hi, sqrt_n).astype(jnp.float32)
-            d_lo = _ring_dist(jnp.where(hi == tok_hi, tok_lo, 0), lo,
-                              sqrt_n).astype(jnp.float32)
-            # idle: top hops + bottom hops + grant; backlogged: 1 unit/event
-            # with a 3-unit section-switch penalty (enter/exit the sub-ring).
-            delay = jnp.where(backlog,
-                              jnp.maximum(d_lo + 3.0 * d_hi, 1.0),
-                              d_hi + d_lo + 1.0)
-        else:  # hier_tree (HAT)
-            # Sparse (idle pipeline): 2 two-input stages per level = log2 N.
-            # Backlogged: 1 unit/event + 1 unit when the level-2 cluster
-            # (16 neurons) switches, + one-off pipeline fill.
-            cluster = sel // (4 ** (levels - 1))
-            prev_cluster = prev_addr // (4 ** (levels - 1))
-            switch = (cluster != prev_cluster).astype(jnp.float32)
-            first = (~granted_any).astype(jnp.float32)
-            delay = jnp.where(backlog, 1.0 + switch + first * fill, 2.0 * levels)
-            delay = delay.astype(jnp.float32)
-
+        delay = entry.grant_delay(ctx, sel, backlog, tok_hi, tok_lo,
+                                  prev_addr, granted_any).astype(jnp.float32)
         grant = start + delay
 
         # --- state update -------------------------------------------------
-        if scheme == "token_ring":
-            tok_hi = jnp.where(pending[sel], sel, tok_hi)
-        elif scheme == "hier_ring":
-            tok_hi = jnp.where(pending[sel], sel // sqrt_n, tok_hi)
-            tok_lo = jnp.where(pending[sel], sel % sqrt_n, tok_lo)
-        served = served.at[sel].set(served[sel] | pending[sel])
-        clock = jnp.where(pending[sel], grant, clock)
-        prev_addr = jnp.where(pending[sel], sel, prev_addr)
-        granted_any = granted_any | pending[sel]
-        out = (sel, jnp.where(pending[sel], grant, INF))
+        taken = pending[sel]
+        if entry.token_update is not None:
+            tok_hi, tok_lo = entry.token_update(ctx, sel, taken, tok_hi, tok_lo)
+        served = served.at[sel].set(served[sel] | taken)
+        clock = jnp.where(taken, grant, clock)
+        prev_addr = jnp.where(taken, sel, prev_addr)
+        granted_any = granted_any | taken
+        out = (sel, jnp.where(taken, grant, INF))
         return (clock, tok_hi, tok_lo, prev_addr, served, granted_any), out
 
     init = (jnp.float32(0.0), jnp.int32(0), jnp.int32(0), jnp.int32(0),
@@ -180,9 +189,8 @@ def _simulate(request_times, scheme: str, n: int, levels: int, fill: int):
     (_, _, _, _, _, _), (sel_seq, grant_seq) = jax.lax.scan(step, init, None, length=n)
 
     grant_times = jnp.full(n, INF, dtype=jnp.float32)
+    # steps beyond the active count re-select served events; .min keeps first.
     grant_times = grant_times.at[sel_seq].min(grant_seq)
-    # steps beyond num_active re-select already-served events; .min keeps first.
-    del num_active
     return grant_times
 
 
@@ -197,7 +205,8 @@ class Arbiter:
         request_times = jnp.asarray(request_times, dtype=jnp.float32)
         if request_times.shape != (self.config.n,):
             raise ValueError(f"expected shape ({self.config.n},)")
-        return _simulate(request_times, self.config.scheme, self.config.n,
+        entry = interface_registry.get_arbiter(self.config.scheme)
+        return _simulate(request_times, entry, self.config.n,
                          self.config.levels, self.config.pipeline_fill)
 
     # ---- experiment drivers (paper §III-D) -------------------------------
@@ -240,18 +249,114 @@ class Arbiter:
 
 def encode_energy_units(scheme: str, n: int, addr_seq) -> jnp.ndarray:
     """Average address-line toggles/event for a granted address sequence."""
-    addr_seq = jnp.asarray(addr_seq)
-    bits = int(math.log2(n))
-    if scheme in ("binary_tree", "greedy_tree", "token_ring", "hier_ring"):
-        return jnp.float32(bits) * jnp.ones((), jnp.float32)
-    # hier_tree: level l (0 = low) re-encoded iff the address prefix above
-    # level l changed vs. the previous event.
+    entry: ArbiterScheme = interface_registry.get_arbiter(scheme)
+    return entry.encode_energy(n, jnp.asarray(addr_seq))
+
+
+def _flat_encode_energy(n: int, addr_seq) -> jnp.ndarray:
+    """Every event re-drives all log2(N) address lines."""
+    return jnp.float32(math.log2(n)) * jnp.ones((), jnp.float32)
+
+
+def _hat_encode_energy(n: int, addr_seq) -> jnp.ndarray:
+    """Level l re-encodes its 2 bits iff the prefix above level l changed."""
     levels = max(1, round(math.log(n, 4)))
     prev = jnp.concatenate([jnp.array([-1], addr_seq.dtype), addr_seq[:-1]])
     toggles = jnp.zeros(addr_seq.shape, jnp.float32)
     for lvl in range(levels):
-        # level l's arbiter re-fires (re-encoding its 2 bits) whenever the
-        # address prefix from level l upward changes.
         changed = (addr_seq // (4 ** lvl)) != (prev // (4 ** lvl))
         toggles = toggles + jnp.where(changed, 2.0, 0.0)
     return jnp.mean(toggles)
+
+
+# ---------------------------------------------------------------------------
+# Built-in scheme policies (registered below).
+# ---------------------------------------------------------------------------
+
+
+def _tree_select(ctx, tok_hi, tok_lo):
+    """Trees grant the lowest pending address (deterministic tie-break)."""
+    return ctx.addrs.astype(jnp.float32)
+
+
+def _token_ring_select(ctx, tok_hi, tok_lo):
+    """Rings grant the nearest pending request downstream of the token."""
+    return _ring_dist(tok_hi, ctx.addrs, ctx.n).astype(jnp.float32)
+
+
+def _hier_ring_select(ctx, tok_hi, tok_lo):
+    hi, lo = ctx.addrs // ctx.sqrt_n, ctx.addrs % ctx.sqrt_n
+    dist = _ring_dist(tok_hi, hi, ctx.sqrt_n) * (ctx.sqrt_n + 2) + _ring_dist(
+        jnp.where(hi == tok_hi, tok_lo, 0), lo, ctx.sqrt_n)
+    return dist.astype(jnp.float32)
+
+
+def _binary_tree_delay(ctx, sel, backlog, tok_hi, tok_lo, prev_addr,
+                       granted_any):
+    return jnp.float32(2.0 * (ctx.lg - 1.0))       # full round trip, always
+
+
+def _greedy_tree_delay(ctx, sel, backlog, tok_hi, tok_lo, prev_addr,
+                       granted_any):
+    # greedy re-grant services backlog at leaf level (~3 units);
+    # a lone event still pays the full climb.
+    return jnp.where(backlog, 3.0, 2.0 * (ctx.lg - 1.0))
+
+
+def _token_ring_delay(ctx, sel, backlog, tok_hi, tok_lo, prev_addr,
+                      granted_any):
+    # idle: token travels dist hops then grants (+1); backlogged: the
+    # hop overlaps the previous handshake -> 1 unit/event (burst = N).
+    dist = _ring_dist(tok_hi, sel, ctx.n).astype(jnp.float32)
+    return jnp.where(backlog, jnp.maximum(dist, 1.0), dist + 1.0)
+
+
+def _hier_ring_delay(ctx, sel, backlog, tok_hi, tok_lo, prev_addr,
+                     granted_any):
+    hi, lo = sel // ctx.sqrt_n, sel % ctx.sqrt_n
+    d_hi = _ring_dist(tok_hi, hi, ctx.sqrt_n).astype(jnp.float32)
+    d_lo = _ring_dist(jnp.where(hi == tok_hi, tok_lo, 0), lo,
+                      ctx.sqrt_n).astype(jnp.float32)
+    # idle: top hops + bottom hops + grant; backlogged: 1 unit/event
+    # with a 3-unit section-switch penalty (enter/exit the sub-ring).
+    return jnp.where(backlog, jnp.maximum(d_lo + 3.0 * d_hi, 1.0),
+                     d_hi + d_lo + 1.0)
+
+
+def _hier_tree_delay(ctx, sel, backlog, tok_hi, tok_lo, prev_addr,
+                     granted_any):
+    # Sparse (idle pipeline): 2 two-input stages per level = log2 N.
+    # Backlogged: 1 unit/event + 1 unit when the level-2 cluster
+    # (16 neurons) switches, + one-off pipeline fill.
+    cluster = sel // (4 ** (ctx.levels - 1))
+    prev_cluster = prev_addr // (4 ** (ctx.levels - 1))
+    switch = (cluster != prev_cluster).astype(jnp.float32)
+    first = (~granted_any).astype(jnp.float32)
+    return jnp.where(backlog, 1.0 + switch + first * ctx.fill,
+                     2.0 * ctx.levels)
+
+
+def _token_ring_update(ctx, sel, taken, tok_hi, tok_lo):
+    return jnp.where(taken, sel, tok_hi), tok_lo
+
+
+def _hier_ring_update(ctx, sel, taken, tok_hi, tok_lo):
+    return (jnp.where(taken, sel // ctx.sqrt_n, tok_hi),
+            jnp.where(taken, sel % ctx.sqrt_n, tok_lo))
+
+
+for _entry in (
+    ArbiterScheme("binary_tree", _tree_select, _binary_tree_delay,
+                  _flat_encode_energy),
+    ArbiterScheme("greedy_tree", _tree_select, _greedy_tree_delay,
+                  _flat_encode_energy),
+    ArbiterScheme("token_ring", _token_ring_select, _token_ring_delay,
+                  _flat_encode_energy, _token_ring_update),
+    ArbiterScheme("hier_ring", _hier_ring_select, _hier_ring_delay,
+                  _flat_encode_energy, _hier_ring_update),
+    ArbiterScheme("hier_tree", _tree_select, _hier_tree_delay,
+                  _hat_encode_energy),
+):
+    if _entry.name not in interface_registry.ARBITERS:
+        interface_registry.register_arbiter(_entry.name, _entry)
+del _entry

@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ppa
+from repro.interface import registry as interface_registry
 
 # ---------------------------------------------------------------------------
 # Functional CAM semantics (bit-exact contract shared with the Pallas kernel)
@@ -131,6 +132,26 @@ A_PERIPH_PROP = 245.5 - 16 * A_ENTRY_PROP  # ~= 7.6 um^2: the CSCD block
 
 
 @dataclasses.dataclass(frozen=True)
+class CamVariant:
+    """Registry entry: circuit-level knobs of one CAM design variant.
+
+    settle_frac is the fraction of the dummy charge ramp a CSCD search
+    waits for (None for the conventional delay-line-timed design);
+    match_charge_factor scales the match-line swing energy (feedback cuts
+    it to 0.6).  Register new variants with
+    ``repro.interface.register_cam_variant`` and select them via
+    ``CamConfig(variant_name=...)``.
+    """
+
+    name: str
+    cscd: bool
+    feedback: bool
+    speculative: bool
+    settle_frac: float | None = None
+    match_charge_factor: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
 class CamConfig:
     entries: int
     bits: int = ppa.CAM_BITS
@@ -138,9 +159,12 @@ class CamConfig:
     cscd: bool = True
     feedback: bool = True
     speculative: bool = True
+    variant_name: str | None = None   # explicit registered variant override
 
     @property
     def variant(self) -> str:
+        if self.variant_name is not None:
+            return self.variant_name
         if not self.cscd:
             return "conventional"
         tags = ["cscd"]
@@ -150,6 +174,10 @@ class CamConfig:
             tags.append("ss")
         return "+".join(tags)
 
+    def variant_entry(self) -> CamVariant:
+        """The registered `CamVariant` this config resolves to."""
+        return interface_registry.get_cam_variant(self.variant)
+
 
 def dummy_charge_ns(entries: int) -> float:
     return D0 + D1 * math.log2(entries)
@@ -157,11 +185,11 @@ def dummy_charge_ns(entries: int) -> float:
 
 def cycle_time_ns(cfg: CamConfig) -> float:
     """Average search cycle time (four-phase handshake, §IV-D 'Cycle time')."""
+    v = cfg.variant_entry()
     t_d = dummy_charge_ns(cfg.entries)
-    if not cfg.cscd:
+    if not v.cscd:
         return T_REQ + (1.0 + DELAY_MARGIN) * t_d + T_RESET
-    frac = SETTLE_FRAC[(cfg.feedback, cfg.speculative)]
-    return T_REQ + frac * t_d + T_SENSE + T_RESET
+    return T_REQ + v.settle_frac * t_d + T_SENSE + T_RESET
 
 
 def spec_close_probability(cfg: CamConfig) -> float:
@@ -170,15 +198,17 @@ def spec_close_probability(cfg: CamConfig) -> float:
 
 def search_energy(cfg: CamConfig, n_match: float, n_mismatch: float) -> float:
     """Average per-search energy for a given match composition (model units)."""
-    if not cfg.cscd and (cfg.feedback or cfg.speculative):
+    if not cfg.cscd and (cfg.feedback or cfg.speculative) \
+            and cfg.variant_name is None:
         raise ValueError("feedback/speculative require the CSCD architecture")
-    e_match = M_CHARGE * (0.6 if cfg.feedback else 1.0)
-    if cfg.speculative:
+    v = cfg.variant_entry()
+    e_match = M_CHARGE * v.match_charge_factor
+    if v.speculative:
         p = spec_close_probability(cfg)
         e_mismatch = (1.0 - p) * 1.0 + p * E_SENSE_NODE
     else:
         e_mismatch = 1.0
-    fixed = F_CONV + (E_CSCD_NET if cfg.cscd else 0.0)
+    fixed = F_CONV + (E_CSCD_NET if v.cscd else 0.0)
     return n_match * e_match + n_mismatch * e_mismatch + fixed
 
 
@@ -193,18 +223,19 @@ def search_energy_for_queries(cfg: CamConfig, tags, valid, queries) -> jnp.ndarr
 
 
 def _energy_jnp(cfg: CamConfig, n_match, n_mismatch):
-    e_match = M_CHARGE * (0.6 if cfg.feedback else 1.0)
-    if cfg.speculative:
+    v = cfg.variant_entry()
+    e_match = M_CHARGE * v.match_charge_factor
+    if v.speculative:
         p = spec_close_probability(cfg)
         e_mm = (1.0 - p) + p * E_SENSE_NODE
     else:
         e_mm = 1.0
-    fixed = F_CONV + (E_CSCD_NET if cfg.cscd else 0.0)
+    fixed = F_CONV + (E_CSCD_NET if v.cscd else 0.0)
     return n_match * e_match + n_mismatch * e_mm + fixed
 
 
 def area_um2(cfg: CamConfig) -> float:
-    if cfg.cscd:
+    if cfg.variant_entry().cscd:
         return A_ENTRY_PROP * cfg.entries + A_PERIPH_PROP
     return A_ENTRY_BASE * cfg.entries + A_PERIPH_BASE
 
@@ -252,3 +283,25 @@ class CamArray:
 
     def first_match(self, query):
         return first_match(self.tags, self.valid, query)
+
+
+# ---------------------------------------------------------------------------
+# Built-in variants (names match `CamConfig.variant` for the flag combos).
+# ---------------------------------------------------------------------------
+
+for _v in (
+    CamVariant("conventional", cscd=False, feedback=False, speculative=False),
+    CamVariant("cscd", cscd=True, feedback=False, speculative=False,
+               settle_frac=SETTLE_FRAC[(False, False)]),
+    CamVariant("cscd+fb", cscd=True, feedback=True, speculative=False,
+               settle_frac=SETTLE_FRAC[(True, False)],
+               match_charge_factor=0.6),
+    CamVariant("cscd+ss", cscd=True, feedback=False, speculative=True,
+               settle_frac=SETTLE_FRAC[(False, True)]),
+    CamVariant("cscd+fb+ss", cscd=True, feedback=True, speculative=True,
+               settle_frac=SETTLE_FRAC[(True, True)],
+               match_charge_factor=0.6),
+):
+    if _v.name not in interface_registry.CAM_VARIANTS:
+        interface_registry.register_cam_variant(_v.name, _v)
+del _v

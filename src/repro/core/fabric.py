@@ -1,53 +1,46 @@
-"""Multi-core spike-routing fabric: cores composed through the core interface.
+"""DEPRECATED shim over `repro.interface` - the multi-core spike fabric.
 
-Implements the system of Fig. 1: each core has
-  * an **output interface** - arbiter + AER encoding pipeline (HAT by
-    default) that serializes the core's spike vector into address events,
-  * an **input interface** - a CAM routing LUT whose entries are
-    (source tag -> synapse row, weight); an incoming event is broadcast on
-    the CAM search lines and every matching synapse injects current.
+This module used to own the per-tick core-interface pipeline (arbiter +
+AER encode -> NoC transport -> CAM routing LUT).  That implementation now
+lives in `repro.interface` as a registry-driven, compile-once API:
 
-Between the two sits the inter-core transport, modelled by `repro.noc`: a
-2D mesh with XY dimension-order routing.  Events are delivered only to
-*subscribed* cores - cores holding at least one valid CAM entry for the
-source tag - rather than flooded everywhere, so the CAM search count (and
-its energy/time) scales with actual fan-out, not with core count.  Set
-``FabricConfig.noc.scheme = "broadcast"`` to recover the flood model (the
-seed behaviour, and the paper's implicit worst case).
+    from repro.interface import Interface
 
-The fabric is pure-functional JAX: `step` maps (per-core spike vectors) to
-(per-core synaptic input currents) and an accounting record of
-latency/energy/area from the behavioural PPA models, so an SNN simulation
-built on top (models/snn.py) reports core-interface costs per timestep -
-the quantity the paper optimizes.
+    session = Interface(cfg).compile(params)     # plans/tables built once
+    currents, stats = session.run(spikes_TxCxN)  # jit + lax.scan over ticks
 
-`StepStats` fields (all scalar jnp arrays, per tick):
-  events          address events emitted (total spikes)
-  encode_latency  worst-core arbitration/encode latency (arbiter units)
-  encode_energy   address-line toggle energy (model units)
-  cam_searches    CAM search operations across all *subscribed* cores
-  cam_energy      CAM energy (model units, `repro.core.cam` calibration)
-  cam_time_ns     serialized CAM search time (ns)
-  noc_hops        mesh link traversals (multicast trees count links once)
-  noc_latency     deepest-path traversal + hottest-link serialization (ns)
-  noc_energy      `noc_hops * ppa.NOC_HOP_ENERGY` (CAM-unit domain)
+Everything here is kept so seed call sites keep working bit-for-bit:
 
-Tag space: a global neuron address (core_id * neurons_per_core + neuron_id)
-encoded in `tag_bits`.  This is the DYNAPs-style multi-tag scheme [6].
+  * `FabricConfig` remains the legacy config type (now *validating* that an
+    explicit ``cam=CamConfig(...)`` agrees with ``cam_entries_per_core``),
+  * `FabricParams` / `StepStats` / `int_to_bits` / `random_connectivity`
+    re-export the `repro.interface` definitions,
+  * `step` delegates to `repro.interface.pipeline.interface_tick` and emits
+    a `DeprecationWarning`.
+
+See `StepStats` (repro.interface.stats) for the per-tick accounting
+fields; tag space is a global neuron address (core_id * neurons_per_core
++ neuron_id) encoded in `tag_bits` - the DYNAPs-style multi-tag scheme [6].
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import NamedTuple
+import warnings
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import arbiter as arb
 from repro.core import cam as cam_mod
-from repro.core import ppa
+from repro.interface import pipeline as _pipeline
+from repro.interface import report as _report
+from repro.interface.config import resolve_cam
+from repro.interface.stats import StepStats  # noqa: F401  (re-export)
+from repro.interface.types import (  # noqa: F401  (re-exports)
+    FabricParams,
+    int_to_bits,
+    random_connectivity,
+)
 from repro.noc import router as noc_router
 from repro.noc import topology as noc_topology
 
@@ -56,15 +49,15 @@ from repro.noc import topology as noc_topology
 class FabricConfig:
     cores: int = 4
     neurons_per_core: int = 256
-    cam_entries_per_core: int = 512     # synapses with addressable tags
+    cam_entries_per_core: int | None = None  # defaults to 512 w/o explicit cam
     scheme: str = "hier_tree"
     cam: cam_mod.CamConfig | None = None
     noc: noc_topology.NocConfig | None = None
 
     def __post_init__(self):
-        if self.cam is None:
-            object.__setattr__(self, "cam",
-                               cam_mod.CamConfig(entries=self.cam_entries_per_core))
+        cam, entries = resolve_cam(self.cam, self.cam_entries_per_core)
+        object.__setattr__(self, "cam", cam)
+        object.__setattr__(self, "cam_entries_per_core", entries)
         if self.noc is None:
             object.__setattr__(self, "noc", noc_topology.NocConfig())
 
@@ -73,160 +66,32 @@ class FabricConfig:
         return max(1, math.ceil(math.log2(self.cores * self.neurons_per_core)))
 
 
-class FabricParams(NamedTuple):
-    """Learnable/configurable routing state."""
-    tags: jnp.ndarray      # (cores, entries, tag_bits) {0,1} stored source tags
-    valid: jnp.ndarray     # (cores, entries) bool
-    weights: jnp.ndarray   # (cores, entries) float synaptic weight
-    targets: jnp.ndarray   # (cores, entries) int32 target neuron within core
-
-
-class StepStats(NamedTuple):
-    events: jnp.ndarray            # scalar: total address events this tick
-    encode_latency: jnp.ndarray    # scalar: max grant latency (units)
-    encode_energy: jnp.ndarray     # scalar: address-line toggles
-    cam_searches: jnp.ndarray      # scalar: CAM search operations
-    cam_energy: jnp.ndarray        # scalar: CAM model energy units
-    cam_time_ns: jnp.ndarray       # scalar: serialized CAM search time
-    noc_hops: jnp.ndarray          # scalar: mesh link traversals
-    noc_latency: jnp.ndarray       # scalar: NoC delivery latency (ns)
-    noc_energy: jnp.ndarray        # scalar: NoC energy (model units)
-
-
-def int_to_bits(x: jnp.ndarray, bits: int) -> jnp.ndarray:
-    return ((x[..., None] >> jnp.arange(bits - 1, -1, -1)) & 1).astype(jnp.int32)
-
-
-def random_connectivity(key, cfg: FabricConfig, fan_in: float = 0.9) -> FabricParams:
-    """Random routing tables: each CAM entry subscribes to a random source."""
-    k1, k2, k3, k4 = jax.random.split(key, 4)
-    total = cfg.cores * cfg.neurons_per_core
-    src = jax.random.randint(k1, (cfg.cores, cfg.cam.entries), 0, total)
-    tags = int_to_bits(src, cfg.tag_bits)
-    valid = jax.random.bernoulli(k2, fan_in, (cfg.cores, cfg.cam.entries))
-    weights = jax.random.normal(k3, (cfg.cores, cfg.cam.entries)) * 0.5 + 1.0
-    targets = jax.random.randint(k4, (cfg.cores, cfg.cam.entries), 0,
-                                 cfg.neurons_per_core)
-    return FabricParams(tags, valid, weights, targets)
-
-
 def noc_tables(params: FabricParams, cfg: FabricConfig) -> noc_router.NocTables:
     """Routing tables for the configured NoC scheme (build once, reuse)."""
-    return noc_router.build_tables(params.tags, params.valid,
-                                   cores=cfg.cores,
-                                   neurons_per_core=cfg.neurons_per_core,
-                                   tag_bits=cfg.tag_bits,
-                                   scheme=cfg.noc.scheme)
+    return _pipeline.build_tables(params, cfg)
 
 
 def step(params: FabricParams, spikes: jnp.ndarray, cfg: FabricConfig,
          tables: noc_router.NocTables | None = None
          ) -> tuple[jnp.ndarray, StepStats]:
-    """One fabric tick.
+    """One fabric tick.  DEPRECATED: use `repro.interface.Interface`.
 
     spikes: (cores, neurons_per_core) bool
     tables: optional precomputed `noc_tables(params, cfg)` - pass it when
-        stepping in a loop (models/snn.py does) to avoid rebuilding the
-        subscription masks every tick.  They depend only on (params, cfg).
+        stepping in a loop to avoid rebuilding the subscription masks every
+        tick.  They depend only on (params, cfg).
     returns: currents (cores, neurons_per_core) float32, stats
 
-    The synaptic currents are computed by the same dense CAM-match sweep
-    regardless of NoC scheme (delivery only changes *where* searches
-    happen, not their results), so currents are bit-identical across
-    schemes and to the seed broadcast implementation.
+    The currents are bit-identical to `InterfaceSession.run` on the same
+    params for every NoC scheme (both delegate to the same tick).
     """
-    cores, n = spikes.shape
-    assert n == cfg.neurons_per_core and cores == cfg.cores
-
-    # ---- output interface: arbitrate + encode each core's spikes ----------
-    def encode_core(core_spikes):
-        req = jnp.where(core_spikes, 0.0, jnp.inf).astype(jnp.float32)
-        grants = arb.Arbiter(arb.ArbiterConfig(cfg.scheme, n)).simulate(req)
-        lat = jnp.where(jnp.any(core_spikes),
-                        jnp.max(jnp.where(jnp.isfinite(grants), grants, 0.0)), 0.0)
-        return lat
-
-    latencies = jax.vmap(encode_core)(spikes)
-
-    # global source tags of every spiking neuron (dense mask form)
-    neuron_global = (jnp.arange(cores)[:, None] * n + jnp.arange(n)[None, :])
-    src_bits = int_to_bits(neuron_global, cfg.tag_bits)      # (cores, n, bits)
-
-    # ---- input interface: CAM match per target core -----------------------
-    # match[c_tgt, entry, c_src, neuron] = entry subscribed to that source
-    def core_inputs(tags_c, valid_c, weights_c, targets_c):
-        # (entries, bits) vs (cores*n, bits)
-        flat_bits = src_bits.reshape(-1, cfg.tag_bits)
-        eq = jnp.all(tags_c[:, None, :] == flat_bits[None, :, :], axis=-1)
-        hit = eq & valid_c[:, None] & spikes.reshape(-1)[None, :]
-        entry_drive = jnp.sum(hit, axis=1).astype(jnp.float32)  # events per entry
-        contrib = entry_drive * weights_c
-        currents = jnp.zeros((n,), jnp.float32).at[targets_c].add(contrib)
-        return currents, jnp.sum(hit)
-
-    currents, hits = jax.vmap(core_inputs)(params.tags, params.valid,
-                                           params.weights, params.targets)
-
-    # ---- NoC delivery + PPA accounting ------------------------------------
-    if tables is None:
-        tables = noc_tables(params, cfg)
-    assert tables.scheme == cfg.noc.scheme, \
-        f"tables built for {tables.scheme!r}, cfg wants {cfg.noc.scheme!r}"
-    spikes_flat = spikes.reshape(-1)
-    total_events = jnp.sum(spikes).astype(jnp.float32)
-    addr_seq, _ = jax.vmap(lambda s: _hat_order(s, n))(spikes)
-    enc_energy = jax.vmap(
-        lambda seq: arb.encode_energy_units(cfg.scheme, n, seq))(addr_seq)
-
-    valid_cnt = jnp.sum(params.valid, axis=1).astype(jnp.float32)
-    if cfg.noc.scheme == "broadcast":
-        # flood: every event searched in every core (seed accounting)
-        searches = total_events * cores
-        entries_per_search = jnp.mean(valid_cnt)
-    else:
-        # mesh: an event is searched only where some CAM entry subscribes
-        searches = jnp.sum(spikes_flat * tables.dest_counts).astype(jnp.float32)
-        swept = jnp.sum(valid_cnt[:, None] * tables.subs *
-                        spikes_flat[None, :])
-        entries_per_search = swept / jnp.maximum(searches, 1.0)
-    match_per_search = jnp.sum(hits).astype(jnp.float32) / jnp.maximum(searches, 1.0)
-    mismatch_per_search = entries_per_search - match_per_search
-    cam_energy = searches * _cam_energy(cfg.cam, match_per_search,
-                                        mismatch_per_search)
-    cam_time = searches * cam_mod.cycle_time_ns(cfg.cam)
-
-    noc_hops, noc_latency, noc_energy, _ = noc_router.noc_step_costs(
-        tables, spikes_flat)
-
-    stats = StepStats(events=total_events,
-                      encode_latency=jnp.max(latencies),
-                      encode_energy=jnp.sum(enc_energy * jnp.sum(spikes, 1)),
-                      cam_searches=searches,
-                      cam_energy=cam_energy,
-                      cam_time_ns=cam_time,
-                      noc_hops=noc_hops,
-                      noc_latency=noc_latency,
-                      noc_energy=noc_energy)
-    return currents, stats
-
-
-def _hat_order(spikes, n):
-    idx = jnp.arange(n, dtype=jnp.int32)
-    key = jnp.where(spikes, idx, n)
-    return jnp.sort(key), jnp.sum(spikes)
-
-
-def _cam_energy(cfg: cam_mod.CamConfig, n_match, n_mismatch):
-    return cam_mod._energy_jnp(cfg, n_match, n_mismatch)
+    warnings.warn(
+        "fabric.step is deprecated; use repro.interface.Interface(cfg)"
+        ".compile(params).run(spikes) for the precompiled scan-based API",
+        DeprecationWarning, stacklevel=2)
+    return _pipeline.interface_tick(params, spikes, cfg, tables)
 
 
 def interface_area_um2(cfg: FabricConfig) -> dict:
     """Static area report for one core's interface (model units/um^2)."""
-    return {
-        "arbiter_norm_area": arb.area_normalized(cfg.scheme, cfg.neurons_per_core),
-        "arbiter_units": arb.area_units(cfg.scheme, cfg.neurons_per_core),
-        "cam_um2": cam_mod.area_um2(cfg.cam),
-        "cam_um2_baseline": cam_mod.area_um2(
-            cam_mod.CamConfig(cfg.cam.entries, cscd=False, feedback=False,
-                              speculative=False)),
-    }
+    return _report.interface_area_um2(cfg)

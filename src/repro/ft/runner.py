@@ -20,7 +20,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.ckpt.manager import CheckpointManager
 

@@ -1,0 +1,104 @@
+"""`repro.interface` - the unified core-interface API.
+
+The paper's core interface is a pipeline - arbiter tree -> AER encode ->
+NoC transport -> CAM routing LUT.  This package exposes that pipeline as
+one composable, precompiled surface:
+
+    from repro.interface import Interface, InterfaceConfig
+
+    cfg = InterfaceConfig(cores=16, neurons_per_core=64,
+                          cam_entries_per_core=128,
+                          noc=NocConfig("multicast_tree"))
+    params = random_connectivity(jax.random.PRNGKey(0), cfg)
+    session = Interface(cfg).compile(params)      # plans + tables built ONCE
+    currents, stats = session.run(spikes_TxCxN)   # jit + lax.scan over ticks
+    stats.summary(ticks=T)                        # per-tick means
+
+Registry contract
+-----------------
+Scheme selection is registry-driven (`repro.interface.registry`), not
+string-``if`` dispatch.  Three registries cover the three pipeline stages;
+each maps a scheme *name* to an *entry* object owned by the implementing
+module:
+
+  ``register_arbiter(name, entry)``
+      entry: :class:`repro.core.arbiter.ArbiterScheme` - policy callables
+      ``select_key`` / ``grant_delay`` / ``token_update`` /
+      ``encode_energy``.  The generic discrete-event simulator calls them;
+      a new arbitration architecture never edits the simulator.
+
+  ``register_cam_variant(name, entry)``
+      entry: :class:`repro.core.cam.CamVariant` - circuit-level knobs
+      (``cscd`` / ``feedback`` / ``speculative`` flags, ``settle_frac``,
+      ``match_charge_factor``) consumed by the CAM cycle-time and energy
+      models.  ``CamConfig(variant_name=...)`` selects a registered entry.
+
+  ``register_noc_scheme(name, entry)``
+      entry: :class:`repro.noc.router.NocScheme` - transport callables
+      ``expand_dests`` / ``hops`` / ``link_loads`` / ``cam_accounting``.
+      `build_tables` and the per-tick cost accounting dispatch through the
+      entry; `NocConfig` validates names against the registry.
+
+Registration happens at import of the implementing module (the built-ins
+register themselves at the bottom of ``arbiter.py`` / ``cam.py`` /
+``router.py``).  Names must be unique; pass ``overwrite=True`` to replace
+an entry deliberately.  Entries must be trace-safe: they are resolved once
+per jit trace from a static scheme name, after which the hot path is pure
+attribute access.
+
+Everything below `registry` is imported lazily (PEP 562) so that the core
+and noc layers can import `repro.interface.registry` without cycles.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.interface import registry  # noqa: F401  (dependency-free)
+from repro.interface.registry import (  # noqa: F401
+    ARBITERS,
+    CAM_VARIANTS,
+    NOC_SCHEMES,
+    get_arbiter,
+    get_cam_variant,
+    get_noc_scheme,
+    register_arbiter,
+    register_cam_variant,
+    register_noc_scheme,
+)
+
+_LAZY_EXPORTS = {
+    "Interface": "repro.interface.session",
+    "InterfaceSession": "repro.interface.session",
+    "InterfaceConfig": "repro.interface.config",
+    "as_interface_config": "repro.interface.config",
+    "StepStats": "repro.interface.stats",
+    "InterfaceParams": "repro.interface.types",
+    "FabricParams": "repro.interface.types",
+    "int_to_bits": "repro.interface.types",
+    "random_connectivity": "repro.interface.types",
+    "interface_tick": "repro.interface.pipeline",
+    "build_tables": "repro.interface.pipeline",
+    "ppa_report": "repro.interface.report",
+    "interface_area_um2": "repro.interface.report",
+}
+
+__all__ = sorted([
+    "registry", "ARBITERS", "CAM_VARIANTS", "NOC_SCHEMES",
+    "register_arbiter", "register_cam_variant", "register_noc_scheme",
+    "get_arbiter", "get_cam_variant", "get_noc_scheme",
+    *_LAZY_EXPORTS,
+])
+
+
+def __getattr__(name: str):
+    module = _LAZY_EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(f"module 'repro.interface' has no attribute {name!r}")
+    value = getattr(importlib.import_module(module), name)
+    globals()[name] = value     # cache for subsequent lookups
+    return value
+
+
+def __dir__():
+    return __all__

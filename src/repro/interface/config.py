@@ -1,0 +1,96 @@
+"""`InterfaceConfig`: the validated static description of one fabric.
+
+Field-compatible with the legacy `repro.core.fabric.FabricConfig` (same
+attribute names), so either type drives `Interface` / `interface_tick`.
+Unlike the legacy config, construction is *validated*:
+
+  * ``cam_entries_per_core`` and an explicit ``cam=CamConfig(...)`` must
+    agree (the legacy config silently ignored the former),
+  * the arbiter scheme and the CAM variant must be registered,
+  * the NoC scheme is validated by `NocConfig` itself.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core import cam as cam_mod
+from repro.noc import topology as noc_topology
+
+
+def resolve_cam(cam: cam_mod.CamConfig | None, entries: int | None,
+                default_entries: int = 512):
+    """Shared cam/cam_entries_per_core reconciliation.
+
+    Returns the effective ``(cam, entries)`` pair; raises `ValueError`
+    when an explicit config and an explicit entry count disagree.
+    """
+    if cam is None:
+        cam = cam_mod.CamConfig(entries=default_entries if entries is None
+                                else entries)
+    elif entries is not None and cam.entries != entries:
+        raise ValueError(
+            f"cam_entries_per_core={entries} conflicts with explicit "
+            f"cam=CamConfig(entries={cam.entries}); pass one or make them agree")
+    return cam, cam.entries
+
+
+@dataclasses.dataclass(frozen=True)
+class InterfaceConfig:
+    """Static description of the full core-interface pipeline.
+
+    scheme:  arbiter architecture (registry: `repro.interface.ARBITERS`)
+    cam:     CAM variant/size (registry: `repro.interface.CAM_VARIANTS`)
+    noc:     transport scheme (registry: `repro.interface.NOC_SCHEMES`)
+    """
+
+    cores: int = 4
+    neurons_per_core: int = 256
+    cam_entries_per_core: int | None = None   # defaults to 512 w/o explicit cam
+    scheme: str = "hier_tree"
+    cam: cam_mod.CamConfig | None = None
+    noc: noc_topology.NocConfig | None = None
+
+    def __post_init__(self):
+        cam, entries = resolve_cam(self.cam, self.cam_entries_per_core)
+        object.__setattr__(self, "cam", cam)
+        object.__setattr__(self, "cam_entries_per_core", entries)
+        if self.noc is None:
+            object.__setattr__(self, "noc", noc_topology.NocConfig())
+        # Fail at construction, not at first tick, on unregistered schemes.
+        from repro.core import arbiter as _arb  # deferred: avoids import cycle
+        from repro.interface import registry
+        if self.scheme not in registry.ARBITERS:
+            raise ValueError(
+                f"unknown arbiter scheme {self.scheme!r}; registered: "
+                f"{', '.join(registry.ARBITERS.names())}")
+        if self.cam.variant not in registry.CAM_VARIANTS:
+            raise ValueError(
+                f"unknown CAM variant {self.cam.variant!r}; registered: "
+                f"{', '.join(registry.CAM_VARIANTS.names())}")
+        del _arb
+
+    @property
+    def tag_bits(self) -> int:
+        return max(1, math.ceil(math.log2(self.cores * self.neurons_per_core)))
+
+    @classmethod
+    def from_fabric(cls, cfg) -> "InterfaceConfig":
+        """Lift a legacy `FabricConfig` into a validated `InterfaceConfig`."""
+        return cls(cores=cfg.cores, neurons_per_core=cfg.neurons_per_core,
+                   scheme=cfg.scheme, cam=cfg.cam, noc=cfg.noc)
+
+    def fabric(self):
+        """The equivalent legacy `FabricConfig` (for un-migrated call sites)."""
+        from repro.core import fabric as fabric_mod
+        return fabric_mod.FabricConfig(
+            cores=self.cores, neurons_per_core=self.neurons_per_core,
+            scheme=self.scheme, cam=self.cam, noc=self.noc)
+
+
+def as_interface_config(config) -> InterfaceConfig:
+    """Accept an `InterfaceConfig` or any field-compatible legacy config."""
+    if isinstance(config, InterfaceConfig):
+        return config
+    return InterfaceConfig.from_fabric(config)

@@ -1,0 +1,133 @@
+"""The core-interface tick: arbiter -> AER encode -> NoC -> CAM, once.
+
+This module owns the per-tick computation that used to live in
+`repro.core.fabric.step`.  It is pure-functional JAX, duck-typed over the
+config (`InterfaceConfig` or the legacy `FabricConfig`), and dispatches
+every scheme decision through `repro.interface.registry` - no string-``if``
+chains in the hot path.
+
+The synaptic currents are computed by the same dense CAM-match sweep
+regardless of NoC scheme (delivery only changes *where* searches happen,
+not their results), so currents are bit-identical across schemes and to
+the seed broadcast implementation - `tests/test_interface.py` asserts it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import arbiter as arb
+from repro.core import cam as cam_mod
+from repro.interface import registry as interface_registry
+from repro.interface.stats import StepStats
+from repro.interface.types import int_to_bits
+from repro.noc import router as noc_router
+
+
+def build_tables(params, cfg) -> noc_router.NocTables:
+    """NoC routing tables for the configured scheme (build once, reuse)."""
+    return noc_router.build_tables(params.tags, params.valid,
+                                   cores=cfg.cores,
+                                   neurons_per_core=cfg.neurons_per_core,
+                                   tag_bits=cfg.tag_bits,
+                                   scheme=cfg.noc.scheme)
+
+
+def _hat_order(spikes, n):
+    idx = jnp.arange(n, dtype=jnp.int32)
+    key = jnp.where(spikes, idx, n)
+    return jnp.sort(key), jnp.sum(spikes)
+
+
+def interface_tick(params, spikes: jnp.ndarray, cfg,
+                   tables: noc_router.NocTables | None = None,
+                   arb_cfg: arb.ArbiterConfig | None = None
+                   ) -> tuple[jnp.ndarray, StepStats]:
+    """One fabric tick.
+
+    spikes:  (cores, neurons_per_core) bool
+    tables:  optional precomputed `build_tables(params, cfg)` - pass it when
+        stepping in a loop (`InterfaceSession` does) to avoid rebuilding the
+        subscription masks every tick.  They depend only on (params, cfg).
+    arb_cfg: optional prebuilt arbiter plan (the session builds it once).
+    returns: currents (cores, neurons_per_core) float32, `StepStats`
+    """
+    cores, n = spikes.shape
+    if n != cfg.neurons_per_core or cores != cfg.cores:
+        raise ValueError(
+            f"spikes shape ({cores}, {n}) does not match config "
+            f"({cfg.cores}, {cfg.neurons_per_core})")
+    if spikes.dtype != jnp.bool_:
+        spikes = spikes > 0
+
+    if tables is None:
+        tables = build_tables(params, cfg)
+    if tables.scheme != cfg.noc.scheme:
+        raise ValueError(
+            f"NoC tables were built for scheme {tables.scheme!r} but the "
+            f"config requests {cfg.noc.scheme!r}; rebuild them with "
+            f"repro.interface.build_tables(params, cfg)")
+    if arb_cfg is None:
+        arb_cfg = arb.ArbiterConfig(cfg.scheme, n)
+    noc_scheme = interface_registry.get_noc_scheme(cfg.noc.scheme)
+    arbiter = arb.Arbiter(arb_cfg)
+
+    # ---- output interface: arbitrate + encode each core's spikes ----------
+    def encode_core(core_spikes):
+        req = jnp.where(core_spikes, 0.0, jnp.inf).astype(jnp.float32)
+        grants = arbiter.simulate(req)
+        lat = jnp.where(jnp.any(core_spikes),
+                        jnp.max(jnp.where(jnp.isfinite(grants), grants, 0.0)), 0.0)
+        return lat
+
+    latencies = jax.vmap(encode_core)(spikes)
+
+    # global source tags of every spiking neuron (dense mask form)
+    neuron_global = (jnp.arange(cores)[:, None] * n + jnp.arange(n)[None, :])
+    src_bits = int_to_bits(neuron_global, cfg.tag_bits)      # (cores, n, bits)
+
+    # ---- input interface: CAM match per target core -----------------------
+    # match[c_tgt, entry, c_src, neuron] = entry subscribed to that source
+    def core_inputs(tags_c, valid_c, weights_c, targets_c):
+        # (entries, bits) vs (cores*n, bits)
+        flat_bits = src_bits.reshape(-1, cfg.tag_bits)
+        eq = jnp.all(tags_c[:, None, :] == flat_bits[None, :, :], axis=-1)
+        hit = eq & valid_c[:, None] & spikes.reshape(-1)[None, :]
+        entry_drive = jnp.sum(hit, axis=1).astype(jnp.float32)  # events per entry
+        contrib = entry_drive * weights_c
+        currents = jnp.zeros((n,), jnp.float32).at[targets_c].add(contrib)
+        return currents, jnp.sum(hit)
+
+    currents, hits = jax.vmap(core_inputs)(params.tags, params.valid,
+                                           params.weights, params.targets)
+
+    # ---- NoC delivery + PPA accounting ------------------------------------
+    spikes_flat = spikes.reshape(-1)
+    total_events = jnp.sum(spikes).astype(jnp.float32)
+    addr_seq, _ = jax.vmap(lambda s: _hat_order(s, n))(spikes)
+    enc_energy = jax.vmap(
+        lambda seq: arb.encode_energy_units(cfg.scheme, n, seq))(addr_seq)
+
+    valid_cnt = jnp.sum(params.valid, axis=1).astype(jnp.float32)
+    searches, entries_per_search = noc_scheme.cam_accounting(
+        tables, spikes_flat, valid_cnt, total_events, cores)
+    match_per_search = jnp.sum(hits).astype(jnp.float32) / jnp.maximum(searches, 1.0)
+    mismatch_per_search = entries_per_search - match_per_search
+    cam_energy = searches * cam_mod._energy_jnp(cfg.cam, match_per_search,
+                                                mismatch_per_search)
+    cam_time = searches * cam_mod.cycle_time_ns(cfg.cam)
+
+    noc_hops, noc_latency, noc_energy, _ = noc_router.noc_step_costs(
+        tables, spikes_flat)
+
+    stats = StepStats(events=total_events,
+                      encode_latency=jnp.max(latencies),
+                      encode_energy=jnp.sum(enc_energy * jnp.sum(spikes, 1)),
+                      cam_searches=searches,
+                      cam_energy=cam_energy,
+                      cam_time_ns=cam_time,
+                      noc_hops=noc_hops,
+                      noc_latency=noc_latency,
+                      noc_energy=noc_energy)
+    return currents, stats

@@ -1,0 +1,113 @@
+"""Compile-once sessions over the core-interface pipeline.
+
+`Interface(config).compile(params)` pre-builds everything the per-tick
+step needs exactly once - the arbiter plan, the NoC subscription/link
+tables, the CAM calibration constants - and returns an
+`InterfaceSession` whose `run` / `run_batched` execute multi-timestep
+simulation as a single jit-compiled `jax.lax.scan` (+`vmap` for the
+batched form) with streaming `StepStats` accumulation.
+
+This replaces the seed pattern of calling `fabric.step` in a Python loop,
+which re-entered jit dispatch every tick and silently rebuilt the NoC
+tables whenever the caller forgot to thread them through.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import arbiter as arb
+from repro.core import cam as cam_mod
+from repro.interface import pipeline
+from repro.interface.config import as_interface_config
+from repro.interface.stats import StepStats
+
+
+class Interface:
+    """Factory for precompiled sessions over one interface configuration."""
+
+    def __init__(self, config):
+        """config: `InterfaceConfig` or a legacy `FabricConfig`."""
+        self.config = as_interface_config(config)
+
+    def compile(self, params) -> "InterfaceSession":
+        """Bind routing state; build all plans/tables/constants once."""
+        return InterfaceSession(self.config, params)
+
+    def ppa_report(self) -> dict:
+        from repro.interface import report
+        return report.ppa_report(self.config)
+
+
+class InterfaceSession:
+    """A precompiled (config, params) binding with scan-based execution.
+
+    Attributes built once at construction:
+      tables    NoC subscription/hop/link tables (`NocTables`)
+      arb_plan  arbiter plan (`ArbiterConfig`: scheme entry, levels, fill)
+      cam_cycle_ns  CAM search cycle time for the configured variant
+    """
+
+    def __init__(self, config, params):
+        self.config = as_interface_config(config)
+        self.params = params
+        cfg = self.config
+        self.tables = pipeline.build_tables(params, cfg)
+        self.arb_plan = arb.ArbiterConfig(cfg.scheme, cfg.neurons_per_core)
+        self.cam_cycle_ns = cam_mod.cycle_time_ns(cfg.cam)
+        tables, arb_plan = self.tables, self.arb_plan
+
+        def tick(p, spikes_cn):
+            return pipeline.interface_tick(p, spikes_cn, cfg, tables, arb_plan)
+
+        def run(p, spikes_tcn):
+            def body(acc, s_t):
+                currents, st = tick(p, s_t)
+                return acc.accumulate(st), currents
+            acc, currents = jax.lax.scan(body, StepStats.zeros(), spikes_tcn)
+            return currents, acc
+
+        self._tick = jax.jit(tick)
+        self._run = jax.jit(run)
+        self._run_batched = jax.jit(jax.vmap(run, in_axes=(None, 0)))
+
+    # ---- execution -------------------------------------------------------
+
+    def step(self, spikes) -> tuple[jnp.ndarray, StepStats]:
+        """One tick.  spikes: (cores, neurons_per_core) bool."""
+        return self._tick(self.params, self._check(spikes, 2))
+
+    def run(self, spikes) -> tuple[jnp.ndarray, StepStats]:
+        """Multi-timestep simulation under one jit-compiled lax.scan.
+
+        spikes: (T, cores, neurons_per_core) bool
+        returns (currents (T, cores, neurons_per_core), accumulated stats);
+        use ``stats.summary(ticks=T)`` for per-tick means.
+        """
+        return self._run(self.params, self._check(spikes, 3))
+
+    def run_batched(self, spikes) -> tuple[jnp.ndarray, StepStats]:
+        """Batched scan: spikes (B, T, cores, neurons_per_core) bool.
+
+        Returns (currents (B, T, C, N), stats with (B,)-shaped leaves,
+        each accumulated over that batch element's T ticks).
+        """
+        return self._run_batched(self.params, self._check(spikes, 4))
+
+    # ---- introspection ---------------------------------------------------
+
+    def ppa_report(self) -> dict:
+        """Unified area/latency/energy report for this configuration."""
+        from repro.interface import report
+        return report.ppa_report(self.config)
+
+    def _check(self, spikes, ndim: int) -> jnp.ndarray:
+        spikes = jnp.asarray(spikes)
+        if spikes.ndim != ndim or spikes.shape[-2:] != (
+                self.config.cores, self.config.neurons_per_core):
+            raise ValueError(
+                f"expected {ndim}-d spikes ending in "
+                f"({self.config.cores}, {self.config.neurons_per_core}), "
+                f"got shape {spikes.shape}")
+        return spikes

@@ -1,0 +1,52 @@
+"""Per-tick interface cost record with streaming accumulation.
+
+`StepStats` is the accounting record `fabric.step` always returned; it now
+also supports the scan-friendly accumulate pattern used by
+`InterfaceSession.run`:
+
+    acc = StepStats.zeros()
+    acc, _ = jax.lax.scan(lambda a, s: (a.accumulate(tick(s)), ...), acc, xs)
+    acc.summary(ticks=T)      # {'events': ..., ...} per-tick means
+
+All fields are scalar jnp arrays.  Latency fields are per-tick quantities;
+accumulating sums them like everything else, so ``summary(ticks=T)``
+reports the mean per tick (the convention `models/snn.py` always used).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class StepStats(NamedTuple):
+    events: jnp.ndarray            # scalar: total address events this tick
+    encode_latency: jnp.ndarray    # scalar: max grant latency (units)
+    encode_energy: jnp.ndarray     # scalar: address-line toggles
+    cam_searches: jnp.ndarray      # scalar: CAM search operations
+    cam_energy: jnp.ndarray        # scalar: CAM model energy units
+    cam_time_ns: jnp.ndarray       # scalar: serialized CAM search time
+    noc_hops: jnp.ndarray          # scalar: mesh link traversals
+    noc_latency: jnp.ndarray       # scalar: NoC delivery latency (ns)
+    noc_energy: jnp.ndarray        # scalar: NoC energy (model units)
+
+    @classmethod
+    def zeros(cls) -> "StepStats":
+        z = jnp.zeros((), jnp.float32)
+        return cls(*([z] * len(cls._fields)))
+
+    def accumulate(self, other: "StepStats") -> "StepStats":
+        """Elementwise running sum (scan carry)."""
+        return jax.tree.map(jnp.add, self, other)
+
+    def mean(self, ticks) -> "StepStats":
+        """Per-tick means of an accumulated record."""
+        d = jnp.asarray(ticks, jnp.float32)
+        return jax.tree.map(lambda a: a / d, self)
+
+    def summary(self, ticks=None) -> dict:
+        """Plain-float dict: totals, or per-tick means when `ticks` given."""
+        rec = self if ticks is None else self.mean(ticks)
+        return {k: float(v) for k, v in rec._asdict().items()}

@@ -1,0 +1,50 @@
+"""Shared datatypes of the core-interface pipeline.
+
+`InterfaceParams` is the routing state every stage operates on: the CAM
+tags/valid bits that define subscriptions, plus synaptic weights and
+per-core target rows.  It was historically named ``FabricParams`` (and
+`repro.core.fabric` still re-exports it under that name); both names
+refer to the same NamedTuple, so old pytrees flow through the new API
+unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class InterfaceParams(NamedTuple):
+    """Learnable/configurable routing state of the whole fabric."""
+    tags: jnp.ndarray      # (cores, entries, tag_bits) {0,1} stored source tags
+    valid: jnp.ndarray     # (cores, entries) bool
+    weights: jnp.ndarray   # (cores, entries) float synaptic weight
+    targets: jnp.ndarray   # (cores, entries) int32 target neuron within core
+
+
+# Historical alias kept so isinstance checks and annotations keep working.
+FabricParams = InterfaceParams
+
+
+def int_to_bits(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Big-endian {0,1} bit expansion along a trailing axis."""
+    return ((x[..., None] >> jnp.arange(bits - 1, -1, -1)) & 1).astype(jnp.int32)
+
+
+def random_connectivity(key, cfg, fan_in: float = 0.9) -> InterfaceParams:
+    """Random routing tables: each CAM entry subscribes to a random source.
+
+    `cfg` is anything exposing cores / neurons_per_core / cam.entries /
+    tag_bits (`InterfaceConfig` or the legacy `FabricConfig`).
+    """
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    total = cfg.cores * cfg.neurons_per_core
+    src = jax.random.randint(k1, (cfg.cores, cfg.cam.entries), 0, total)
+    tags = int_to_bits(src, cfg.tag_bits)
+    valid = jax.random.bernoulli(k2, fan_in, (cfg.cores, cfg.cam.entries))
+    weights = jax.random.normal(k3, (cfg.cores, cfg.cam.entries)) * 0.5 + 1.0
+    targets = jax.random.randint(k4, (cfg.cores, cfg.cam.entries), 0,
+                                 cfg.neurons_per_core)
+    return InterfaceParams(tags, valid, weights, targets)

@@ -5,7 +5,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.hat_encode import ref
 from repro.kernels.hat_encode.kernel import hat_encode_pallas

@@ -5,7 +5,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.moe_dispatch import ref
 from repro.kernels.moe_dispatch.kernel import dispatch_positions_pallas

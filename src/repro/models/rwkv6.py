@@ -21,8 +21,6 @@ State is f32; activations bf16 outside the WKV core.
 
 from __future__ import annotations
 
-import math
-
 import jax
 import jax.numpy as jnp
 

@@ -4,8 +4,9 @@ The paper's target workload: LIF neuron cores exchanging spikes through
 the core interface (HAT arbiter out, CAM routing LUT in).  This model
 trains with surrogate gradients; the synaptic routing used in the
 training fast-path is the dense-matrix equivalent of the CAM fan-out
-(bit-exact with `fabric.step`, tested), while `account=True` runs the full
-behavioural interface models to report latency/energy per timestep.
+(bit-exact with the `repro.interface` tick, tested), while `account=True`
+runs the full behavioural interface models through a precompiled
+`InterfaceSession` to report latency/energy per timestep.
 """
 
 from __future__ import annotations
@@ -16,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fabric as fabric_mod
+from repro.interface import session as interface_session
 from repro.kernels.lif_step import ops as lif_ops
 
 
@@ -132,15 +134,11 @@ def snn_forward(params, topology, x_seq, cfg: SNNConfig, *, impl: str = "xla",
     if account:
         sp = spikes.reshape(b * cfg.t_steps, cfg.fabric.cores,
                             cfg.fabric.neurons_per_core) > 0.5
-        # subscription/NoC tables depend only on routing state: build once,
-        # reuse across every accounted tick
-        tables = fabric_mod.noc_tables(fab, cfg.fabric)
-        def acc(s_t):
-            _, st = fabric_mod.step(fab, s_t, cfg.fabric, tables=tables)
-            return st
-        stats_all = jax.lax.map(acc, sp)
-        stats = jax.tree.map(lambda a: jnp.sum(a) / (b * cfg.t_steps),
-                             stats_all)
+        # compile-once session: arbiter plan + NoC tables built a single
+        # time, then every accounted tick runs under one lax.scan
+        sess = interface_session.Interface(cfg.fabric).compile(fab)
+        _, acc = sess.run(sp)
+        stats = acc.mean(b * cfg.t_steps)
     return logits, rates, stats
 
 

@@ -10,9 +10,10 @@ package adds the transport fabric between the cores:
   placement.py  neuron-to-core placement (greedy hyperedge-overlap optimizer
                 vs. random/identity baselines) + traffic-cost objective
 
-Everything that runs inside `fabric.step` is pure-functional JAX; the
-placement optimizer is an offline host-side pass (numpy) whose *output*
-feeds the JAX fabric.
+Everything that runs inside the `repro.interface` tick is pure-functional
+JAX; the placement optimizer is an offline host-side pass (numpy) whose
+*output* feeds the JAX fabric.  Transport schemes are registered in
+`repro.interface.registry` (see `router.NocScheme`).
 """
 
 from repro.noc.topology import NocConfig, mesh_dims, core_coords, hop_matrix

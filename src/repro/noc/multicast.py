@@ -26,22 +26,25 @@ from repro.noc import topology
 _INF = jnp.int32(1 << 20)
 
 
-def _int_to_bits(x: jnp.ndarray, bits: int) -> jnp.ndarray:
-    return ((x[..., None] >> jnp.arange(bits - 1, -1, -1)) & 1).astype(jnp.int32)
-
-
 def subscription_matrix(tags: jnp.ndarray, valid: jnp.ndarray,
                         cores: int, neurons_per_core: int,
                         tag_bits: int) -> jnp.ndarray:
     """(cores, total) bool: core c holds >=1 valid CAM entry for source s.
 
     tags: (cores, entries, tag_bits) {0,1}; valid: (cores, entries) bool.
+    Packs each stored tag back to its integer source id and scatters, so
+    memory is O(cores * entries + cores * total) - never the
+    (cores, entries, total, tag_bits) comparison tensor, which reaches GBs
+    at DYNAPs scale.
     """
     total = cores * neurons_per_core
-    src_bits = _int_to_bits(jnp.arange(total), tag_bits)        # (S, bits)
-    # eq[c, e, s] = entry e of core c stores tag s
-    eq = jnp.all(tags[:, :, None, :] == src_bits[None, None, :, :], axis=-1)
-    return jnp.any(eq & valid[:, :, None], axis=1)
+    bit_w = jnp.left_shift(1, jnp.arange(tag_bits - 1, -1, -1))  # big-endian
+    src_int = jnp.sum(tags * bit_w, axis=-1)                     # (C, E)
+    # tag values outside the populated address space never match a source
+    hit = valid & (src_int < total)
+    core_idx = jnp.broadcast_to(jnp.arange(cores)[:, None], src_int.shape)
+    return jnp.zeros((cores, total), bool).at[
+        core_idx, jnp.minimum(src_int, total - 1)].max(hit)
 
 
 def dest_core_mask(tags, valid, cores, neurons_per_core, tag_bits) -> jnp.ndarray:

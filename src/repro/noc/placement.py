@@ -185,7 +185,6 @@ def apply_placement(params, cfg, perm: np.ndarray):
 
     import jax.numpy as jnp
 
-    from repro.core import cam as cam_mod
     from repro.core import fabric as fabric_mod
 
     n = cfg.neurons_per_core

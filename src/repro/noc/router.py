@@ -1,7 +1,8 @@
 """Mesh router model: per-link event loads, contention latency, energy.
 
 `build_tables` precomputes, from the CAM routing tables alone, everything
-the per-tick fabric step needs as plain matmuls against the spike vector:
+the per-tick interface step needs as plain matmuls against the spike
+vector:
 
   dest_counts (S,)    cores subscribed to each source  -> CAM search count
   hops        (S,)    mesh links traversed per event under the NoC scheme
@@ -9,7 +10,13 @@ the per-tick fabric step needs as plain matmuls against the spike vector:
   link_table  (S, L)  events injected on each physical link per source spike
 
 All tables depend only on the routing state (tags/valid), not on spikes, so
-the hot path (`noc_step_costs`, called from `fabric.step`) is O(S * L).
+the hot path (`noc_step_costs`, called from the interface tick) is O(S * L).
+
+Scheme dispatch goes through `repro.interface.registry`: each transport
+scheme registers a :class:`NocScheme` bundle (destination expansion, hop
+counts, per-link loads, CAM search accounting) and both `build_tables` and
+the fabric cost accounting are generic over the entry - a new transport
+plugs in with ``register_noc_scheme(name, NocScheme(...))``.
 
 Latency model (constants in `repro.core.ppa`): an event pays one router
 traversal per hop (`NOC_HOP_LATENCY_NS`); concurrent events contend for
@@ -21,11 +28,13 @@ the CAM energy model so the two can be summed into a system number.
 
 from __future__ import annotations
 
-from typing import NamedTuple
+import dataclasses
+from typing import Callable, NamedTuple
 
 import jax.numpy as jnp
 
 from repro.core import ppa
+from repro.interface import registry as interface_registry
 from repro.noc import multicast, topology
 
 
@@ -38,6 +47,27 @@ class NocTables(NamedTuple):
     link_table: jnp.ndarray    # (S, L) float32 per-link events per spike
 
 
+@dataclasses.dataclass(frozen=True)
+class NocScheme:
+    """Registry entry: the transport policy of one NoC scheme.
+
+    expand_dests(dest_mask, cores) -> (S, C) bool
+        the cores an event is physically delivered to (broadcast widens the
+        subscription mask to every core; mesh schemes keep it).
+    hops(dest_mask, src_core, cores) -> (S,) int32 link traversals/event.
+    link_loads(dest_mask, src_core, cores) -> (S, L) per-link events/spike.
+    cam_accounting(tables, spikes_flat, valid_cnt, total_events, cores)
+        -> (searches, entries_per_search): how many CAM searches a tick's
+        events trigger and how many entries each sweeps on average.
+    """
+
+    name: str
+    expand_dests: Callable
+    hops: Callable
+    link_loads: Callable
+    cam_accounting: Callable
+
+
 def _flatten_links(h_inc: jnp.ndarray, v_inc: jnp.ndarray) -> jnp.ndarray:
     """(S, H, W-1) + (S, H-1, W) -> (S, L) in topology link order."""
     s = h_inc.shape[0]
@@ -45,23 +75,16 @@ def _flatten_links(h_inc: jnp.ndarray, v_inc: jnp.ndarray) -> jnp.ndarray:
                            axis=-1)
 
 
-def link_loads(dest_mask: jnp.ndarray, src_core: jnp.ndarray, cores: int,
-               scheme: str) -> jnp.ndarray:
-    """(S, L) events per physical link per source spike.
+def _unicast_link_loads(dest_mask: jnp.ndarray, src_core: jnp.ndarray,
+                        cores: int) -> jnp.ndarray:
+    """One routed copy per destination on every link of its XY path.
 
-    Unicast counts one copy per destination on every link of its XY path;
-    multicast counts each tree link once.  Broadcast is the multicast tree
-    over every core.  Closed forms via prefix sums - no path enumeration.
+    Closed forms via prefix sums - no path enumeration.
     """
     w, h = topology.mesh_dims(cores)
     xy = topology.core_coords(cores)
     dx, dy = xy[:, 0], xy[:, 1]
     sx, sy = xy[src_core, 0], xy[src_core, 1]                  # (S,)
-    s_count = src_core.shape[0]
-
-    if scheme == "broadcast":
-        dest_mask = jnp.ones((s_count, cores), bool)
-        scheme = "multicast_tree"
     m = dest_mask.astype(jnp.float32)                          # (S, C)
 
     rows = jnp.arange(h)
@@ -69,29 +92,41 @@ def link_loads(dest_mask: jnp.ndarray, src_core: jnp.ndarray, cores: int,
     rows_v = jnp.arange(max(h - 1, 0))
     cols = jnp.arange(w)
 
-    if scheme == "unicast":
-        # dests per column / per (column, row)
-        cnt_w = m @ (dx[:, None] == cols[None, :]).astype(jnp.float32)
-        at = ((dx[:, None] == cols[None, :])[:, :, None] &
-              (dy[:, None] == rows[None, :])[:, None, :])      # (C, W, H)
-        cnt_wy = jnp.einsum("sc,cwh->swh", m, at.astype(jnp.float32))
-        pre_w = jnp.cumsum(cnt_w, axis=-1)                     # (S, W)
-        tot_w = pre_w[:, -1:]
-        # horizontal link j on the source row: crossed by dests right/left
-        crossings = jnp.where(cols_h[None, :] >= sx[:, None],
-                              tot_w - pre_w[:, :-1],           # dx > j
-                              pre_w[:, :-1])                   # dx <= j
-        h_inc = (rows[None, :, None] == sy[:, None, None]) * \
-            crossings[:, None, :]                              # (S, H, W-1)
-        pre_y = jnp.cumsum(cnt_wy, axis=-1)                    # (S, W, H)
-        tot_y = pre_y[:, :, -1:]
-        v_cross = jnp.where(rows_v[None, None, :] >= sy[:, None, None],
-                            tot_y - pre_y[:, :, :-1],          # dy > i
-                            pre_y[:, :, :-1])                  # (S, W, H-1)
-        v_inc = jnp.moveaxis(v_cross, 1, 2)                    # (S, H-1, W)
-        return _flatten_links(h_inc, v_inc)
+    # dests per column / per (column, row)
+    cnt_w = m @ (dx[:, None] == cols[None, :]).astype(jnp.float32)
+    at = ((dx[:, None] == cols[None, :])[:, :, None] &
+          (dy[:, None] == rows[None, :])[:, None, :])          # (C, W, H)
+    cnt_wy = jnp.einsum("sc,cwh->swh", m, at.astype(jnp.float32))
+    pre_w = jnp.cumsum(cnt_w, axis=-1)                         # (S, W)
+    tot_w = pre_w[:, -1:]
+    # horizontal link j on the source row: crossed by dests right/left
+    crossings = jnp.where(cols_h[None, :] >= sx[:, None],
+                          tot_w - pre_w[:, :-1],               # dx > j
+                          pre_w[:, :-1])                       # dx <= j
+    h_inc = (rows[None, :, None] == sy[:, None, None]) * \
+        crossings[:, None, :]                                  # (S, H, W-1)
+    pre_y = jnp.cumsum(cnt_wy, axis=-1)                        # (S, W, H)
+    tot_y = pre_y[:, :, -1:]
+    v_cross = jnp.where(rows_v[None, None, :] >= sy[:, None, None],
+                        tot_y - pre_y[:, :, :-1],              # dy > i
+                        pre_y[:, :, :-1])                      # (S, W, H-1)
+    v_inc = jnp.moveaxis(v_cross, 1, 2)                        # (S, H-1, W)
+    return _flatten_links(h_inc, v_inc)
 
-    # multicast spanning tree: row trunk + one column branch per dest column
+
+def _multicast_link_loads(dest_mask: jnp.ndarray, src_core: jnp.ndarray,
+                          cores: int) -> jnp.ndarray:
+    """XY spanning tree: row trunk + one column branch per dest column."""
+    w, h = topology.mesh_dims(cores)
+    xy = topology.core_coords(cores)
+    dx, dy = xy[:, 0], xy[:, 1]
+    sx, sy = xy[src_core, 0], xy[src_core, 1]                  # (S,)
+
+    rows = jnp.arange(h)
+    cols_h = jnp.arange(max(w - 1, 0))
+    rows_v = jnp.arange(max(h - 1, 0))
+    cols = jnp.arange(w)
+
     big = jnp.int32(1 << 20)
     has = jnp.any(dest_mask, axis=-1, keepdims=True)
     minx = jnp.min(jnp.where(dest_mask, dx[None, :], big), axis=-1)
@@ -113,10 +148,28 @@ def link_loads(dest_mask: jnp.ndarray, src_core: jnp.ndarray, cores: int,
     return _flatten_links(h_inc, v_inc)
 
 
+def _all_cores_mask(dest_mask: jnp.ndarray, cores: int) -> jnp.ndarray:
+    return jnp.ones((dest_mask.shape[0], cores), bool)
+
+
+def _broadcast_link_loads(dest_mask, src_core, cores):
+    """Broadcast floods the multicast tree over every core."""
+    return _multicast_link_loads(_all_cores_mask(dest_mask, cores), src_core,
+                                 cores)
+
+
+def link_loads(dest_mask: jnp.ndarray, src_core: jnp.ndarray, cores: int,
+               scheme: str) -> jnp.ndarray:
+    """(S, L) events per physical link per source spike (registry dispatch)."""
+    entry: NocScheme = interface_registry.get_noc_scheme(scheme)
+    return entry.link_loads(dest_mask, src_core, cores)
+
+
 def build_tables(tags: jnp.ndarray, valid: jnp.ndarray, *, cores: int,
                  neurons_per_core: int, tag_bits: int,
                  scheme: str = "multicast_tree") -> NocTables:
-    """Precompute routing tables for `fabric.step` from the CAM state."""
+    """Precompute routing tables for the interface tick from the CAM state."""
+    entry: NocScheme = interface_registry.get_noc_scheme(scheme)
     subs = multicast.subscription_matrix(tags, valid, cores,
                                          neurons_per_core, tag_bits)
     dmask = subs.T                                             # (S, C)
@@ -124,22 +177,15 @@ def build_tables(tags: jnp.ndarray, valid: jnp.ndarray, *, cores: int,
     src_core = jnp.arange(total, dtype=jnp.int32) // neurons_per_core
     hopmat = topology.hop_matrix(cores)
 
-    if scheme == "broadcast":
-        hops = multicast.broadcast_tree_hops(src_core, cores)
-        depth = jnp.max(hopmat[src_core], axis=-1).astype(jnp.int32)
-    elif scheme == "unicast":
-        hops = multicast.unicast_hops(dmask, src_core, cores)
-        depth = jnp.max(jnp.where(dmask, hopmat[src_core], 0),
-                        axis=-1).astype(jnp.int32)
-    else:
-        hops = multicast.multicast_tree_hops(dmask, src_core, cores)
-        depth = jnp.max(jnp.where(dmask, hopmat[src_core], 0),
-                        axis=-1).astype(jnp.int32)
+    routed = entry.expand_dests(dmask, cores)
+    hops = entry.hops(dmask, src_core, cores)
+    depth = jnp.max(jnp.where(routed, hopmat[src_core], 0),
+                    axis=-1).astype(jnp.int32)
 
     return NocTables(scheme=scheme, subs=subs,
                      dest_counts=jnp.sum(dmask, axis=-1).astype(jnp.int32),
                      hops=hops, depth=depth,
-                     link_table=link_loads(dmask, src_core, cores, scheme))
+                     link_table=entry.link_loads(dmask, src_core, cores))
 
 
 def noc_step_costs(tables: NocTables, spikes_flat: jnp.ndarray):
@@ -155,3 +201,54 @@ def noc_step_costs(tables: NocTables, spikes_flat: jnp.ndarray):
                jnp.max(loads, initial=0.0) * ppa.NOC_LINK_SERIALIZATION_NS)
     energy = hops * ppa.NOC_HOP_ENERGY
     return hops, latency, energy, loads
+
+
+# ---------------------------------------------------------------------------
+# CAM search accounting policies.
+# ---------------------------------------------------------------------------
+
+
+def _flood_cam_accounting(tables, spikes_flat, valid_cnt, total_events, cores):
+    """Flood: every event is searched in every core (seed accounting)."""
+    searches = total_events * cores
+    entries_per_search = jnp.mean(valid_cnt)
+    return searches, entries_per_search
+
+
+def _subscribed_cam_accounting(tables, spikes_flat, valid_cnt, total_events,
+                               cores):
+    """Mesh: an event is searched only where some CAM entry subscribes."""
+    searches = jnp.sum(spikes_flat * tables.dest_counts).astype(jnp.float32)
+    swept = jnp.sum(valid_cnt[:, None] * tables.subs *
+                    spikes_flat[None, :])
+    entries_per_search = swept / jnp.maximum(searches, 1.0)
+    return searches, entries_per_search
+
+
+# ---------------------------------------------------------------------------
+# Built-in transport schemes.
+# ---------------------------------------------------------------------------
+
+for _entry in (
+    NocScheme("broadcast",
+              expand_dests=_all_cores_mask,
+              hops=lambda m, src, cores: multicast.broadcast_tree_hops(
+                  src, cores),
+              link_loads=_broadcast_link_loads,
+              cam_accounting=_flood_cam_accounting),
+    NocScheme("unicast",
+              expand_dests=lambda m, cores: m,
+              hops=lambda m, src, cores: multicast.unicast_hops(
+                  m, src, cores),
+              link_loads=_unicast_link_loads,
+              cam_accounting=_subscribed_cam_accounting),
+    NocScheme("multicast_tree",
+              expand_dests=lambda m, cores: m,
+              hops=lambda m, src, cores: multicast.multicast_tree_hops(
+                  m, src, cores),
+              link_loads=_multicast_link_loads,
+              cam_accounting=_subscribed_cam_accounting),
+):
+    if _entry.name not in interface_registry.NOC_SCHEMES:
+        interface_registry.register_noc_scheme(_entry.name, _entry)
+del _entry

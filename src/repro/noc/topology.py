@@ -33,12 +33,21 @@ class NocConfig:
       "unicast"        mesh with one routed copy per subscribed core.
       "multicast_tree" mesh with one XY spanning tree per event covering
                        exactly the subscribed cores.
+
+    Any further scheme registered through
+    `repro.interface.register_noc_scheme` is accepted by name.
     """
     scheme: str = "multicast_tree"
 
     def __post_init__(self):
-        if self.scheme not in ("broadcast", "unicast", "multicast_tree"):
-            raise ValueError(f"unknown NoC scheme: {self.scheme!r}")
+        # Deferred import: `router` registers the built-in schemes on import
+        # and itself imports this module, so the cycle must break here.
+        from repro.interface import registry as interface_registry
+        from repro.noc import router  # noqa: F401  (registers built-ins)
+        if self.scheme not in interface_registry.NOC_SCHEMES:
+            raise ValueError(
+                f"unknown NoC scheme: {self.scheme!r}; registered: "
+                f"{', '.join(interface_registry.NOC_SCHEMES.names())}")
 
 
 def mesh_dims(cores: int) -> tuple[int, int]:

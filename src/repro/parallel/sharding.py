@@ -27,7 +27,6 @@ replicate per DESIGN.md §4.
 from __future__ import annotations
 
 import re
-from typing import Any
 
 import jax
 from jax.sharding import PartitionSpec as P

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import lm
-from repro.models.config import MLAConfig, ModelConfig, MoEConfig, RWKVConfig
+from repro.models.config import ModelConfig, MoEConfig, RWKVConfig
 from repro.launch.dryrun import VARIANTS
 
 KEY = jax.random.PRNGKey(0)

@@ -9,7 +9,7 @@ import pytest
 
 from repro.ckpt.manager import CheckpointManager, restore, save
 from repro.data.pipeline import DataConfig, Pipeline
-from repro.ft.runner import (FailureInjector, Watchdog, run_training,
+from repro.ft.runner import (FailureInjector, Watchdog,
                              run_with_restarts)
 from repro.models.config import ModelConfig
 from repro.optim import adamw
