@@ -23,8 +23,7 @@ KEY = jax.random.PRNGKey(0)
 
 
 def _time(f, *args, iters=20):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
-        jax.block_until_ready(f(*args))
+    jax.block_until_ready(f(*args))    # one warmup call (compile + run)
     t0 = time.perf_counter()
     for _ in range(iters):
         out = f(*args)

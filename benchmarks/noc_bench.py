@@ -1,9 +1,11 @@
 """NoC benchmark: broadcast vs. unicast-mesh vs. multicast-tree, random
-vs. optimized neuron placement, and old-API vs. session-API wall clock.
+vs. optimized neuron placement, old-API vs. session-API wall clock, and
+the event-driven session tick vs. the dense-sweep oracle.
 
     PYTHONPATH=src python benchmarks/noc_bench.py [--cores 4,16,64] [--ticks 16]
+        [--tick-cores 16] [--tick-neurons 256] [--json [BENCH_interface.json]]
 
-Three sweeps:
+Four sweeps:
 
 1. **Transport scheme** (fixed random connectivity, fixed spikes): per-tick
    CAM searches, NoC link events (hops) and energy for the three schemes.
@@ -21,10 +23,19 @@ Three sweeps:
    `InterfaceSession.run` (one jit-compiled `lax.scan` over all ticks),
    so the session speedup is measured, not asserted.
 
+4. **Session tick** (DYNAPs-scale, default 16 cores x 256 neurons/core):
+   the event-driven tick (precompiled CAM routing indices + vectorized
+   arbiter latency plans) against the pre-optimization oracle (dense
+   tag-vs-every-source sweep + per-core discrete-event arbiter scan),
+   both under the same jit + lax.scan session harness.  Currents are
+   asserted bit-identical before timing.  ``--json`` writes the records
+   to BENCH_interface.json so CI can track the perf trajectory.
+
 Also asserts the PR acceptance criteria: at >= 16 cores, multicast-tree +
 optimized placement reduces total CAM searches and NoC link events vs. the
-broadcast baseline; re-placed fabrics conserve total synaptic current; and
-the session path is not slower than the Python loop.
+broadcast baseline; re-placed fabrics conserve total synaptic current; the
+session path is not slower than the Python loop; and the event-driven tick
+is >= 5x the oracle at 16 cores x 256 neurons/core.
 """
 
 from __future__ import annotations
@@ -32,6 +43,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import gc
+import json
 import os
 import sys
 import time
@@ -44,7 +56,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fabric
-from repro.interface import Interface
+from repro.interface import Interface, StepStats
+from repro.interface import pipeline as interface_pipeline
 from repro.noc import placement, topology
 
 DEFAULT_CORES = (4, 16, 64)
@@ -175,6 +188,67 @@ def api_timing_sweep(core_sweep, ticks, repeats=3):
     return results
 
 
+def tick_sweep(core_sweep, neurons, entries, ticks, repeats=3):
+    """Event-driven session tick vs. the dense-sweep + DES oracle."""
+    print(f"\n== session tick: event-driven vs dense oracle "
+          f"({neurons} neurons/core, {entries} CAM entries, {ticks} ticks, "
+          f"best of {repeats}) ==")
+    print(f"{'cores':>5} {'oracle_tick_ms':>15} {'fast_tick_ms':>13} "
+          f"{'speedup':>8} {'identical':>9}")
+    records = []
+    for cores in core_sweep:
+        gc.collect()
+        cfg = fabric.FabricConfig(cores=cores, neurons_per_core=neurons,
+                                  cam_entries_per_core=entries)
+        params = fabric.random_connectivity(jax.random.PRNGKey(0), cfg)
+        sp = jax.random.bernoulli(jax.random.PRNGKey(2), RATE,
+                                  (ticks, cores, neurons))
+
+        session = Interface(cfg).compile(params)
+
+        def fast_run():
+            out = session.run(sp)
+            jax.block_until_ready(out)
+            return out
+
+        tables, arb_plan = session.tables, session.arb_plan
+
+        @jax.jit
+        def oracle_run(p, sp_t):
+            def body(acc, s_t):
+                cur, st = interface_pipeline.interface_tick(
+                    p, s_t, cfg, tables, arb_plan, oracle=True)
+                return acc.accumulate(st), cur
+            acc, cur = jax.lax.scan(body, StepStats.zeros(), sp_t)
+            return cur, acc
+
+        def slow_run():
+            out = oracle_run(params, sp)
+            jax.block_until_ready(out)
+            return out
+
+        cur_new, acc_new = fast_run()                          # compile
+        cur_old, acc_old = slow_run()                          # compile
+        identical = bool(jnp.all(cur_new == cur_old))
+        assert identical, "event-driven currents drifted from the dense oracle"
+        assert float(acc_new.events) == float(acc_old.events)
+        assert float(acc_new.cam_searches) == float(acc_old.cam_searches)
+
+        t_new = min(_timed(fast_run) for _ in range(repeats))
+        t_old = min(_timed(slow_run) for _ in range(repeats))
+        speedup = t_old / max(t_new, 1e-9)
+        records.append({"cores": cores, "neurons_per_core": neurons,
+                        "cam_entries_per_core": entries, "ticks": ticks,
+                        "old_tick_ms": t_old / ticks * 1e3,
+                        "new_tick_ms": t_new / ticks * 1e3,
+                        "speedup": speedup,
+                        "currents_bit_identical": identical})
+        print(f"{cores:>5} {t_old / ticks * 1e3:>15.3f} "
+              f"{t_new / ticks * 1e3:>13.3f} {speedup:>7.1f}x "
+              f"{str(identical):>9}")
+    return records
+
+
 def _timed(fn):
     t0 = time.perf_counter()
     fn()
@@ -189,13 +263,38 @@ def main(argv=None):
     ap.add_argument("--ticks", type=int, default=16,
                     help="timesteps for the API wall-clock sweep "
                          "(default: %(default)s)")
+    ap.add_argument("--tick-cores", default="16",
+                    help="core counts for the session-tick sweep "
+                         "(default: %(default)s)")
+    ap.add_argument("--tick-neurons", type=int, default=256,
+                    help="neurons/core for the session-tick sweep "
+                         "(default: %(default)s)")
+    ap.add_argument("--tick-entries", type=int, default=128,
+                    help="CAM entries/core for the session-tick sweep "
+                         "(default: %(default)s)")
+    ap.add_argument("--tick-ticks", type=int, default=8,
+                    help="timesteps for the session-tick sweep "
+                         "(default: %(default)s)")
+    ap.add_argument("--json", nargs="?", const="BENCH_interface.json",
+                    default=None, metavar="PATH",
+                    help="write the session-tick records to PATH "
+                         "(default when flag given: %(const)s)")
     args = ap.parse_args(argv)
     core_sweep = tuple(int(c) for c in str(args.cores).split(",") if c)
+    tick_cores = tuple(int(c) for c in str(args.tick_cores).split(",") if c)
 
     # wall clock first: a pristine process keeps the comparison honest
     timing = api_timing_sweep(core_sweep, args.ticks)
+    tick_records = tick_sweep(tick_cores, args.tick_neurons,
+                              args.tick_entries, args.tick_ticks)
     scheme = scheme_sweep(core_sweep)
     placed = placement_sweep(core_sweep)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "interface_session_tick",
+                       "rate": RATE, "records": tick_records}, f, indent=2)
+        print(f"\nwrote {args.json} ({len(tick_records)} records)")
 
     print("\n== acceptance checks ==")
     ok = True
@@ -219,6 +318,18 @@ def main(argv=None):
         # a couple of ticks sit inside scheduler noise on shared CI runners;
         # report the timing but gate only the meaningful sweeps
         print(f"  (timing reported, not gated: --ticks {args.ticks} < 8)")
+    gated = [r for r in tick_records
+             if r["cores"] >= 16 and r["neurons_per_core"] >= 256]
+    if gated:
+        s_ok = all(r["speedup"] >= 5.0 for r in gated)
+        print("  event-driven tick >= 5x dense oracle at "
+              + ", ".join(f"{r['cores']}x{r['neurons_per_core']}"
+                          f" ({r['speedup']:.1f}x)" for r in gated)
+              + f": {s_ok}")
+        ok &= s_ok
+    else:
+        print("  (tick speedup reported, not gated below 16 cores x 256 "
+              "neurons/core)")
     if not ok:
         raise SystemExit("acceptance criteria FAILED")
     print("  all passed")

@@ -81,6 +81,16 @@ class ArbiterScheme:
         optional ring-token advance after a grant.
     encode_energy(n, addr_seq) -> float32
         average address-line toggles per event for a grant sequence.
+    tick_latency(ctx) -> Optional[(n,) bool -> float32]
+        optional factory of a *vectorized* per-tick latency policy: given a
+        frame of simultaneous requests (all at t=0), return the completion
+        time the event-loop simulator would emerge with - without running
+        it.  May return ``None`` when the closed form does not apply at
+        this ``ctx`` (the dispatcher then falls back to the simulator).
+        The simulator stays the source of truth; `tests/test_arbiter.py`
+        property-tests every policy against it.  When replacing
+        ``grant_delay`` on a derived scheme, drop or replace
+        ``tick_latency`` too - it encodes the built-in delays.
     """
 
     name: str
@@ -88,6 +98,7 @@ class ArbiterScheme:
     grant_delay: Callable
     encode_energy: Callable
     token_update: Optional[Callable] = None
+    tick_latency: Optional[Callable] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,6 +145,17 @@ def _ring_dist(frm, to, n):
     return jnp.mod(to - frm, n)
 
 
+def _make_context(n: int, levels: int, fill: int) -> ArbiterContext:
+    return ArbiterContext(n=n, lg=float(math.log2(n)),
+                          sqrt_n=int(round(math.sqrt(n))), levels=levels,
+                          fill=fill, addrs=jnp.arange(n))
+
+
+def make_context(config: ArbiterConfig) -> ArbiterContext:
+    """The static `ArbiterContext` every policy callable receives."""
+    return _make_context(config.n, config.levels, config.pipeline_fill)
+
+
 @partial(jax.jit, static_argnames=("entry", "n", "levels", "fill"))
 def _simulate(request_times, entry: ArbiterScheme, n: int, levels: int,
               fill: int):
@@ -143,9 +165,7 @@ def _simulate(request_times, entry: ArbiterScheme, n: int, levels: int,
     scheme with ``overwrite=True`` cannot serve stale traces of the old
     policies.
     """
-    ctx = ArbiterContext(n=n, lg=float(math.log2(n)),
-                         sqrt_n=int(round(math.sqrt(n))), levels=levels,
-                         fill=fill, addrs=jnp.arange(n))
+    ctx = _make_context(n, levels, fill)
     addrs = ctx.addrs
     active = jnp.isfinite(request_times)
 
@@ -192,6 +212,30 @@ def _simulate(request_times, entry: ArbiterScheme, n: int, levels: int,
     # steps beyond the active count re-select served events; .min keeps first.
     grant_times = grant_times.at[sel_seq].min(grant_seq)
     return grant_times
+
+
+def batched_tick_latency(config: ArbiterConfig, spikes: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """Per-core encode completion time for one frame of simultaneous spikes.
+
+    spikes: (cores, n) bool - every request arrives at t=0.
+    returns (cores,) float32, exactly what ``max(finite grants)`` of the
+    event-loop simulator yields per core, but via the scheme's vectorized
+    ``tick_latency`` policy (O(n) vector work instead of an O(n^2) scan).
+    Schemes without an applicable policy fall back to the simulator.
+    """
+    entry: ArbiterScheme = interface_registry.get_arbiter(config.scheme)
+    ctx = make_context(config)
+    fn = entry.tick_latency(ctx) if entry.tick_latency is not None else None
+    if fn is None:
+        def fn(core_spikes):
+            req = jnp.where(core_spikes, 0.0, INF).astype(jnp.float32)
+            grants = _simulate(req, entry, config.n, config.levels,
+                               config.pipeline_fill)
+            return jnp.where(
+                jnp.any(core_spikes),
+                jnp.max(jnp.where(jnp.isfinite(grants), grants, 0.0)), 0.0)
+    return jax.vmap(fn)(spikes)
 
 
 class Arbiter:
@@ -259,13 +303,16 @@ def _flat_encode_energy(n: int, addr_seq) -> jnp.ndarray:
 
 
 def _hat_encode_energy(n: int, addr_seq) -> jnp.ndarray:
-    """Level l re-encodes its 2 bits iff the prefix above level l changed."""
+    """Level l re-encodes its 2 bits iff the prefix above level l changed.
+
+    Vectorized over the levels axis (a Python loop here unrolled into every
+    trace that embedded it - once per core under the interface tick's vmap).
+    """
     levels = max(1, round(math.log(n, 4)))
     prev = jnp.concatenate([jnp.array([-1], addr_seq.dtype), addr_seq[:-1]])
-    toggles = jnp.zeros(addr_seq.shape, jnp.float32)
-    for lvl in range(levels):
-        changed = (addr_seq // (4 ** lvl)) != (prev // (4 ** lvl))
-        toggles = toggles + jnp.where(changed, 2.0, 0.0)
+    div = (4 ** jnp.arange(levels)).astype(addr_seq.dtype)        # (levels,)
+    changed = (addr_seq[:, None] // div) != (prev[:, None] // div)
+    toggles = jnp.sum(jnp.where(changed, 2.0, 0.0), axis=-1)
     return jnp.mean(toggles)
 
 
@@ -345,17 +392,103 @@ def _hier_ring_update(ctx, sel, taken, tok_hi, tok_lo):
             jnp.where(taken, sel % ctx.sqrt_n, tok_lo))
 
 
+# ---------------------------------------------------------------------------
+# Vectorized per-tick latency policies (`ArbiterScheme.tick_latency`).
+#
+# For a frame of simultaneous requests (all at t=0) the event loop is fully
+# determined: the first grant takes the idle-pipeline delay, every later one
+# the backlogged delay, and service order follows the selection key.  Each
+# policy below is the closed form of that trajectory, exact in fp32 (all
+# intermediate quantities are small integers), so the interface tick pays
+# O(n) vector work per core instead of an O(n^2) lax.scan.  Property tests
+# in tests/test_arbiter.py hold them to bit-equality with `_simulate`.
+# ---------------------------------------------------------------------------
+
+
+def _binary_tree_tick_latency(ctx):
+    # every grant pays the full 2(log2 N - 1) round trip, back to back
+    per_grant = jnp.float32(2.0 * (ctx.lg - 1.0))
+
+    def lat(spikes):
+        return jnp.sum(spikes).astype(jnp.float32) * per_grant
+    return lat
+
+
+def _greedy_tree_tick_latency(ctx):
+    # first grant climbs the whole tree; the backlog re-grants at ~3 units
+    if ctx.lg <= 1.0:
+        return None       # zero climb delay -> the event loop never backlogs
+    first = jnp.float32(2.0 * (ctx.lg - 1.0))
+
+    def lat(spikes):
+        k = jnp.sum(spikes).astype(jnp.float32)
+        return jnp.where(k > 0.0, first + (k - 1.0) * 3.0, 0.0)
+    return lat
+
+
+def _token_ring_tick_latency(ctx):
+    # token starts at 0 and sweeps ascending; hop/handshake overlap makes
+    # every gap cost max(gap, 1) = gap, telescoping to max_addr + 1
+    def lat(spikes):
+        top = jnp.max(jnp.where(spikes, ctx.addrs, -1))
+        return jnp.where(jnp.any(spikes), top.astype(jnp.float32) + 1.0, 0.0)
+    return lat
+
+
+def _hier_ring_tick_latency(ctx):
+    # sections drain ascending from 0; within a section the lo-gaps
+    # telescope to lo_max, and each section switch costs lo_entry + 3*d_hi
+    if ctx.sqrt_n * ctx.sqrt_n != ctx.n:
+        return None           # top ring wraps inside the address space
+    s = ctx.sqrt_n
+    hi, lo = ctx.addrs // s, ctx.addrs % s
+
+    def lat(spikes):
+        lo_max = jnp.full((s,), jnp.int32(-1)).at[hi].max(
+            jnp.where(spikes, lo, -1))
+        occupied = lo_max >= 0
+        sec = jnp.arange(s)
+        s_first = jnp.min(jnp.where(occupied, sec, s))
+        s_last = jnp.max(jnp.where(occupied, sec, -1))
+        total = (1.0 + s_first + 3.0 * (s_last - s_first) +
+                 jnp.sum(jnp.where(occupied, lo_max, 0)))
+        return jnp.where(jnp.any(spikes), total.astype(jnp.float32), 0.0)
+    return lat
+
+
+def _hier_tree_tick_latency(ctx):
+    # first grant fills the 2*levels pipeline; each later one costs 1 unit
+    # plus 1 when the level-2 cluster switches (ascending order visits each
+    # occupied cluster exactly once -> Q-1 switches)
+    size = 4 ** (ctx.levels - 1)
+    clusters = -(-ctx.n // size)
+    cluster = ctx.addrs // size
+
+    def lat(spikes):
+        k = jnp.sum(spikes).astype(jnp.float32)
+        occ = jnp.zeros((clusters,), bool).at[cluster].max(spikes)
+        q = jnp.sum(occ).astype(jnp.float32)
+        return jnp.where(k > 0.0,
+                         2.0 * ctx.levels + (k - 1.0) + (q - 1.0), 0.0)
+    return lat
+
+
 for _entry in (
     ArbiterScheme("binary_tree", _tree_select, _binary_tree_delay,
-                  _flat_encode_energy),
+                  _flat_encode_energy,
+                  tick_latency=_binary_tree_tick_latency),
     ArbiterScheme("greedy_tree", _tree_select, _greedy_tree_delay,
-                  _flat_encode_energy),
+                  _flat_encode_energy,
+                  tick_latency=_greedy_tree_tick_latency),
     ArbiterScheme("token_ring", _token_ring_select, _token_ring_delay,
-                  _flat_encode_energy, _token_ring_update),
+                  _flat_encode_energy, _token_ring_update,
+                  tick_latency=_token_ring_tick_latency),
     ArbiterScheme("hier_ring", _hier_ring_select, _hier_ring_delay,
-                  _flat_encode_energy, _hier_ring_update),
+                  _flat_encode_energy, _hier_ring_update,
+                  tick_latency=_hier_ring_tick_latency),
     ArbiterScheme("hier_tree", _tree_select, _hier_tree_delay,
-                  _hat_encode_energy),
+                  _hat_encode_energy,
+                  tick_latency=_hier_tree_tick_latency),
 ):
     if _entry.name not in interface_registry.ARBITERS:
         interface_registry.register_arbiter(_entry.name, _entry)

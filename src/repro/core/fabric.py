@@ -53,6 +53,7 @@ class FabricConfig:
     scheme: str = "hier_tree"
     cam: cam_mod.CamConfig | None = None
     noc: noc_topology.NocConfig | None = None
+    impl: str = "xla"                        # tick backend: "xla" | "pallas"
 
     def __post_init__(self):
         cam, entries = resolve_cam(self.cam, self.cam_entries_per_core)
@@ -60,6 +61,9 @@ class FabricConfig:
         object.__setattr__(self, "cam_entries_per_core", entries)
         if self.noc is None:
             object.__setattr__(self, "noc", noc_topology.NocConfig())
+        if self.impl not in ("xla", "pallas"):
+            raise ValueError(
+                f"unknown impl {self.impl!r}; expected 'xla' or 'pallas'")
 
     @property
     def tag_bits(self) -> int:

@@ -79,6 +79,8 @@ _LAZY_EXPORTS = {
     "random_connectivity": "repro.interface.types",
     "interface_tick": "repro.interface.pipeline",
     "build_tables": "repro.interface.pipeline",
+    "RoutingIndex": "repro.interface.pipeline",
+    "build_routing_index": "repro.interface.pipeline",
     "ppa_report": "repro.interface.report",
     "interface_area_um2": "repro.interface.report",
 }

@@ -43,6 +43,11 @@ class InterfaceConfig:
     scheme:  arbiter architecture (registry: `repro.interface.ARBITERS`)
     cam:     CAM variant/size (registry: `repro.interface.CAM_VARIANTS`)
     noc:     transport scheme (registry: `repro.interface.NOC_SCHEMES`)
+    impl:    tick compute backend - "xla" (gather/scatter fast path) or
+             "pallas" (route the CAM match through the
+             `repro.kernels.cam_search` kernel and the AER address stream
+             through `repro.kernels.hat_encode`; falls back to interpret
+             mode off-TPU).  Currents are bit-identical across impls.
     """
 
     cores: int = 4
@@ -51,6 +56,7 @@ class InterfaceConfig:
     scheme: str = "hier_tree"
     cam: cam_mod.CamConfig | None = None
     noc: noc_topology.NocConfig | None = None
+    impl: str = "xla"
 
     def __post_init__(self):
         cam, entries = resolve_cam(self.cam, self.cam_entries_per_core)
@@ -58,6 +64,9 @@ class InterfaceConfig:
         object.__setattr__(self, "cam_entries_per_core", entries)
         if self.noc is None:
             object.__setattr__(self, "noc", noc_topology.NocConfig())
+        if self.impl not in ("xla", "pallas"):
+            raise ValueError(
+                f"unknown impl {self.impl!r}; expected 'xla' or 'pallas'")
         # Fail at construction, not at first tick, on unregistered schemes.
         from repro.core import arbiter as _arb  # deferred: avoids import cycle
         from repro.interface import registry
@@ -79,14 +88,15 @@ class InterfaceConfig:
     def from_fabric(cls, cfg) -> "InterfaceConfig":
         """Lift a legacy `FabricConfig` into a validated `InterfaceConfig`."""
         return cls(cores=cfg.cores, neurons_per_core=cfg.neurons_per_core,
-                   scheme=cfg.scheme, cam=cfg.cam, noc=cfg.noc)
+                   scheme=cfg.scheme, cam=cfg.cam, noc=cfg.noc,
+                   impl=getattr(cfg, "impl", "xla"))
 
     def fabric(self):
         """The equivalent legacy `FabricConfig` (for un-migrated call sites)."""
         from repro.core import fabric as fabric_mod
         return fabric_mod.FabricConfig(
             cores=self.cores, neurons_per_core=self.neurons_per_core,
-            scheme=self.scheme, cam=self.cam, noc=self.noc)
+            scheme=self.scheme, cam=self.cam, noc=self.noc, impl=self.impl)
 
 
 def as_interface_config(config) -> InterfaceConfig:

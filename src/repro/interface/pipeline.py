@@ -6,13 +6,32 @@ config (`InterfaceConfig` or the legacy `FabricConfig`), and dispatches
 every scheme decision through `repro.interface.registry` - no string-``if``
 chains in the hot path.
 
-The synaptic currents are computed by the same dense CAM-match sweep
+Event-driven hot path (the default): a `RoutingIndex` built once per
+(params, cfg) decodes every CAM entry's stored tag back to its global
+source-neuron index (the same int-pack trick as
+`noc.multicast.subscription_matrix`), so the per-tick CAM match collapses
+to a gather ``spikes_flat[src_idx] & active`` plus one weighted
+scatter-add per core - no (entries x cores*n x tag_bits) equality tensor
+is ever materialized.  Arbiter latency comes from the scheme's vectorized
+``tick_latency`` policy (`repro.core.arbiter.batched_tick_latency`)
+instead of an in-tick discrete-event simulation, and the AER address
+stream is produced by `repro.kernels.hat_encode`.  ``cfg.impl`` selects
+the match backend: ``"xla"`` (gather) or ``"pallas"`` (the
+`repro.kernels.cam_search` kernel; interpret-mode off-TPU).
+
+The pre-optimization dense sweep survives as ``interface_tick(...,
+oracle=True)`` - the reference the fast path is held bit-identical to in
+`tests/test_interface.py` and `benchmarks/noc_bench.py`.
+
+The synaptic currents are computed from the same CAM-match semantics
 regardless of NoC scheme (delivery only changes *where* searches happen,
-not their results), so currents are bit-identical across schemes and to
-the seed broadcast implementation - `tests/test_interface.py` asserts it.
+not their results), so currents are bit-identical across schemes, impls,
+and to the seed broadcast implementation.
 """
 
 from __future__ import annotations
+
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +41,8 @@ from repro.core import cam as cam_mod
 from repro.interface import registry as interface_registry
 from repro.interface.stats import StepStats
 from repro.interface.types import int_to_bits
+from repro.kernels.cam_search import ops as cam_ops
+from repro.kernels.hat_encode import ops as hat_ops
 from repro.noc import router as noc_router
 
 
@@ -34,15 +55,77 @@ def build_tables(params, cfg) -> noc_router.NocTables:
                                    scheme=cfg.noc.scheme)
 
 
+class RoutingIndex(NamedTuple):
+    """Compile-time decode of the CAM tags into gather/kernel operands.
+
+    Everything here depends only on (params, cfg) - `InterfaceSession`
+    builds it once; the per-tick step just gathers through it.
+    """
+
+    src_idx: jnp.ndarray     # (cores, entries) int32 global source index
+    active: jnp.ndarray      # (cores, entries) bool: valid & tag in range
+    q_words: jnp.ndarray     # (cores*entries, W) int32 packed entry tags
+    src_words: jnp.ndarray   # (cores*neurons, W) int32 packed source addrs
+
+
+def build_routing_index(params, cfg) -> RoutingIndex:
+    """Decode each CAM entry's tag to a source index, once (int-pack)."""
+    total = cfg.cores * cfg.neurons_per_core
+    bits = cfg.tag_bits
+    bit_w = jnp.left_shift(1, jnp.arange(bits - 1, -1, -1))      # big-endian
+    src_int = jnp.sum(params.tags * bit_w, axis=-1)              # (C, E)
+    # tag values outside the populated address space never match a source
+    active = params.valid & (src_int < total)
+    src_idx = jnp.minimum(src_int, total - 1).astype(jnp.int32)
+    q_words = cam_ops.pack_bits(params.tags.reshape(-1, bits))
+    src_words = cam_ops.pack_bits(int_to_bits(jnp.arange(total), bits))
+    return RoutingIndex(src_idx=src_idx, active=active,
+                        q_words=q_words, src_words=src_words)
+
+
 def _hat_order(spikes, n):
     idx = jnp.arange(n, dtype=jnp.int32)
     key = jnp.where(spikes, idx, n)
     return jnp.sort(key), jnp.sum(spikes)
 
 
+def _entry_drive(params, spikes_flat, routing: RoutingIndex, cfg):
+    """(cores, entries) float32 {0,1}: is this entry's source spiking?"""
+    impl = getattr(cfg, "impl", "xla")
+    if impl == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        counts = cam_ops.cam_match_counts(
+            routing.q_words, routing.src_words, spikes_flat,
+            impl="pallas", interpret=interpret)
+        hit = counts.reshape(params.valid.shape) > 0
+        return (hit & params.valid).astype(jnp.float32)
+    return (spikes_flat[routing.src_idx] & routing.active).astype(jnp.float32)
+
+
+def _addr_streams(spikes, cfg, n):
+    """(cores, n) int32 AER address streams (service order, padded with n)."""
+    impl = getattr(cfg, "impl", "xla")
+    row = 256
+    hat_impl = "xla"
+    interpret = False
+    if impl == "pallas" and n % row == 0 and n <= hat_ops.MAX_PALLAS_N:
+        hat_impl = "pallas"
+        interpret = jax.default_backend() != "tpu"
+
+    def one(core_spikes):
+        stream, _ = hat_ops.encode_stream(core_spikes, row=row,
+                                          impl=hat_impl, interpret=interpret)
+        return stream
+
+    return jax.vmap(one)(spikes)
+
+
 def interface_tick(params, spikes: jnp.ndarray, cfg,
                    tables: noc_router.NocTables | None = None,
-                   arb_cfg: arb.ArbiterConfig | None = None
+                   arb_cfg: arb.ArbiterConfig | None = None,
+                   routing: RoutingIndex | None = None,
+                   cam_cycle_ns: float | None = None,
+                   oracle: bool = False,
                    ) -> tuple[jnp.ndarray, StepStats]:
     """One fabric tick.
 
@@ -51,6 +134,12 @@ def interface_tick(params, spikes: jnp.ndarray, cfg,
         stepping in a loop (`InterfaceSession` does) to avoid rebuilding the
         subscription masks every tick.  They depend only on (params, cfg).
     arb_cfg: optional prebuilt arbiter plan (the session builds it once).
+    routing: optional prebuilt `build_routing_index(params, cfg)`.
+    cam_cycle_ns: optional precomputed `cam.cycle_time_ns(cfg.cam)` (the
+        session passes its `cam_cycle_ns` attribute).
+    oracle:  run the pre-optimization reference path - dense tag-vs-every-
+        source CAM sweep + per-core discrete-event arbiter simulation.  The
+        default event-driven path is bit-identical to it (tested).
     returns: currents (cores, neurons_per_core) float32, `StepStats`
     """
     cores, n = spikes.shape
@@ -70,53 +159,71 @@ def interface_tick(params, spikes: jnp.ndarray, cfg,
             f"repro.interface.build_tables(params, cfg)")
     if arb_cfg is None:
         arb_cfg = arb.ArbiterConfig(cfg.scheme, n)
+    if cam_cycle_ns is None:
+        cam_cycle_ns = cam_mod.cycle_time_ns(cfg.cam)
     noc_scheme = interface_registry.get_noc_scheme(cfg.noc.scheme)
-    arbiter = arb.Arbiter(arb_cfg)
 
-    # ---- output interface: arbitrate + encode each core's spikes ----------
-    def encode_core(core_spikes):
-        req = jnp.where(core_spikes, 0.0, jnp.inf).astype(jnp.float32)
-        grants = arbiter.simulate(req)
-        lat = jnp.where(jnp.any(core_spikes),
-                        jnp.max(jnp.where(jnp.isfinite(grants), grants, 0.0)), 0.0)
-        return lat
+    spikes_flat = spikes.reshape(-1)
 
-    latencies = jax.vmap(encode_core)(spikes)
+    if oracle:
+        # ---- reference path: DES arbiter + dense CAM sweep ----------------
+        arbiter = arb.Arbiter(arb_cfg)
 
-    # global source tags of every spiking neuron (dense mask form)
-    neuron_global = (jnp.arange(cores)[:, None] * n + jnp.arange(n)[None, :])
-    src_bits = int_to_bits(neuron_global, cfg.tag_bits)      # (cores, n, bits)
+        def encode_core(core_spikes):
+            req = jnp.where(core_spikes, 0.0, jnp.inf).astype(jnp.float32)
+            grants = arbiter.simulate(req)
+            return jnp.where(
+                jnp.any(core_spikes),
+                jnp.max(jnp.where(jnp.isfinite(grants), grants, 0.0)), 0.0)
 
-    # ---- input interface: CAM match per target core -----------------------
-    # match[c_tgt, entry, c_src, neuron] = entry subscribed to that source
-    def core_inputs(tags_c, valid_c, weights_c, targets_c):
-        # (entries, bits) vs (cores*n, bits)
-        flat_bits = src_bits.reshape(-1, cfg.tag_bits)
-        eq = jnp.all(tags_c[:, None, :] == flat_bits[None, :, :], axis=-1)
-        hit = eq & valid_c[:, None] & spikes.reshape(-1)[None, :]
-        entry_drive = jnp.sum(hit, axis=1).astype(jnp.float32)  # events per entry
-        contrib = entry_drive * weights_c
-        currents = jnp.zeros((n,), jnp.float32).at[targets_c].add(contrib)
-        return currents, jnp.sum(hit)
+        latencies = jax.vmap(encode_core)(spikes)
 
-    currents, hits = jax.vmap(core_inputs)(params.tags, params.valid,
-                                           params.weights, params.targets)
+        # global source tags of every spiking neuron (dense mask form)
+        neuron_global = (jnp.arange(cores)[:, None] * n +
+                         jnp.arange(n)[None, :])
+        src_bits = int_to_bits(neuron_global, cfg.tag_bits)  # (cores, n, bits)
+
+        # match[entry, c_src * n + neuron] = entry subscribed to that source
+        def core_inputs(tags_c, valid_c, weights_c, targets_c):
+            # (entries, bits) vs (cores*n, bits)
+            flat_bits = src_bits.reshape(-1, cfg.tag_bits)
+            eq = jnp.all(tags_c[:, None, :] == flat_bits[None, :, :], axis=-1)
+            hit = eq & valid_c[:, None] & spikes_flat[None, :]
+            entry_drive = jnp.sum(hit, axis=1).astype(jnp.float32)
+            contrib = entry_drive * weights_c
+            currents = jnp.zeros((n,), jnp.float32).at[targets_c].add(contrib)
+            return currents, jnp.sum(hit)
+
+        currents, hits = jax.vmap(core_inputs)(params.tags, params.valid,
+                                               params.weights, params.targets)
+        hits_total = jnp.sum(hits)
+        addr_seq = jax.vmap(lambda s: _hat_order(s, n)[0])(spikes)
+    else:
+        # ---- event-driven path: policy latency + gather/scatter -----------
+        if routing is None:
+            routing = build_routing_index(params, cfg)
+        latencies = arb.batched_tick_latency(arb_cfg, spikes)
+        entry_drive = _entry_drive(params, spikes_flat, routing, cfg)
+        contrib = entry_drive * params.weights
+        currents = jax.vmap(
+            lambda c, t: jnp.zeros((n,), jnp.float32).at[t].add(c)
+        )(contrib, params.targets)
+        hits_total = jnp.sum(entry_drive)
+        addr_seq = _addr_streams(spikes, cfg, n)
 
     # ---- NoC delivery + PPA accounting ------------------------------------
-    spikes_flat = spikes.reshape(-1)
     total_events = jnp.sum(spikes).astype(jnp.float32)
-    addr_seq, _ = jax.vmap(lambda s: _hat_order(s, n))(spikes)
     enc_energy = jax.vmap(
         lambda seq: arb.encode_energy_units(cfg.scheme, n, seq))(addr_seq)
 
     valid_cnt = jnp.sum(params.valid, axis=1).astype(jnp.float32)
     searches, entries_per_search = noc_scheme.cam_accounting(
         tables, spikes_flat, valid_cnt, total_events, cores)
-    match_per_search = jnp.sum(hits).astype(jnp.float32) / jnp.maximum(searches, 1.0)
+    match_per_search = hits_total.astype(jnp.float32) / jnp.maximum(searches, 1.0)
     mismatch_per_search = entries_per_search - match_per_search
     cam_energy = searches * cam_mod._energy_jnp(cfg.cam, match_per_search,
                                                 mismatch_per_search)
-    cam_time = searches * cam_mod.cycle_time_ns(cfg.cam)
+    cam_time = searches * cam_cycle_ns
 
     noc_hops, noc_latency, noc_energy, _ = noc_router.noc_step_costs(
         tables, spikes_flat)

@@ -2,7 +2,8 @@
 
 `Interface(config).compile(params)` pre-builds everything the per-tick
 step needs exactly once - the arbiter plan, the NoC subscription/link
-tables, the CAM calibration constants - and returns an
+tables, the CAM routing index (stored tags decoded back to source-neuron
+indices), the CAM calibration constants - and returns an
 `InterfaceSession` whose `run` / `run_batched` execute multi-timestep
 simulation as a single jit-compiled `jax.lax.scan` (+`vmap` for the
 batched form) with streaming `StepStats` accumulation.
@@ -46,6 +47,9 @@ class InterfaceSession:
     Attributes built once at construction:
       tables    NoC subscription/hop/link tables (`NocTables`)
       arb_plan  arbiter plan (`ArbiterConfig`: scheme entry, levels, fill)
+      routing   CAM tags decoded to source indices (`RoutingIndex`) - the
+                per-tick CAM match is a gather through it (or the
+                `cam_search` kernel when ``cfg.impl == "pallas"``)
       cam_cycle_ns  CAM search cycle time for the configured variant
     """
 
@@ -55,11 +59,15 @@ class InterfaceSession:
         cfg = self.config
         self.tables = pipeline.build_tables(params, cfg)
         self.arb_plan = arb.ArbiterConfig(cfg.scheme, cfg.neurons_per_core)
+        self.routing = pipeline.build_routing_index(params, cfg)
         self.cam_cycle_ns = cam_mod.cycle_time_ns(cfg.cam)
-        tables, arb_plan = self.tables, self.arb_plan
+        tables, arb_plan, routing = self.tables, self.arb_plan, self.routing
+        cam_cycle_ns = self.cam_cycle_ns
 
         def tick(p, spikes_cn):
-            return pipeline.interface_tick(p, spikes_cn, cfg, tables, arb_plan)
+            return pipeline.interface_tick(p, spikes_cn, cfg, tables, arb_plan,
+                                           routing=routing,
+                                           cam_cycle_ns=cam_cycle_ns)
 
         def run(p, spikes_tcn):
             def body(acc, s_t):

@@ -8,9 +8,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.cam_search import ref
-from repro.kernels.cam_search.kernel import cam_search_pallas
+from repro.kernels.cam_search.kernel import (
+    DEFAULT_BLOCK_B,
+    DEFAULT_BLOCK_E,
+    cam_search_pallas,
+)
 
 pack_bits = ref.pack_bits
+
+
+def _pad_rows(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Zero-pad the leading axis up to a Pallas block multiple (if needed)."""
+    rows = x.shape[0]
+    if rows <= block or rows % block == 0:
+        return x
+    pad = -rows % block
+    return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "interpret"))
@@ -29,6 +42,25 @@ def cam_first_match(q_packed, t_packed, valid, *, impl: str = "xla",
                     interpret: bool = False) -> jnp.ndarray:
     m = cam_search(q_packed, t_packed, valid, impl=impl, interpret=interpret)
     return ref.first_match_ref(m)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def cam_match_counts(q_packed, t_packed, valid, *, impl: str = "xla",
+                     interpret: bool = False) -> jnp.ndarray:
+    """Per-query match count: (B, W), (E, W), (E,) -> (B,) int32.
+
+    The shape-tolerant entry point the interface tick dispatches through:
+    pads B and E up to Pallas block multiples when needed (padded tags are
+    invalid so they never match; padded query rows are sliced back off)
+    and sums the match matrix along the entry axis.
+    """
+    b = q_packed.shape[0]
+    if impl == "pallas":
+        q_packed = _pad_rows(q_packed, DEFAULT_BLOCK_B)
+        t_packed = _pad_rows(t_packed, DEFAULT_BLOCK_E)
+        valid = _pad_rows(valid.astype(jnp.int32), DEFAULT_BLOCK_E)
+    m = cam_search(q_packed, t_packed, valid, impl=impl, interpret=interpret)
+    return ref.match_count_ref(m[:b])
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "interpret"))

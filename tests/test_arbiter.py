@@ -7,10 +7,20 @@ from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import ppa
 from repro.core.arbiter import (Arbiter, ArbiterConfig, SCHEMES,
-                                burst_latency_units, encode_energy_units,
-                                sparse_latency_units, area_units)
+                                batched_tick_latency, burst_latency_units,
+                                encode_energy_units, sparse_latency_units,
+                                area_units)
 
 KEY = jax.random.PRNGKey(0)
+
+
+def _des_frame_latency(arb: Arbiter, frame) -> float:
+    """Reference: completion time of a frame via the event-loop simulator."""
+    req = jnp.where(frame, 0.0, jnp.inf).astype(jnp.float32)
+    grants = arb.simulate(req)
+    return float(jnp.where(jnp.any(frame),
+                           jnp.max(jnp.where(jnp.isfinite(grants), grants,
+                                             0.0)), 0.0))
 
 
 # ---- paper Table I/II/III closed forms -------------------------------------
@@ -113,6 +123,48 @@ def test_all_requests_served_exactly_once(reqs):
         assert bool(jnp.all(served[jnp.array(reqs)])), scheme
         inactive = jnp.delete(served, jnp.array(reqs))
         assert not bool(jnp.any(inactive)), scheme
+
+
+# ---- vectorized tick-latency policies vs. the simulator ---------------------
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("n", [2, 4, 16, 64, 256])
+def test_tick_latency_matches_des_sparse_and_burst(scheme, n):
+    """The per-tick policy is bit-exact with the event loop on the frames
+    the paper characterizes: isolated sparse events and a full burst."""
+    cfg = ArbiterConfig(scheme=scheme, n=n)
+    arb = Arbiter(cfg)
+    frames = [jnp.zeros((n,), bool).at[p].set(True)
+              for p in sorted({0, 1, n // 2, n - 1})]
+    frames += [jnp.ones((n,), bool), jnp.zeros((n,), bool)]
+    fast = batched_tick_latency(cfg, jnp.stack(frames))
+    for i, frame in enumerate(frames):
+        assert float(fast[i]) == _des_frame_latency(arb, frame), (scheme, i)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_tick_latency_falls_back_to_des_on_non_square_n(scheme):
+    """n=8: sqrt(8) is not integral, so hier_ring's closed form does not
+    apply and the dispatcher must fall back to the simulator."""
+    cfg = ArbiterConfig(scheme=scheme, n=8)
+    arb = Arbiter(cfg)
+    frames = [jnp.zeros((8,), bool).at[p].set(True) for p in range(8)]
+    frames.append(jnp.ones((8,), bool))
+    fast = batched_tick_latency(cfg, jnp.stack(frames))
+    for i, frame in enumerate(frames):
+        assert float(fast[i]) == _des_frame_latency(arb, frame), (scheme, i)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.lists(st.integers(0, 63), min_size=0, max_size=48, unique=True))
+def test_tick_latency_matches_des_random_frames(reqs):
+    frame = jnp.zeros((64,), bool)
+    for r in reqs:
+        frame = frame.at[r].set(True)
+    for scheme in SCHEMES:
+        cfg = ArbiterConfig(scheme=scheme, n=64)
+        fast = batched_tick_latency(cfg, frame[None, :])
+        assert float(fast[0]) == _des_frame_latency(Arbiter(cfg), frame), scheme
 
 
 def test_hat_encode_energy_below_flat():

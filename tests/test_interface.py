@@ -23,10 +23,12 @@ from repro.interface import (
     Interface,
     InterfaceConfig,
     StepStats,
+    build_routing_index,
     build_tables,
     ppa_report,
     registry,
 )
+from repro.interface import pipeline as interface_pipeline
 from repro.noc import topology
 from tests._hypothesis_compat import given, settings, strategies as st
 
@@ -88,6 +90,85 @@ def test_currents_bit_identical_across_schemes(seed, rate):
         outs[scheme], _ = Interface(cfg).compile(params).run(spikes)
     assert bool(jnp.all(outs["broadcast"] == outs["unicast"]))
     assert bool(jnp.all(outs["broadcast"] == outs["multicast_tree"]))
+
+
+ARBITER_SCHEMES = ("binary_tree", "greedy_tree", "token_ring", "hier_ring",
+                   "hier_tree")
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 2**16), st.floats(0.05, 0.6))
+def test_event_driven_tick_matches_dense_oracle(seed, rate):
+    """Gather/scatter tick == dense-sweep + DES oracle, every StepStats
+    field bit-for-bit, across all registered arbiter x NoC schemes and
+    non-power-uniform spike patterns (one bursting core, one silent)."""
+    for arb_scheme in ARBITER_SCHEMES:
+        for noc_scheme in SCHEMES:
+            cfg = _cfg(scheme=noc_scheme)
+            cfg = dataclasses.replace(cfg, scheme=arb_scheme)
+            params = fabric.random_connectivity(jax.random.PRNGKey(seed), cfg)
+            spikes = jax.random.bernoulli(
+                jax.random.PRNGKey(seed + 1), rate,
+                (cfg.cores, cfg.neurons_per_core))
+            spikes = spikes.at[0].set(True).at[-1].set(False)  # non-uniform
+            cur, st = interface_pipeline.interface_tick(params, spikes, cfg)
+            ref_cur, ref_st = interface_pipeline.interface_tick(
+                params, spikes, cfg, oracle=True)
+            key = (arb_scheme, noc_scheme)
+            assert bool(jnp.all(cur == ref_cur)), key
+            assert float(st.events) == float(ref_st.events), key
+            assert float(st.cam_searches) == float(ref_st.cam_searches), key
+            for name in StepStats._fields:
+                assert float(getattr(st, name)) == float(
+                    getattr(ref_st, name)), key + (name,)
+
+
+def test_session_reuses_precompiled_routing_index():
+    cfg = _cfg()
+    params = fabric.random_connectivity(KEY, cfg)
+    session = Interface(cfg).compile(params)
+    ref = build_routing_index(params, session.config)
+    assert bool(jnp.all(session.routing.src_idx == ref.src_idx))
+    assert bool(jnp.all(session.routing.active == ref.active))
+    # out-of-range tags are masked out, in-range indices reproduce the tags
+    total = cfg.cores * cfg.neurons_per_core
+    assert int(jnp.max(session.routing.src_idx)) < total
+
+
+def test_impl_pallas_session_matches_xla():
+    """The cam_search/hat_encode kernel route (interpret mode on CPU) is
+    bit-identical to the XLA gather path, stats included."""
+    cfg = InterfaceConfig(cores=4, neurons_per_core=16,
+                          cam_entries_per_core=32)
+    cfg_p = dataclasses.replace(cfg, impl="pallas")
+    params = fabric.random_connectivity(KEY, cfg)
+    spikes = jax.random.bernoulli(jax.random.PRNGKey(5), 0.3,
+                                  (3, cfg.cores, cfg.neurons_per_core))
+    cur_x, acc_x = Interface(cfg).compile(params).run(spikes)
+    cur_p, acc_p = Interface(cfg_p).compile(params).run(spikes)
+    assert bool(jnp.all(cur_x == cur_p))
+    for name in StepStats._fields:
+        assert float(getattr(acc_x, name)) == float(getattr(acc_p, name)), name
+
+
+def test_impl_pallas_hat_kernel_path_matches_xla():
+    """n=256 engages the hat_encode Pallas kernel (row=256) under vmap."""
+    cfg = InterfaceConfig(cores=4, neurons_per_core=256,
+                          cam_entries_per_core=64)
+    cfg_p = dataclasses.replace(cfg, impl="pallas")
+    params = fabric.random_connectivity(KEY, cfg)
+    spikes = jax.random.bernoulli(jax.random.PRNGKey(6), 0.2,
+                                  (cfg.cores, cfg.neurons_per_core))
+    cur_x, st_x = Interface(cfg).compile(params).step(spikes)
+    cur_p, st_p = Interface(cfg_p).compile(params).step(spikes)
+    assert bool(jnp.all(cur_x == cur_p))
+    assert float(st_x.encode_energy) == float(st_p.encode_energy)
+
+
+@pytest.mark.parametrize("make", [fabric.FabricConfig, InterfaceConfig])
+def test_config_rejects_unknown_impl(make):
+    with pytest.raises(ValueError, match="impl"):
+        make(impl="cuda")
 
 
 def test_run_batched_matches_run():
