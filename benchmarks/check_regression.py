@@ -1,0 +1,146 @@
+"""CI perf-regression gate for the interface session tick.
+
+Compares a freshly produced ``BENCH_interface.json`` (benchmarks/noc_bench.py
+--json) against the committed baseline and fails (exit 1) when the session
+tick's wall clock regresses beyond the threshold:
+
+    python benchmarks/check_regression.py BENCH_interface.json
+        [--baseline benchmarks/baseline/BENCH_interface.json]
+        [--threshold 1.5]
+
+Records are matched on (cores, neurons_per_core, cam_entries_per_core, ticks);
+the gate compares ``new_tick_ms`` (the event-driven session tick, the number
+the repo optimizes for).  Millisecond-scale measurements are scheduler-noise
+bound even best-of-N, so a regression must clear the ratio threshold AND an
+absolute slack (``--min-delta-ms``, default 0.5 ms per tick) to fail; runs
+inside the slack report ``ok (noise)``.  A delta table is always printed,
+including the machine-independent oracle speedup so runner-speed drift is
+distinguishable from a real regression.  Records present on only one side are report-only
+(sweeps may grow) - but *zero* overlapping keys fails, because it means the
+sweep config diverged from the baseline and the gate is vacuous; regenerate
+the baseline in that case.  Set ``BENCH_BASELINE_SKIP=1`` to turn the whole
+gate into a report-only run (e.g. on known-slow debug builds).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "baseline", "BENCH_interface.json"
+)
+
+KEY_FIELDS = ("cores", "neurons_per_core", "cam_entries_per_core", "ticks")
+
+
+def _index(payload: dict) -> dict:
+    return {tuple(r[k] for k in KEY_FIELDS): r for r in payload.get("records", [])}
+
+
+def _fmt_key(key: tuple) -> str:
+    return "x".join(str(k) for k in key)
+
+
+def compare(
+    current: dict, baseline: dict, threshold: float, min_delta_ms: float
+) -> tuple[list, bool]:
+    """Returns (table rows, ok).  A row per matched record key."""
+    cur, base = _index(current), _index(baseline)
+    rows, ok = [], True
+    for key in sorted(set(cur) | set(base)):
+        if key not in cur:
+            rows.append((key, base[key]["new_tick_ms"], None, None, "missing"))
+            continue
+        if key not in base:
+            rows.append((key, None, cur[key]["new_tick_ms"], None, "new"))
+            continue
+        b, c = base[key]["new_tick_ms"], cur[key]["new_tick_ms"]
+        ratio = c / max(b, 1e-12)
+        if ratio <= threshold:
+            status = "ok"
+        elif c - b <= min_delta_ms:
+            status = "ok (noise)"
+        else:
+            status = "REGRESSED"
+            ok = False
+        rows.append((key, b, c, ratio, status))
+    return rows, ok
+
+
+def print_table(rows: list, current: dict, baseline: dict, threshold: float) -> None:
+    print(
+        f"perf-regression gate: session tick wall clock vs baseline "
+        f"(threshold {threshold:.2f}x)"
+    )
+    print(
+        f"  baseline sha {baseline.get('git_sha', 'unknown')[:12]}  ->  "
+        f"current sha {current.get('git_sha', 'unknown')[:12]}"
+    )
+    header = (
+        f"{'cores x n/core x entries x ticks':>33} {'base_ms':>9} "
+        f"{'cur_ms':>9} {'ratio':>7} {'status':>10}"
+    )
+    print(header)
+    for key, b, c, ratio, status in rows:
+        b_s = f"{b:9.3f}" if b is not None else f"{'-':>9}"
+        c_s = f"{c:9.3f}" if c is not None else f"{'-':>9}"
+        r_s = f"{ratio:6.2f}x" if ratio is not None else f"{'-':>7}"
+        print(f"{_fmt_key(key):>33} {b_s} {c_s} {r_s} {status:>10}")
+    cur, base = _index(current), _index(baseline)
+    for key in sorted(set(cur) & set(base)):
+        b, c = base[key].get("speedup"), cur[key].get("speedup")
+        if b and c:
+            print(
+                f"  {_fmt_key(key)}: oracle speedup {b:.1f}x -> {c:.1f}x "
+                f"(machine-independent sanity signal)"
+            )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", help="BENCH_interface.json from this run")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=1.5,
+        help="fail when current/baseline tick wall clock exceeds this "
+        "(default: %(default)s)",
+    )
+    ap.add_argument(
+        "--min-delta-ms",
+        type=float,
+        default=0.5,
+        help="absolute per-tick slack: ratio breaches inside it count as "
+        "scheduler noise, not regression (default: %(default)s)",
+    )
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    if not os.path.exists(args.baseline):
+        print(f"no baseline at {args.baseline}; nothing to gate against")
+        return 0
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    rows, ok = compare(current, baseline, args.threshold, args.min_delta_ms)
+    print_table(rows, current, baseline, args.threshold)
+    if os.environ.get("BENCH_BASELINE_SKIP"):
+        print("BENCH_BASELINE_SKIP set: reporting only, gate not enforced")
+        return 0
+    if not any(status.startswith("ok") or status == "REGRESSED" for *_, status in rows):
+        print("no overlapping record keys between current and baseline")
+        return 1
+    if not ok:
+        print("FAIL: session tick regressed beyond the threshold")
+        return 1
+    print("gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,11 +1,13 @@
 """NoC benchmark: broadcast vs. unicast-mesh vs. multicast-tree, random
-vs. optimized neuron placement, old-API vs. session-API wall clock, and
-the event-driven session tick vs. the dense-sweep oracle.
+vs. optimized neuron placement, old-API vs. session-API wall clock, the
+event-driven session tick vs. the dense-sweep oracle, and the multi-chip
+hierarchy sweep.
 
     PYTHONPATH=src python benchmarks/noc_bench.py [--cores 4,16,64] [--ticks 16]
-        [--tick-cores 16] [--tick-neurons 256] [--json [BENCH_interface.json]]
+        [--tick-cores 16] [--tick-neurons 256] [--chips 1,2,4]
+        [--json [BENCH_interface.json]]
 
-Four sweeps:
+Sweeps:
 
 1. **Transport scheme** (fixed random connectivity, fixed spikes): per-tick
    CAM searches, NoC link events (hops) and energy for the three schemes.
@@ -29,7 +31,15 @@ Four sweeps:
    tag-vs-every-source sweep + per-core discrete-event arbiter scan),
    both under the same jit + lax.scan session harness.  Currents are
    asserted bit-identical before timing.  ``--json`` writes the records
-   to BENCH_interface.json so CI can track the perf trajectory.
+   (plus the git SHA and the full CLI config, so uploaded artifacts are
+   comparable across runs) to BENCH_interface.json; CI gates on it via
+   ``benchmarks/check_regression.py``.
+
+5. **Chip hierarchy** (``--chips``): the same total fabric partitioned
+   into 1..K chips (`repro.noc.hierarchy`): chip-local vs. inter-chip
+   hops/latency/energy, and the sharded session
+   (``run(shard="chips")``, vmap fallback on one device) asserted
+   bit-identical to the unsharded path.
 
 Also asserts the PR acceptance criteria: at >= 16 cores, multicast-tree +
 optimized placement reduces total CAM searches and NoC link events vs. the
@@ -249,6 +259,73 @@ def tick_sweep(core_sweep, neurons, entries, ticks, repeats=3):
     return records
 
 
+def chips_sweep(chips_list, cores, neurons, entries, ticks, repeats=3):
+    """Same total fabric, 1..K chips: hierarchy costs + sharded session."""
+    print(f"\n== chip hierarchy sweep ({cores} cores total, {neurons} "
+          f"neurons/core, {entries} CAM entries, {ticks} ticks, best of "
+          f"{repeats}) ==")
+    print(f"{'chips':>5} {'noc_hops':>9} {'noc_latency':>11} {'chip_hops':>9} "
+          f"{'chip_latency':>12} {'chip_energy':>11} {'session_ms':>10} "
+          f"{'shard_ok':>8}")
+    base = fabric.FabricConfig(cores=cores, neurons_per_core=neurons,
+                               cam_entries_per_core=entries)
+    params = fabric.random_connectivity(jax.random.PRNGKey(0), base)
+    sp = jax.random.bernoulli(jax.random.PRNGKey(3), RATE,
+                              (ticks, cores, neurons))
+    records = []
+    cur_ref = None
+    for chips in chips_list:
+        cfg = dataclasses.replace(base, chips=chips)
+        session = Interface(cfg).compile(params)
+
+        def session_run():
+            out = session.run(sp)
+            jax.block_until_ready(out)
+            return out
+
+        cur, acc = session_run()                               # compile
+        t_run = min(_timed(session_run) for _ in range(repeats))
+        if cur_ref is None:
+            cur_ref = cur
+        assert bool(jnp.all(cur == cur_ref)), \
+            "currents must not depend on the chip partitioning"
+        cur_s, _ = session.run(sp, shard="chips")
+        shard_ok = bool(jnp.all(cur_s == cur))
+        assert shard_ok, "sharded currents drifted from the unsharded path"
+        rec = {"chips": chips, "cores": cores, "neurons_per_core": neurons,
+               "cam_entries_per_core": entries, "ticks": ticks,
+               "session_ms": t_run * 1e3,
+               "sharded_bit_identical": shard_ok}
+        for name in ("noc_hops", "noc_latency", "noc_energy", "chip_hops",
+                     "chip_latency", "chip_energy"):
+            rec[name] = float(getattr(acc, name))
+        records.append(rec)
+        print(f"{chips:>5} {rec['noc_hops']:>9.0f} {rec['noc_latency']:>11.1f} "
+              f"{rec['chip_hops']:>9.0f} {rec['chip_latency']:>12.1f} "
+              f"{rec['chip_energy']:>11.0f} {rec['session_ms']:>10.2f} "
+              f"{str(shard_ok):>8}")
+    return records
+
+
+def _git_sha():
+    """Current commit (worktree-dirty marked), or 'unknown' outside git."""
+    import subprocess
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)), timeout=10,
+        ).stdout.strip()
+        if not sha:
+            return "unknown"
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)), timeout=10,
+        ).stdout.strip()
+        return sha + ("-dirty" if dirty else "")
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
 def _timed(fn):
     t0 = time.perf_counter()
     fn()
@@ -275,6 +352,16 @@ def main(argv=None):
     ap.add_argument("--tick-ticks", type=int, default=8,
                     help="timesteps for the session-tick sweep "
                          "(default: %(default)s)")
+    ap.add_argument("--tick-repeats", type=int, default=3,
+                    help="best-of-N repeats for the session-tick sweep; "
+                         "raise on noisy shared runners (default: "
+                         "%(default)s)")
+    ap.add_argument("--chips", default=None, metavar="LIST",
+                    help="comma-separated chip counts for the hierarchy "
+                         "sweep (e.g. 1,2,4; off by default)")
+    ap.add_argument("--chips-cores", type=int, default=16,
+                    help="total cores for the chip sweep "
+                         "(default: %(default)s)")
     ap.add_argument("--json", nargs="?", const="BENCH_interface.json",
                     default=None, metavar="PATH",
                     help="write the session-tick records to PATH "
@@ -282,19 +369,33 @@ def main(argv=None):
     args = ap.parse_args(argv)
     core_sweep = tuple(int(c) for c in str(args.cores).split(",") if c)
     tick_cores = tuple(int(c) for c in str(args.tick_cores).split(",") if c)
+    chips_list = tuple(int(c) for c in str(args.chips).split(",") if c) \
+        if args.chips else ()
 
     # wall clock first: a pristine process keeps the comparison honest
     timing = api_timing_sweep(core_sweep, args.ticks)
     tick_records = tick_sweep(tick_cores, args.tick_neurons,
-                              args.tick_entries, args.tick_ticks)
+                              args.tick_entries, args.tick_ticks,
+                              repeats=args.tick_repeats)
+    chips_records = chips_sweep(chips_list, args.chips_cores, NEURONS,
+                                2 * NEURONS, args.tick_ticks,
+                                repeats=args.tick_repeats) \
+        if chips_list else []
     scheme = scheme_sweep(core_sweep)
     placed = placement_sweep(core_sweep)
 
     if args.json:
+        payload = {"benchmark": "interface_session_tick",
+                   "git_sha": _git_sha(),
+                   "config": vars(args),
+                   "rate": RATE,
+                   "records": tick_records}
+        if chips_records:
+            payload["chips_records"] = chips_records
         with open(args.json, "w") as f:
-            json.dump({"benchmark": "interface_session_tick",
-                       "rate": RATE, "records": tick_records}, f, indent=2)
-        print(f"\nwrote {args.json} ({len(tick_records)} records)")
+            json.dump(payload, f, indent=2)
+        print(f"\nwrote {args.json} ({len(tick_records)} records, "
+              f"sha {payload['git_sha'][:12]})")
 
     print("\n== acceptance checks ==")
     ok = True
@@ -330,6 +431,15 @@ def main(argv=None):
     else:
         print("  (tick speedup reported, not gated below 16 cores x 256 "
               "neurons/core)")
+    if chips_records:
+        c_ok = all(r["sharded_bit_identical"] for r in chips_records)
+        paid = all(r["chip_hops"] > 0 for r in chips_records if r["chips"] > 1)
+        free = all(r["chip_hops"] == 0 for r in chips_records
+                   if r["chips"] == 1)
+        print(f"  sharded sessions bit-identical at chips="
+              f"{','.join(str(r['chips']) for r in chips_records)}: {c_ok}; "
+              f"chip tier paid iff chips>1: {paid and free}")
+        ok &= c_ok and paid and free
     if not ok:
         raise SystemExit("acceptance criteria FAILED")
     print("  all passed")

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from repro.core import cam as cam_mod
 from repro.interface import pipeline as _pipeline
 from repro.interface import report as _report
-from repro.interface.config import resolve_cam
+from repro.interface.config import resolve_cam, resolve_chips
 from repro.interface.stats import StepStats  # noqa: F401  (re-export)
 from repro.interface.types import (  # noqa: F401  (re-exports)
     FabricParams,
@@ -47,15 +47,21 @@ from repro.noc import topology as noc_topology
 
 @dataclasses.dataclass(frozen=True)
 class FabricConfig:
-    cores: int = 4
+    cores: int | None = None                 # total; default 4 when omitted
     neurons_per_core: int = 256
     cam_entries_per_core: int | None = None  # defaults to 512 w/o explicit cam
     scheme: str = "hier_tree"
     cam: cam_mod.CamConfig | None = None
     noc: noc_topology.NocConfig | None = None
     impl: str = "xla"                        # tick backend: "xla" | "pallas"
+    chips: int = 1                           # cores = chips x cores_per_chip
+    cores_per_chip: int | None = None        # derived: cores // chips
 
     def __post_init__(self):
+        cores, per_chip = resolve_chips(self.chips, self.cores,
+                                        self.cores_per_chip)
+        object.__setattr__(self, "cores", cores)
+        object.__setattr__(self, "cores_per_chip", per_chip)
         cam, entries = resolve_cam(self.cam, self.cam_entries_per_core)
         object.__setattr__(self, "cam", cam)
         object.__setattr__(self, "cam_entries_per_core", entries)

@@ -205,6 +205,14 @@ NOC_HOP_LATENCY_NS = 1.2         # router traversal + link flight per hop
 NOC_LINK_SERIALIZATION_NS = 0.8  # per event on the most contended link
 NOC_HOP_ENERGY = 35.0            # model units per link traversal
 
+# Inter-chip router tier (the DYNAPs R3 level, arXiv:1708.04198 §III):
+# chip-to-chip hops leave the die, so they pay pad/SerDes flight time and
+# off-chip driver energy - an order of magnitude over an on-chip mesh hop.
+# Same unit domains as the on-chip constants so tiers can be summed.
+CHIP_HOP_LATENCY_NS = 12.0        # SerDes + package flight per chip hop
+CHIP_LINK_SERIALIZATION_NS = 4.0  # per event on the busiest chip link
+CHIP_HOP_ENERGY = 350.0           # model units per chip-link traversal
+
 # TPU v5e hardware model used by the roofline analysis (per chip).
 TPU_PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 TPU_HBM_BW = 819e9                # bytes/s

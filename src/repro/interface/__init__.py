@@ -78,6 +78,7 @@ _LAZY_EXPORTS = {
     "int_to_bits": "repro.interface.types",
     "random_connectivity": "repro.interface.types",
     "interface_tick": "repro.interface.pipeline",
+    "accounting_stats": "repro.interface.pipeline",
     "build_tables": "repro.interface.pipeline",
     "RoutingIndex": "repro.interface.pipeline",
     "build_routing_index": "repro.interface.pipeline",

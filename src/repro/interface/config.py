@@ -36,10 +36,64 @@ def resolve_cam(cam: cam_mod.CamConfig | None, entries: int | None,
     return cam, cam.entries
 
 
+def resolve_chips(chips: int, cores: int | None,
+                  cores_per_chip: int | None, default_cores: int = 4):
+    """Shared chips/cores/cores_per_chip reconciliation.
+
+    ``cores`` is always the *total* core count across chips; configs store
+    the resolved pair, so both fields survive `dataclasses.replace`.
+    Resolution order:
+
+      * ``cores`` given (never None after a config has resolved once, so
+        every ``dataclasses.replace(cfg, chips=k)`` lands here): it is
+        authoritative - ``chips`` must divide it, and ``cores_per_chip``
+        is (re-)derived.  A disagreeing ``cores_per_chip`` is treated as
+        stale, not an error: the derived field necessarily rides along
+        through ``replace``.
+      * ``cores`` omitted: total = ``chips * cores_per_chip`` (or the
+        default core count when neither is given).
+
+    Note the asymmetry this implies: to *repartition* an existing config,
+    replace ``chips`` - ``replace(cfg, cores_per_chip=...)`` alone is
+    overridden by the explicit stored ``cores``.  A ``cores_per_chip``
+    that cannot be a stale derived value (it does not divide ``cores``)
+    raises.
+
+    Returns the effective ``(cores, cores_per_chip)`` pair.
+    """
+    if not isinstance(chips, int) or chips < 1:
+        raise ValueError(f"chips must be a positive int, got {chips!r}")
+    if cores is None:
+        cores = (chips * cores_per_chip if cores_per_chip is not None
+                 else default_cores)
+    if cores_per_chip is not None and chips * cores_per_chip == cores:
+        return cores, cores_per_chip
+    if cores_per_chip is not None and cores % cores_per_chip != 0:
+        raise ValueError(
+            f"cores_per_chip={cores_per_chip} conflicts with cores={cores} "
+            f"and cannot be a stale derived value; pass chips (and "
+            f"optionally cores_per_chip) to repartition")
+    if cores % chips != 0:
+        raise ValueError(
+            f"cores={cores} conflicts with chips={chips}"
+            + (f" (cores_per_chip={cores_per_chip})"
+               if cores_per_chip is not None else "")
+            + ": chips must divide the total core count "
+            "(or pass cores_per_chip alone to derive the total)")
+    return cores, cores // chips
+
+
 @dataclasses.dataclass(frozen=True)
 class InterfaceConfig:
     """Static description of the full core-interface pipeline.
 
+    chips:   chip tier of the fabric.  ``cores`` is always the *total*
+             core count (``chips x cores_per_chip``); every chip carries
+             its own ``cores_per_chip``-core mesh and chips are joined by
+             an inter-chip router level (`repro.noc.hierarchy`).  With
+             the default ``chips=1`` the fabric is the flat single-chip
+             mesh and behaves bit-identically to configs predating the
+             chip tier.
     scheme:  arbiter architecture (registry: `repro.interface.ARBITERS`)
     cam:     CAM variant/size (registry: `repro.interface.CAM_VARIANTS`)
     noc:     transport scheme (registry: `repro.interface.NOC_SCHEMES`)
@@ -50,15 +104,21 @@ class InterfaceConfig:
              mode off-TPU).  Currents are bit-identical across impls.
     """
 
-    cores: int = 4
+    cores: int | None = None                  # total; default 4 when omitted
     neurons_per_core: int = 256
     cam_entries_per_core: int | None = None   # defaults to 512 w/o explicit cam
     scheme: str = "hier_tree"
     cam: cam_mod.CamConfig | None = None
     noc: noc_topology.NocConfig | None = None
     impl: str = "xla"
+    chips: int = 1
+    cores_per_chip: int | None = None         # derived: cores // chips
 
     def __post_init__(self):
+        cores, per_chip = resolve_chips(self.chips, self.cores,
+                                        self.cores_per_chip)
+        object.__setattr__(self, "cores", cores)
+        object.__setattr__(self, "cores_per_chip", per_chip)
         cam, entries = resolve_cam(self.cam, self.cam_entries_per_core)
         object.__setattr__(self, "cam", cam)
         object.__setattr__(self, "cam_entries_per_core", entries)
@@ -89,14 +149,16 @@ class InterfaceConfig:
         """Lift a legacy `FabricConfig` into a validated `InterfaceConfig`."""
         return cls(cores=cfg.cores, neurons_per_core=cfg.neurons_per_core,
                    scheme=cfg.scheme, cam=cfg.cam, noc=cfg.noc,
-                   impl=getattr(cfg, "impl", "xla"))
+                   impl=getattr(cfg, "impl", "xla"),
+                   chips=getattr(cfg, "chips", 1))
 
     def fabric(self):
         """The equivalent legacy `FabricConfig` (for un-migrated call sites)."""
         from repro.core import fabric as fabric_mod
         return fabric_mod.FabricConfig(
             cores=self.cores, neurons_per_core=self.neurons_per_core,
-            scheme=self.scheme, cam=self.cam, noc=self.noc, impl=self.impl)
+            scheme=self.scheme, cam=self.cam, noc=self.noc, impl=self.impl,
+            chips=self.chips)
 
 
 def as_interface_config(config) -> InterfaceConfig:

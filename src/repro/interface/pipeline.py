@@ -43,11 +43,24 @@ from repro.interface.stats import StepStats
 from repro.interface.types import int_to_bits
 from repro.kernels.cam_search import ops as cam_ops
 from repro.kernels.hat_encode import ops as hat_ops
+from repro.noc import hierarchy
 from repro.noc import router as noc_router
 
 
-def build_tables(params, cfg) -> noc_router.NocTables:
-    """NoC routing tables for the configured scheme (build once, reuse)."""
+def build_tables(params, cfg):
+    """NoC routing tables for the configured scheme (build once, reuse).
+
+    Returns flat single-chip `NocTables`, or two-tier
+    `repro.noc.hierarchy.HierTables` (chip-local meshes + inter-chip
+    router level) when ``cfg.chips > 1``.
+    """
+    chips = getattr(cfg, "chips", 1)
+    if chips > 1:
+        return hierarchy.build_hier_tables(
+            params.tags, params.valid, chips=chips,
+            cores_per_chip=cfg.cores_per_chip,
+            neurons_per_core=cfg.neurons_per_core,
+            tag_bits=cfg.tag_bits, scheme=cfg.noc.scheme)
     return noc_router.build_tables(params.tags, params.valid,
                                    cores=cfg.cores,
                                    neurons_per_core=cfg.neurons_per_core,
@@ -59,11 +72,17 @@ class RoutingIndex(NamedTuple):
     """Compile-time decode of the CAM tags into gather/kernel operands.
 
     Everything here depends only on (params, cfg) - `InterfaceSession`
-    builds it once; the per-tick step just gathers through it.
+    builds it once; the per-tick step just gathers through it.  Each CAM
+    entry's stored tag resolves to a *global* source address at compile
+    time: ``src_idx`` is the flat neuron index, and ``src_chip`` /
+    ``src_core`` decode it to (chip, core-within-chip) under the fabric's
+    chip tier (``src_chip`` is all-zero on flat single-chip configs).
     """
 
     src_idx: jnp.ndarray     # (cores, entries) int32 global source index
     active: jnp.ndarray      # (cores, entries) bool: valid & tag in range
+    src_chip: jnp.ndarray    # (cores, entries) int32 source chip
+    src_core: jnp.ndarray    # (cores, entries) int32 source core within chip
     q_words: jnp.ndarray     # (cores*entries, W) int32 packed entry tags
     src_words: jnp.ndarray   # (cores*neurons, W) int32 packed source addrs
 
@@ -77,9 +96,14 @@ def build_routing_index(params, cfg) -> RoutingIndex:
     # tag values outside the populated address space never match a source
     active = params.valid & (src_int < total)
     src_idx = jnp.minimum(src_int, total - 1).astype(jnp.int32)
+    per_chip = getattr(cfg, "cores_per_chip", None) or cfg.cores
+    src_chip, src_core = hierarchy.chip_of_core(
+        src_idx // cfg.neurons_per_core, per_chip)
     q_words = cam_ops.pack_bits(params.tags.reshape(-1, bits))
     src_words = cam_ops.pack_bits(int_to_bits(jnp.arange(total), bits))
     return RoutingIndex(src_idx=src_idx, active=active,
+                        src_chip=src_chip.astype(jnp.int32),
+                        src_core=src_core.astype(jnp.int32),
                         q_words=q_words, src_words=src_words)
 
 
@@ -157,6 +181,11 @@ def interface_tick(params, spikes: jnp.ndarray, cfg,
             f"NoC tables were built for scheme {tables.scheme!r} but the "
             f"config requests {cfg.noc.scheme!r}; rebuild them with "
             f"repro.interface.build_tables(params, cfg)")
+    if getattr(tables, "chips", 1) != getattr(cfg, "chips", 1):
+        raise ValueError(
+            f"NoC tables were built for chips={getattr(tables, 'chips', 1)} "
+            f"but the config requests chips={getattr(cfg, 'chips', 1)}; "
+            f"rebuild them with repro.interface.build_tables(params, cfg)")
     if arb_cfg is None:
         arb_cfg = arb.ArbiterConfig(cfg.scheme, n)
     if cam_cycle_ns is None:
@@ -212,13 +241,34 @@ def interface_tick(params, spikes: jnp.ndarray, cfg,
         addr_seq = _addr_streams(spikes, cfg, n)
 
     # ---- NoC delivery + PPA accounting ------------------------------------
-    total_events = jnp.sum(spikes).astype(jnp.float32)
-    enc_energy = jax.vmap(
+    enc_per_core = jax.vmap(
         lambda seq: arb.encode_energy_units(cfg.scheme, n, seq))(addr_seq)
+    stats = accounting_stats(cfg, tables, spikes, latencies, enc_per_core,
+                             hits_total, params.valid, cam_cycle_ns,
+                             noc_scheme)
+    return currents, stats
 
-    valid_cnt = jnp.sum(params.valid, axis=1).astype(jnp.float32)
+
+def accounting_stats(cfg, tables, spikes, latencies, enc_per_core,
+                     hits_total, valid, cam_cycle_ns,
+                     noc_scheme=None) -> StepStats:
+    """The per-tick PPA accounting tail, shared by every execution path.
+
+    Both `interface_tick` (flat and oracle) and the chip-sharded session
+    tick funnel through this function, so the `StepStats` arithmetic is
+    identical by construction across paths: callers only differ in how
+    they produce the per-core quantities (``latencies`` (cores,) grant
+    completion times, ``enc_per_core`` (cores,) address-line toggles per
+    event, ``hits_total`` scalar CAM hits).
+    """
+    if noc_scheme is None:
+        noc_scheme = interface_registry.get_noc_scheme(cfg.noc.scheme)
+    spikes_flat = spikes.reshape(-1)
+    total_events = jnp.sum(spikes).astype(jnp.float32)
+
+    valid_cnt = jnp.sum(valid, axis=1).astype(jnp.float32)
     searches, entries_per_search = noc_scheme.cam_accounting(
-        tables, spikes_flat, valid_cnt, total_events, cores)
+        tables, spikes_flat, valid_cnt, total_events, cfg.cores)
     match_per_search = hits_total.astype(jnp.float32) / jnp.maximum(searches, 1.0)
     mismatch_per_search = entries_per_search - match_per_search
     cam_energy = searches * cam_mod._energy_jnp(cfg.cam, match_per_search,
@@ -227,14 +277,18 @@ def interface_tick(params, spikes: jnp.ndarray, cfg,
 
     noc_hops, noc_latency, noc_energy, _ = noc_router.noc_step_costs(
         tables, spikes_flat)
+    chip_hops, chip_latency, chip_energy = hierarchy.chip_step_costs(
+        tables, spikes_flat)
 
-    stats = StepStats(events=total_events,
-                      encode_latency=jnp.max(latencies),
-                      encode_energy=jnp.sum(enc_energy * jnp.sum(spikes, 1)),
-                      cam_searches=searches,
-                      cam_energy=cam_energy,
-                      cam_time_ns=cam_time,
-                      noc_hops=noc_hops,
-                      noc_latency=noc_latency,
-                      noc_energy=noc_energy)
-    return currents, stats
+    return StepStats(events=total_events,
+                     encode_latency=jnp.max(latencies),
+                     encode_energy=jnp.sum(enc_per_core * jnp.sum(spikes, 1)),
+                     cam_searches=searches,
+                     cam_energy=cam_energy,
+                     cam_time_ns=cam_time,
+                     noc_hops=noc_hops,
+                     noc_latency=noc_latency,
+                     noc_energy=noc_energy,
+                     chip_hops=chip_hops,
+                     chip_latency=chip_latency,
+                     chip_energy=chip_energy)

@@ -49,13 +49,18 @@ def ppa_report(config) -> dict:
     cam = cfg.cam
     conv = cam_mod.CamConfig(cam.entries, cscd=False, feedback=False,
                              speculative=False)
-    w, h = topology.mesh_dims(cfg.cores)
-    hops = topology.hop_matrix(cfg.cores)
+    # per-chip core mesh when a chip tier exists, the flat mesh otherwise
+    mesh_cores = cfg.cores_per_chip if cfg.chips > 1 else cfg.cores
+    w, h = topology.mesh_dims(mesh_cores)
+    hops = topology.hop_matrix(mesh_cores)
+    chip_hops = topology.hop_matrix(cfg.chips)
     area = interface_area_um2(cfg)
 
     return {
         "config": {
             "cores": cfg.cores,
+            "chips": cfg.chips,
+            "cores_per_chip": cfg.cores_per_chip,
             "neurons_per_core": n,
             "tag_bits": cfg.tag_bits,
             "arbiter": cfg.scheme,
@@ -88,12 +93,22 @@ def ppa_report(config) -> dict:
         },
         "noc": {
             "mesh_dims": (w, h),
-            "links": topology.num_links(cfg.cores),
+            "links": topology.num_links(mesh_cores) * cfg.chips,
             "mean_hop_distance": float(jnp.mean(hops)),
             "max_hop_distance": int(jnp.max(hops)),
             "hop_latency_ns": ppa.NOC_HOP_LATENCY_NS,
             "link_serialization_ns": ppa.NOC_LINK_SERIALIZATION_NS,
             "hop_energy": ppa.NOC_HOP_ENERGY,
+        },
+        "hierarchy": {
+            "chips": cfg.chips,
+            "chip_mesh_dims": topology.mesh_dims(cfg.chips),
+            "chip_links": topology.num_links(cfg.chips),
+            "mean_chip_hop_distance": float(jnp.mean(chip_hops)),
+            "max_chip_hop_distance": int(jnp.max(chip_hops)),
+            "chip_hop_latency_ns": ppa.CHIP_HOP_LATENCY_NS,
+            "chip_link_serialization_ns": ppa.CHIP_LINK_SERIALIZATION_NS,
+            "chip_hop_energy": ppa.CHIP_HOP_ENERGY,
         },
         "per_core_area": {
             "arbiter_units": area["arbiter_units"],

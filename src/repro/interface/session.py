@@ -2,11 +2,25 @@
 
 `Interface(config).compile(params)` pre-builds everything the per-tick
 step needs exactly once - the arbiter plan, the NoC subscription/link
-tables, the CAM routing index (stored tags decoded back to source-neuron
-indices), the CAM calibration constants - and returns an
-`InterfaceSession` whose `run` / `run_batched` execute multi-timestep
-simulation as a single jit-compiled `jax.lax.scan` (+`vmap` for the
-batched form) with streaming `StepStats` accumulation.
+tables (two-tier when ``cfg.chips > 1``), the CAM routing index (stored
+tags decoded back to (chip, core, neuron) source addresses), the CAM
+calibration constants - and returns an `InterfaceSession` whose `run` /
+`run_batched` execute multi-timestep simulation as a single jit-compiled
+`jax.lax.scan` (+`vmap` for the batched form) with streaming `StepStats`
+accumulation.
+
+Chip sharding: ``run(spikes, shard="chips")`` executes the per-chip slice
+of every tick - the CAM match/scatter, the per-core arbiter latency, and
+the AER encode stage - under `repro.compat.shard_map` over a 1D
+``("chips",)`` device mesh (`repro.launch.mesh.make_chip_mesh`), one
+device per simulated chip.  On a single-device host (or whenever fewer
+devices exist than chips) the same per-chip body runs under `jax.vmap`
+instead, so results never depend on the host topology.  Both mapped paths
+reassemble the per-core vectors in fabric order and funnel through
+`pipeline.accounting_stats`: currents are bit-identical to the unsharded
+oracle on either path (and stats too under the vmap fallback); on a real
+multi-device mesh the stats agree to float tolerance, since XLA may
+partition the replicated accounting reductions differently.
 
 This replaces the seed pattern of calling `fabric.step` in a Python loop,
 which re-entered jit dispatch every tick and silently rebuilt the NoC
@@ -15,14 +29,20 @@ tables whenever the caller forgot to thread them through.
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import arbiter as arb
 from repro.core import cam as cam_mod
 from repro.interface import pipeline
 from repro.interface.config import as_interface_config
 from repro.interface.stats import StepStats
+
+_SHARD_MODES = (None, "chips")
 
 
 class Interface:
@@ -45,11 +65,13 @@ class InterfaceSession:
     """A precompiled (config, params) binding with scan-based execution.
 
     Attributes built once at construction:
-      tables    NoC subscription/hop/link tables (`NocTables`)
+      tables    NoC subscription/hop/link tables (`NocTables`, or
+                `repro.noc.hierarchy.HierTables` when ``cfg.chips > 1``)
       arb_plan  arbiter plan (`ArbiterConfig`: scheme entry, levels, fill)
-      routing   CAM tags decoded to source indices (`RoutingIndex`) - the
-                per-tick CAM match is a gather through it (or the
-                `cam_search` kernel when ``cfg.impl == "pallas"``)
+      routing   CAM tags decoded to (chip, core, neuron) source addresses
+                (`RoutingIndex`) - the per-tick CAM match is a gather
+                through it (or the `cam_search` kernel when
+                ``cfg.impl == "pallas"``)
       cam_cycle_ns  CAM search cycle time for the configured variant
     """
 
@@ -79,6 +101,7 @@ class InterfaceSession:
         self._tick = jax.jit(tick)
         self._run = jax.jit(run)
         self._run_batched = jax.jit(jax.vmap(run, in_axes=(None, 0)))
+        self._sharded_cache = None
 
     # ---- execution -------------------------------------------------------
 
@@ -86,22 +109,149 @@ class InterfaceSession:
         """One tick.  spikes: (cores, neurons_per_core) bool."""
         return self._tick(self.params, self._check(spikes, 2))
 
-    def run(self, spikes) -> tuple[jnp.ndarray, StepStats]:
+    def run(self, spikes, shard: str | None = None
+            ) -> tuple[jnp.ndarray, StepStats]:
         """Multi-timestep simulation under one jit-compiled lax.scan.
 
         spikes: (T, cores, neurons_per_core) bool
+        shard:  None (default) runs the flat fabric-wide tick; ``"chips"``
+            maps the per-chip tick over a device mesh (see module
+            docstring), falling back to vmap when the host has fewer
+            devices than chips.  Sharded execution always uses the XLA
+            gather backend for the CAM match (bit-identical to
+            ``impl="pallas"``, which is tested against it).
         returns (currents (T, cores, neurons_per_core), accumulated stats);
         use ``stats.summary(ticks=T)`` for per-tick means.
         """
-        return self._run(self.params, self._check(spikes, 3))
+        spikes = self._check(spikes, 3)
+        fn = self._shard_fn("run", shard)
+        if fn is not None:
+            return fn(spikes)
+        return self._run(self.params, spikes)
 
-    def run_batched(self, spikes) -> tuple[jnp.ndarray, StepStats]:
+    def run_batched(self, spikes, shard: str | None = None
+                    ) -> tuple[jnp.ndarray, StepStats]:
         """Batched scan: spikes (B, T, cores, neurons_per_core) bool.
 
         Returns (currents (B, T, C, N), stats with (B,)-shaped leaves,
-        each accumulated over that batch element's T ticks).
+        each accumulated over that batch element's T ticks).  ``shard``
+        behaves as in `run` (the batch axis is vmapped over the sharded
+        scan).
         """
-        return self._run_batched(self.params, self._check(spikes, 4))
+        spikes = self._check(spikes, 4)
+        fn = self._shard_fn("run_batched", shard)
+        if fn is not None:
+            return fn(spikes)
+        return self._run_batched(self.params, spikes)
+
+    # ---- chip sharding ---------------------------------------------------
+
+    def _shard_fn(self, kind: str, shard: str | None):
+        if shard is None:
+            return None
+        if shard not in _SHARD_MODES:
+            raise ValueError(
+                f"unknown shard mode {shard!r}; expected one of "
+                f"{', '.join(repr(m) for m in _SHARD_MODES)}")
+        if self.config.chips == 1:
+            return None          # flat fabric: the unsharded scan IS the tick
+        if self._sharded_cache is None:
+            self._sharded_cache = self._build_sharded()
+        return self._sharded_cache[kind]
+
+    def _chip_body(self):
+        """Per-chip tick work: local CAM match/scatter + encode stage.
+
+        Closure signature: (params_chip, src_idx, active, spikes_chip,
+        spikes_flat_global) -> (currents (cpc, n), latencies (cpc,),
+        enc_per_core (cpc,), hits scalar).  Pure per-chip function - no
+        collectives - so the identical body runs under shard_map (the
+        replicated ``spikes_flat`` argument becomes the one all-gather at
+        the shard_map boundary) and under the single-device vmap fallback.
+        """
+        cfg = self.config
+        n = cfg.neurons_per_core
+        arb_plan = self.arb_plan
+        scheme = cfg.scheme
+        stream_cfg = (cfg if cfg.impl == "xla"
+                      else dataclasses.replace(cfg, impl="xla"))
+
+        def chip_body(p_chip, src_idx, active, spikes_chip, spikes_flat):
+            drive = (spikes_flat[src_idx] & active).astype(jnp.float32)
+            contrib = drive * p_chip.weights
+            currents = jax.vmap(
+                lambda c, t: jnp.zeros((n,), jnp.float32).at[t].add(c)
+            )(contrib, p_chip.targets)
+            latencies = arb.batched_tick_latency(arb_plan, spikes_chip)
+            addr = pipeline._addr_streams(spikes_chip, stream_cfg, n)
+            enc = jax.vmap(
+                lambda seq: arb.encode_energy_units(scheme, n, seq))(addr)
+            return currents, latencies, enc, jnp.sum(drive)
+
+        return chip_body
+
+    def _build_sharded(self) -> dict:
+        cfg = self.config
+        chips, cpc, n = cfg.chips, cfg.cores_per_chip, cfg.neurons_per_core
+        body = self._chip_body()
+
+        # static per-chip operands, stacked (chips, cores_per_chip, ...)
+        per_chip = jax.tree.map(
+            lambda x: x.reshape((chips, cpc) + x.shape[1:]),
+            (self.params, self.routing.src_idx, self.routing.active))
+
+        if len(jax.devices()) >= chips:
+            from repro.launch import mesh as launch_mesh
+            from repro.parallel import sharding as shd
+
+            mesh = launch_mesh.make_chip_mesh(chips)
+
+            def block_body(p_c, si, ac, sp_c, sp_flat):
+                # shard_map blocks keep the mapped axis with size 1
+                sq = jax.tree.map(lambda x: x[0], (p_c, si, ac, sp_c))
+                cur, lat, enc, hits = body(*sq, sp_flat)
+                return cur[None], lat[None], enc[None], hits[None]
+
+            mapped = compat.shard_map(
+                block_body, mesh=mesh,
+                in_specs=(P("chips"), P("chips"), P("chips"), P("chips"),
+                          P()),
+                out_specs=P("chips"))
+            # pin the per-chip constants to their devices once, at build
+            per_chip = jax.device_put(
+                per_chip,
+                shd.to_named(shd.leading_axis_specs(per_chip, "chips"),
+                             mesh))
+        else:
+            mapped = jax.vmap(body, in_axes=(0, 0, 0, 0, None))
+
+        p_chips, src_idx, active = per_chip
+        tables, cam_cycle_ns = self.tables, self.cam_cycle_ns
+        valid = self.params.valid
+
+        def tick(spikes_cn):
+            if spikes_cn.dtype != jnp.bool_:
+                spikes_cn = spikes_cn > 0
+            spikes_flat = spikes_cn.reshape(-1)
+            sp_chips = spikes_cn.reshape(chips, cpc, n)
+            cur_c, lat_c, enc_c, hits_c = mapped(p_chips, src_idx, active,
+                                                 sp_chips, spikes_flat)
+            currents = cur_c.reshape(cfg.cores, n)
+            stats = pipeline.accounting_stats(
+                cfg, tables, spikes_cn, lat_c.reshape(cfg.cores),
+                enc_c.reshape(cfg.cores), jnp.sum(hits_c), valid,
+                cam_cycle_ns)
+            return currents, stats
+
+        def run(spikes_tcn):
+            def scan_body(acc, s_t):
+                currents, st = tick(s_t)
+                return acc.accumulate(st), currents
+            acc, currents = jax.lax.scan(scan_body, StepStats.zeros(),
+                                         spikes_tcn)
+            return currents, acc
+
+        return {"run": jax.jit(run), "run_batched": jax.jit(jax.vmap(run))}
 
     # ---- introspection ---------------------------------------------------
 

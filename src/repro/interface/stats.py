@@ -28,9 +28,15 @@ class StepStats(NamedTuple):
     cam_searches: jnp.ndarray      # scalar: CAM search operations
     cam_energy: jnp.ndarray        # scalar: CAM model energy units
     cam_time_ns: jnp.ndarray       # scalar: serialized CAM search time
-    noc_hops: jnp.ndarray          # scalar: mesh link traversals
-    noc_latency: jnp.ndarray       # scalar: NoC delivery latency (ns)
-    noc_energy: jnp.ndarray        # scalar: NoC energy (model units)
+    noc_hops: jnp.ndarray          # scalar: chip-local mesh link traversals
+    noc_latency: jnp.ndarray       # scalar: chip-local delivery latency (ns)
+    noc_energy: jnp.ndarray        # scalar: chip-local NoC energy (units)
+    # Inter-chip router tier (repro.noc.hierarchy); all zero when chips=1.
+    # Appended after the original fields so positional consumers keep
+    # working on flat single-chip fabrics.
+    chip_hops: jnp.ndarray         # scalar: inter-chip link traversals
+    chip_latency: jnp.ndarray      # scalar: inter-chip delivery latency (ns)
+    chip_energy: jnp.ndarray       # scalar: inter-chip energy (model units)
 
     @classmethod
     def zeros(cls) -> "StepStats":

@@ -32,3 +32,15 @@ def make_host_mesh(data: int = 1, model: int = 1):
     if data * model > n:
         raise ValueError(f"need {data * model} devices, have {n}")
     return jax.make_mesh((data, model), ("data", "model"), **_axis_kwargs(2))
+
+
+def make_chip_mesh(chips: int):
+    """1D ``("chips",)`` device mesh for sharded interface sessions.
+
+    One device per simulated neuromorphic chip
+    (`InterfaceSession.run(shard="chips")`); callers fall back to vmap
+    when fewer devices exist than chips."""
+    n = len(jax.devices())
+    if chips > n:
+        raise ValueError(f"need {chips} devices for a chip mesh, have {n}")
+    return jax.make_mesh((chips,), ("chips",), **_axis_kwargs(1))

@@ -7,6 +7,8 @@ package adds the transport fabric between the cores:
   multicast.py  per-source destination masks from the CAM tables; hop counts
                 for unicast replication vs. a single multicast spanning tree
   router.py     per-link event loads, contention latency and energy
+  hierarchy.py  two-tier fabric: chip-local meshes + the DYNAPs-style
+                inter-chip router level (chips x cores_per_chip cores)
   placement.py  neuron-to-core placement (greedy hyperedge-overlap optimizer
                 vs. random/identity baselines) + traffic-cost objective
 
@@ -21,6 +23,8 @@ from repro.noc.multicast import (subscription_matrix, dest_core_mask,
                                  unicast_hops, multicast_tree_hops,
                                  broadcast_tree_hops)
 from repro.noc.router import NocTables, build_tables, link_loads, noc_step_costs
+from repro.noc.hierarchy import (HierTables, build_hier_tables,
+                                 chip_step_costs, chip_of_core)
 from repro.noc.placement import (identity_placement, random_placement,
                                  greedy_overlap_placement, traffic_cost,
                                  apply_placement, fanout_adjacency,
@@ -31,6 +35,7 @@ __all__ = [
     "subscription_matrix", "dest_core_mask", "unicast_hops",
     "multicast_tree_hops", "broadcast_tree_hops",
     "NocTables", "build_tables", "link_loads", "noc_step_costs",
+    "HierTables", "build_hier_tables", "chip_step_costs", "chip_of_core",
     "identity_placement", "random_placement", "greedy_overlap_placement",
     "traffic_cost", "apply_placement", "fanout_adjacency",
     "clustered_connectivity",

@@ -214,6 +214,16 @@ def cache_pspecs(cache, cfg: ModelConfig, ctx: ShardCtx):
     return jax.tree_util.tree_map_with_path(one, cache)
 
 
+def leading_axis_specs(tree, axis: str):
+    """PartitionSpec pytree sharding every leaf's leading dim over `axis`.
+
+    The shard-by-leading-dim rule used by the interface session's chip
+    sharding (`InterfaceSession.run(shard="chips")`): every per-chip
+    operand is stacked ``(chips, ...)`` and split across the 1D chip mesh.
+    """
+    return jax.tree.map(lambda _: P(axis), tree)
+
+
 def to_named(specs_tree, mesh):
     from jax.sharding import NamedSharding
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs_tree,
