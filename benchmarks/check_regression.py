@@ -8,18 +8,21 @@ tick's wall clock regresses beyond the threshold:
         [--baseline benchmarks/baseline/BENCH_interface.json]
         [--threshold 1.5]
 
-Records are matched on (cores, neurons_per_core, cam_entries_per_core, ticks);
-the gate compares ``new_tick_ms`` (the event-driven session tick, the number
-the repo optimizes for).  Millisecond-scale measurements are scheduler-noise
-bound even best-of-N, so a regression must clear the ratio threshold AND an
+Records are matched on (cores, neurons_per_core, cam_entries_per_core, ticks)
+plus the optional ``scenario`` tag (`noc_bench --scenario`; records without
+one match under ``"-"``, so pre-scenario payloads keep gating).  The gate
+compares ``new_tick_ms`` (the event-driven session tick, the number the repo
+optimizes for).  Millisecond-scale measurements are scheduler-noise bound
+even best-of-N, so a regression must clear the ratio threshold AND an
 absolute slack (``--min-delta-ms``, default 0.5 ms per tick) to fail; runs
 inside the slack report ``ok (noise)``.  A delta table is always printed,
 including the machine-independent oracle speedup so runner-speed drift is
-distinguishable from a real regression.  Records present on only one side are report-only
-(sweeps may grow) - but *zero* overlapping keys fails, because it means the
-sweep config diverged from the baseline and the gate is vacuous; regenerate
-the baseline in that case.  Set ``BENCH_BASELINE_SKIP=1`` to turn the whole
-gate into a report-only run (e.g. on known-slow debug builds).
+distinguishable from a real regression.  Records only the candidate has are
+report-only (sweeps may grow), but a malformed record (missing sweep keys or
+``new_tick_ms``) and a baseline key with no candidate counterpart both fail
+with an explicit message - a silently shrunken sweep would leave part of the
+baseline ungated.  Set ``BENCH_BASELINE_SKIP=1`` to turn the whole gate into
+a report-only run (e.g. on known-slow debug builds).
 """
 
 from __future__ import annotations
@@ -34,10 +37,30 @@ DEFAULT_BASELINE = os.path.join(
 )
 
 KEY_FIELDS = ("cores", "neurons_per_core", "cam_entries_per_core", "ticks")
+# Optional sweep tags with the value records written before the tag existed
+# are indexed under, so old payloads and new ones stay comparable.
+OPTIONAL_KEY_FIELDS = (("scenario", "-"),)
+VALUE_FIELD = "new_tick_ms"
 
 
-def _index(payload: dict) -> dict:
-    return {tuple(r[k] for k in KEY_FIELDS): r for r in payload.get("records", [])}
+class RecordFormatError(ValueError):
+    """A benchmark record is missing sweep keys or the gated value."""
+
+
+def _index(payload: dict, source: str) -> dict:
+    out = {}
+    for i, r in enumerate(payload.get("records", [])):
+        missing = [k for k in (*KEY_FIELDS, VALUE_FIELD) if k not in r]
+        if missing:
+            raise RecordFormatError(
+                f"{source}: record {i} is missing sweep key(s) "
+                f"{', '.join(missing)}; regenerate the payload with the "
+                f"current benchmarks/noc_bench.py --json"
+            )
+        key = tuple(r[k] for k in KEY_FIELDS)
+        key += tuple(r.get(k, default) for k, default in OPTIONAL_KEY_FIELDS)
+        out[key] = r
+    return out
 
 
 def _fmt_key(key: tuple) -> str:
@@ -48,16 +71,19 @@ def compare(
     current: dict, baseline: dict, threshold: float, min_delta_ms: float
 ) -> tuple[list, bool]:
     """Returns (table rows, ok).  A row per matched record key."""
-    cur, base = _index(current), _index(baseline)
+    cur = _index(current, "current")
+    base = _index(baseline, "baseline")
     rows, ok = [], True
     for key in sorted(set(cur) | set(base)):
         if key not in cur:
-            rows.append((key, base[key]["new_tick_ms"], None, None, "missing"))
+            # the sweep shrank: part of the baseline would go ungated
+            rows.append((key, base[key][VALUE_FIELD], None, None, "MISSING"))
+            ok = False
             continue
         if key not in base:
-            rows.append((key, None, cur[key]["new_tick_ms"], None, "new"))
+            rows.append((key, None, cur[key][VALUE_FIELD], None, "new"))
             continue
-        b, c = base[key]["new_tick_ms"], cur[key]["new_tick_ms"]
+        b, c = base[key][VALUE_FIELD], cur[key][VALUE_FIELD]
         ratio = c / max(b, 1e-12)
         if ratio <= threshold:
             status = "ok"
@@ -80,7 +106,7 @@ def print_table(rows: list, current: dict, baseline: dict, threshold: float) -> 
         f"current sha {current.get('git_sha', 'unknown')[:12]}"
     )
     header = (
-        f"{'cores x n/core x entries x ticks':>33} {'base_ms':>9} "
+        f"{'cores x n/core x entries x ticks x scenario':>44} {'base_ms':>9} "
         f"{'cur_ms':>9} {'ratio':>7} {'status':>10}"
     )
     print(header)
@@ -88,8 +114,8 @@ def print_table(rows: list, current: dict, baseline: dict, threshold: float) -> 
         b_s = f"{b:9.3f}" if b is not None else f"{'-':>9}"
         c_s = f"{c:9.3f}" if c is not None else f"{'-':>9}"
         r_s = f"{ratio:6.2f}x" if ratio is not None else f"{'-':>7}"
-        print(f"{_fmt_key(key):>33} {b_s} {c_s} {r_s} {status:>10}")
-    cur, base = _index(current), _index(baseline)
+        print(f"{_fmt_key(key):>44} {b_s} {c_s} {r_s} {status:>10}")
+    cur, base = _index(current, "current"), _index(baseline, "baseline")
     for key in sorted(set(cur) & set(base)):
         b, c = base[key].get("speedup"), cur[key].get("speedup")
         if b and c:
@@ -127,8 +153,12 @@ def main(argv=None) -> int:
     with open(args.baseline) as f:
         baseline = json.load(f)
 
-    rows, ok = compare(current, baseline, args.threshold, args.min_delta_ms)
-    print_table(rows, current, baseline, args.threshold)
+    try:
+        rows, ok = compare(current, baseline, args.threshold, args.min_delta_ms)
+        print_table(rows, current, baseline, args.threshold)
+    except RecordFormatError as e:
+        print(f"FAIL: {e}")
+        return 1
     if os.environ.get("BENCH_BASELINE_SKIP"):
         print("BENCH_BASELINE_SKIP set: reporting only, gate not enforced")
         return 0
@@ -136,7 +166,18 @@ def main(argv=None) -> int:
         print("no overlapping record keys between current and baseline")
         return 1
     if not ok:
-        print("FAIL: session tick regressed beyond the threshold")
+        missing = [key for key, _b, _c, _r, status in rows if status == "MISSING"]
+        if missing:
+            print(
+                "FAIL: baseline key(s) with no candidate record: "
+                + ", ".join(_fmt_key(k) for k in missing)
+            )
+            print(
+                "  the sweep shrank - rerun noc_bench with the baseline's "
+                "config or regenerate the baseline"
+            )
+        else:
+            print("FAIL: session tick regressed beyond the threshold")
         return 1
     print("gate passed")
     return 0

@@ -41,6 +41,13 @@ Sweeps:
    (``run(shard="chips")``, vmap fallback on one device) asserted
    bit-identical to the unsharded path.
 
+6. **Traffic scenarios** (``--scenario all`` or a comma list): one
+   precompiled session, every registered `repro.traffic` scenario run
+   through it - per-scenario tick wall clock, events/tick, and the
+   scenario's analytic expected rate.  The records carry a ``scenario``
+   key in the ``--json`` payload so ``check_regression.py`` gates each
+   scenario's tick latency separately.
+
 Also asserts the PR acceptance criteria: at >= 16 cores, multicast-tree +
 optimized placement reduces total CAM searches and NoC link events vs. the
 broadcast baseline; re-placed fabrics conserve total synaptic current; the
@@ -65,6 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import traffic
 from repro.core import fabric
 from repro.interface import Interface, StepStats
 from repro.interface import pipeline as interface_pipeline
@@ -259,6 +267,44 @@ def tick_sweep(core_sweep, neurons, entries, ticks, repeats=3):
     return records
 
 
+def scenario_sweep(names, cores, neurons, entries, ticks, repeats=3):
+    """Per-scenario session tick wall clock on one precompiled session."""
+    print(f"\n== traffic scenario sweep ({cores} cores x {neurons} "
+          f"neurons/core, {entries} CAM entries, {ticks} ticks, best of "
+          f"{repeats}) ==")
+    print(f"{'scenario':>19} {'exp_rate':>8} {'events/tick':>11} "
+          f"{'tick_ms':>8} {'enc_lat/tick':>12}")
+    cfg = fabric.FabricConfig(cores=cores, neurons_per_core=neurons,
+                              cam_entries_per_core=entries)
+    params = fabric.random_connectivity(jax.random.PRNGKey(0), cfg)
+    session = Interface(cfg).compile(params)
+    records = []
+    for name in names:
+        gc.collect()
+        sp = traffic.generate(name, 4, ticks, cfg)
+
+        def run():
+            out = session.run(sp)
+            jax.block_until_ready(out)
+            return out
+
+        _, acc = run()                                         # compile/warm
+        t = min(_timed(run) for _ in range(repeats))
+        rate = traffic.expected_rate(name, cores, neurons)
+        rec = {"scenario": name, "cores": cores,
+               "neurons_per_core": neurons,
+               "cam_entries_per_core": entries, "ticks": ticks,
+               "new_tick_ms": t / ticks * 1e3,
+               "expected_rate": rate,
+               "events_per_tick": float(acc.events) / ticks,
+               "encode_latency_per_tick": float(acc.encode_latency) / ticks}
+        records.append(rec)
+        print(f"{name:>19} {rate:>8.3f} {rec['events_per_tick']:>11.1f} "
+              f"{rec['new_tick_ms']:>8.3f} "
+              f"{rec['encode_latency_per_tick']:>12.1f}")
+    return records
+
+
 def chips_sweep(chips_list, cores, neurons, entries, ticks, repeats=3):
     """Same total fabric, 1..K chips: hierarchy costs + sharded session."""
     print(f"\n== chip hierarchy sweep ({cores} cores total, {neurons} "
@@ -356,6 +402,13 @@ def main(argv=None):
                     help="best-of-N repeats for the session-tick sweep; "
                          "raise on noisy shared runners (default: "
                          "%(default)s)")
+    ap.add_argument("--scenario", default=None, metavar="LIST",
+                    help="comma-separated repro.traffic scenario names, or "
+                         "'all' (off by default); reuses the session-tick "
+                         "shape (--tick-neurons/--tick-entries/--tick-ticks)")
+    ap.add_argument("--scenario-cores", type=int, default=16,
+                    help="cores for the scenario sweep (default: "
+                         "%(default)s)")
     ap.add_argument("--chips", default=None, metavar="LIST",
                     help="comma-separated chip counts for the hierarchy "
                          "sweep (e.g. 1,2,4; off by default)")
@@ -381,6 +434,14 @@ def main(argv=None):
                                 2 * NEURONS, args.tick_ticks,
                                 repeats=args.tick_repeats) \
         if chips_list else []
+    scenario_names = ()
+    if args.scenario:
+        scenario_names = traffic.scenario_names() if args.scenario == "all" \
+            else tuple(s for s in str(args.scenario).split(",") if s)
+    scenario_records = scenario_sweep(
+        scenario_names, args.scenario_cores, args.tick_neurons,
+        args.tick_entries, args.tick_ticks,
+        repeats=args.tick_repeats) if scenario_names else []
     scheme = scheme_sweep(core_sweep)
     placed = placement_sweep(core_sweep)
 
@@ -389,12 +450,12 @@ def main(argv=None):
                    "git_sha": _git_sha(),
                    "config": vars(args),
                    "rate": RATE,
-                   "records": tick_records}
+                   "records": tick_records + scenario_records}
         if chips_records:
             payload["chips_records"] = chips_records
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
-        print(f"\nwrote {args.json} ({len(tick_records)} records, "
+        print(f"\nwrote {args.json} ({len(payload['records'])} records, "
               f"sha {payload['git_sha'][:12]})")
 
     print("\n== acceptance checks ==")
@@ -431,6 +492,12 @@ def main(argv=None):
     else:
         print("  (tick speedup reported, not gated below 16 cores x 256 "
               "neurons/core)")
+    if scenario_records:
+        live = all(r["events_per_tick"] > 0 for r in scenario_records)
+        print(f"  every scenario produced traffic "
+              f"({', '.join(r['scenario'] for r in scenario_records)}): "
+              f"{live}")
+        ok &= live
     if chips_records:
         c_ok = all(r["sharded_bit_identical"] for r in chips_records)
         paid = all(r["chip_hops"] > 0 for r in chips_records if r["chips"] > 1)

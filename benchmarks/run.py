@@ -33,6 +33,7 @@ def main() -> None:
         ("fig5_scalability", paper_tables.fig5_scalability),
         ("fig10_cam_cycle", paper_tables.fig10_cam_cycle),
         ("fig11_cam_energy", paper_tables.fig11_cam_energy),
+        ("traffic_arbiter_latency", paper_tables.traffic_arbiter_latency),
     ]:
         detail[name], _ = _run(name, fn)
 

@@ -1,6 +1,9 @@
 """Quickstart: train a tiny LM for 30 steps, checkpoint it, generate.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Smoke knobs (used by tests/test_examples.py to keep the example cheap):
+QUICKSTART_STEPS, QUICKSTART_GEN_STEPS, QUICKSTART_CKPT_DIR.
 """
 
 import os
@@ -9,6 +12,10 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
+
+STEPS = int(os.environ.get("QUICKSTART_STEPS", "30"))
+GEN_STEPS = int(os.environ.get("QUICKSTART_GEN_STEPS", "16"))
+CKPT_DIR = os.environ.get("QUICKSTART_CKPT_DIR", "/tmp/repro_quickstart")
 
 from repro.ckpt.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, Pipeline
@@ -30,20 +37,19 @@ def main():
 
     pipe = Pipeline(cfg, DataConfig(global_batch=8, seq_len=128, seed=0))
     train = jax.jit(ts.make_train_step(cfg, opt))
-    for i in range(30):
+    for i in range(STEPS):
         state, m = train(state, pipe.batch(i))
         if i % 5 == 0:
             print(f"step {i:3d}  loss {float(m['loss']):.4f}  "
                   f"lr {float(m['lr']):.2e}")
 
-    mgr = CheckpointManager("/tmp/repro_quickstart", every=1,
-                            async_save=False)
-    mgr.maybe_save(30, state, force=True)
+    mgr = CheckpointManager(CKPT_DIR, every=1, async_save=False)
+    mgr.maybe_save(STEPS, state, force=True)
     print("checkpointed:", mgr.latest_step())
 
     engine = ServeEngine(cfg=cfg, params=state.params, max_len=160)
     prompts = pipe.batch(0)["tokens"][:2, :16]
-    out = engine.generate(prompts, num_steps=16)
+    out = engine.generate(prompts, num_steps=GEN_STEPS)
     print("generated:", out[0].tolist())
 
 

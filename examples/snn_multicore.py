@@ -3,6 +3,9 @@ core interface costs - comparing HAT against the other arbitration
 schemes and the CSCD CAM against the conventional one.
 
     PYTHONPATH=src python examples/snn_multicore.py
+
+Smoke knobs (used by tests/test_examples.py to keep the example cheap):
+SNN_STEPS (train steps), SNN_EVAL_BATCH (accuracy batch size).
 """
 
 import os
@@ -23,6 +26,9 @@ from repro.models import snn
 from repro.noc import placement, topology
 from repro.optim import adamw
 
+STEPS = int(os.environ.get("SNN_STEPS", "40"))
+EVAL_BATCH = int(os.environ.get("SNN_EVAL_BATCH", "128"))
+
 
 def main():
     cfg = paper_dynaps.smoke_config()
@@ -36,7 +42,7 @@ def main():
     print(f"[snn] {cfg.fabric.cores} cores x {cfg.fabric.neurons_per_core} "
           f"neurons, CAM {cfg.fabric.cam.entries}x{cfg.fabric.cam.bits}")
     key = jax.random.PRNGKey(1)
-    for step in range(40):
+    for step in range(STEPS):
         key, sub = jax.random.split(key)
         batch = snn_batch(sub, 32, cfg.t_steps, cfg.d_in, cfg.d_out)
         loss, grads = loss_g(params, batch)
@@ -45,8 +51,8 @@ def main():
             print(f"  step {step:2d} loss {float(loss):.4f}")
 
     # accuracy
-    batch = snn_batch(jax.random.PRNGKey(99), 128, cfg.t_steps, cfg.d_in,
-                      cfg.d_out)
+    batch = snn_batch(jax.random.PRNGKey(99), EVAL_BATCH, cfg.t_steps,
+                      cfg.d_in, cfg.d_out)
     logits, rates, stats = snn.snn_forward(params, topo, batch["x"], cfg,
                                            account=True)
     acc = float(jnp.mean(jnp.argmax(logits, -1) == batch["y"]))

@@ -1,0 +1,27 @@
+"""`repro.traffic` - registered spike-traffic scenarios.
+
+See `repro.traffic.scenarios` for the catalog and the registry contract;
+the pattern mirrors `repro.interface.registry` (named entries registered
+at import, new scenarios plug in via `register_scenario` without editing
+consumers).
+"""
+
+from repro.traffic.scenarios import (  # noqa: F401
+    SCENARIOS,
+    ScenarioSpec,
+    expected_rate,
+    generate,
+    get_scenario,
+    register_scenario,
+    scenario_names,
+)
+
+__all__ = [
+    "SCENARIOS",
+    "ScenarioSpec",
+    "expected_rate",
+    "generate",
+    "get_scenario",
+    "register_scenario",
+    "scenario_names",
+]

@@ -1,0 +1,373 @@
+"""Registered spike-traffic scenarios for driving the core-interface fabric.
+
+The paper's headline claims are workload-dependent: the hierarchical
+arbiter tree wins in *sparse-event* mode while ring schemes favor
+full-frame bursts, and the NoC/CAM accounting depends on how spatially
+concentrated the traffic is.  Every benchmark and test used to drive the
+fabric with one i.i.d. Bernoulli pattern; this module makes the workload
+a first-class, registered axis instead.
+
+A scenario is a jit-able generator ``(key, ticks, cores,
+neurons_per_core, **params) -> (ticks, cores, neurons_per_core) bool``
+plus expected-rate metadata, bundled in a :class:`ScenarioSpec` and
+registered under a name (same pattern as `repro.interface.registry`):
+
+    from repro import traffic
+
+    spikes = traffic.generate("sparse_poisson", seed=0, ticks=64, shape=cfg)
+    traffic.expected_rate("sparse_poisson", cfg.cores, cfg.neurons_per_core)
+
+Built-ins (registered at import, like the arbiter/CAM/NoC schemes):
+
+  sparse_poisson      i.i.d. low-rate Bernoulli - the paper's sparse mode
+  synchronized_burst  near-silent frames punctuated by full-fabric bursts
+  hotspot_core        a few hot cores against a cold background
+  clustered           rate-coded cluster gating aligned with the
+                      `noc.placement` hidden-cluster structure
+  dvs_trace           thinned DVS-like replay: a moving edge sweeping the
+                      flat neuron space over sensor background noise
+  mixture             per-tick categorical mix of registered scenarios
+
+Generators are pure functions of the PRNG key with static shapes, so they
+can be called under ``jax.jit`` (shape arguments static) or composed into
+scan-based harnesses.  ``expected_rate`` returns the analytic mean spike
+probability for the merged parameters - the conformance and benchmark
+layers use it to sanity-check generated traffic and to label sweeps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.interface.registry import SchemeRegistry
+
+SCENARIOS = SchemeRegistry("traffic scenario")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One registered traffic scenario.
+
+    generate:      ``(key, ticks, cores, neurons_per_core, **params)`` ->
+                   (ticks, cores, neurons_per_core) bool spike raster.
+                   Pure jax function of ``key``; shapes and params are
+                   static, so it is jit-able.
+    expected_rate: ``(params, cores, neurons_per_core)`` -> analytic mean
+                   spike probability of the raster those params produce.
+    defaults:      full parameter set; `generate(...)` overrides merge
+                   into (and are validated against) these keys.
+    """
+
+    name: str
+    generate: Callable[..., jnp.ndarray]
+    expected_rate: Callable[[Mapping[str, Any], int, int], float]
+    defaults: Mapping[str, Any]
+    description: str = ""
+
+
+def register_scenario(name: str, spec: ScenarioSpec, *, overwrite: bool = False) -> ScenarioSpec:
+    """Register a traffic scenario (see :class:`ScenarioSpec`)."""
+    if not isinstance(spec, ScenarioSpec):
+        raise TypeError(f"expected a ScenarioSpec, got {type(spec).__name__}")
+    if spec.name != name:
+        raise ValueError(f"spec.name {spec.name!r} does not match registration name {name!r}")
+    return SCENARIOS.register(name, spec, overwrite=overwrite)
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    return SCENARIOS.get(name)
+
+
+def scenario_names() -> tuple[str, ...]:
+    return SCENARIOS.names()
+
+
+def _shape_of(shape) -> tuple[int, int]:
+    """Accept (cores, neurons_per_core) or any config exposing those fields."""
+    if hasattr(shape, "cores") and hasattr(shape, "neurons_per_core"):
+        return int(shape.cores), int(shape.neurons_per_core)
+    cores, n = shape
+    return int(cores), int(n)
+
+
+def _resolve_params(spec: ScenarioSpec, overrides: Mapping[str, Any]) -> dict:
+    unknown = sorted(set(overrides) - set(spec.defaults))
+    if unknown:
+        raise ValueError(
+            f"unknown parameter(s) {', '.join(unknown)} for scenario {spec.name!r}; "
+            f"valid: {', '.join(sorted(spec.defaults))}"
+        )
+    return {**spec.defaults, **overrides}
+
+
+def generate(name: str, seed, ticks: int, shape, **overrides) -> jnp.ndarray:
+    """Generate a (ticks, cores, neurons_per_core) bool spike raster.
+
+    seed:  int or a `jax.random` PRNG key.
+    shape: (cores, neurons_per_core) or a config exposing those fields.
+    """
+    spec = get_scenario(name)
+    params = _resolve_params(spec, overrides)
+    cores, n = _shape_of(shape)
+    key = jax.random.PRNGKey(seed) if isinstance(seed, int) else seed
+    out = spec.generate(key, int(ticks), cores, n, **params)
+    if out.shape != (ticks, cores, n) or out.dtype != jnp.bool_:
+        raise ValueError(
+            f"scenario {name!r} produced {out.dtype} array of shape {out.shape}; "
+            f"expected bool ({ticks}, {cores}, {n})"
+        )
+    return out
+
+
+def expected_rate(name: str, cores: int, neurons_per_core: int, **overrides) -> float:
+    """Analytic mean spike probability for the merged parameters."""
+    spec = get_scenario(name)
+    params = _resolve_params(spec, overrides)
+    return float(spec.expected_rate(params, int(cores), int(neurons_per_core)))
+
+
+# ---------------------------------------------------------------------------
+# Built-in generators
+# ---------------------------------------------------------------------------
+
+
+def sparse_poisson(key, ticks, cores, neurons_per_core, *, rate=0.02):
+    """i.i.d. Bernoulli(rate): the paper's sparse-event operating mode."""
+    return jax.random.bernoulli(key, rate, (ticks, cores, neurons_per_core))
+
+
+def synchronized_burst(
+    key, ticks, cores, neurons_per_core, *, period=4, duty=1, burst_rate=0.9, background=0.005
+):
+    """Near-silent frames punctuated by fabric-wide synchronized bursts.
+
+    Every ``period`` ticks, ``duty`` consecutive ticks are burst frames in
+    which each neuron fires with ``burst_rate``; the remaining frames fire
+    at ``background``.  This is the frame-coded regime where token rings
+    amortize a full sweep and tree arbiters pay their worst case.
+    """
+    if not 1 <= duty <= period:
+        raise ValueError(f"duty={duty} must be in [1, period={period}]")
+    k_b, k_q = jax.random.split(key)
+    bursting = (jnp.arange(ticks) % period) < duty
+    p = jnp.where(bursting, burst_rate, background)[:, None, None]
+    return jax.random.uniform(k_q, (ticks, cores, neurons_per_core), minval=0.0, maxval=1.0) < p
+
+
+def hotspot_core(key, ticks, cores, neurons_per_core, *, hot_cores=1, hot_rate=0.5, cold_rate=0.01):
+    """A few saturated cores against a cold fabric (seed-chosen hot set).
+
+    Stresses single-arbiter backlog and the NoC links around the hotspot
+    while the rest of the fabric idles.
+    """
+    if not 1 <= hot_cores <= cores:
+        raise ValueError(f"hot_cores={hot_cores} must be in [1, cores={cores}]")
+    k_h, k_q = jax.random.split(key)
+    hot_idx = jax.random.permutation(k_h, cores)[:hot_cores]
+    hot = jnp.zeros((cores,), bool).at[hot_idx].set(True)
+    p = jnp.where(hot, hot_rate, cold_rate)[None, :, None]
+    return jax.random.uniform(k_q, (ticks, cores, neurons_per_core), minval=0.0, maxval=1.0) < p
+
+
+def clustered(key, ticks, cores, neurons_per_core, *, cluster_size=16, active_prob=0.25, rate=0.5):
+    """Rate-coded cluster gating over the flat global neuron space.
+
+    Neurons form contiguous clusters of ``cluster_size`` global ids - the
+    same hidden-cluster structure `noc.placement.clustered_connectivity`
+    wires (unscrambled), so cluster-local wiring sees correlated sources.
+    Each tick every cluster is independently gated on with
+    ``active_prob``; neurons in an active cluster fire with ``rate``.
+    """
+    if cluster_size < 1:
+        raise ValueError(f"cluster_size={cluster_size} must be >= 1")
+    total = cores * neurons_per_core
+    num_clusters = -(-total // cluster_size)  # ceil
+    k_g, k_q = jax.random.split(key)
+    gates = jax.random.bernoulli(k_g, active_prob, (ticks, num_clusters))
+    cluster_of = jnp.arange(total) // cluster_size
+    gate_per_neuron = gates[:, cluster_of]  # (ticks, total)
+    fire = jax.random.bernoulli(k_q, rate, (ticks, total))
+    return (gate_per_neuron & fire).reshape(ticks, cores, neurons_per_core)
+
+
+def dvs_trace(
+    key,
+    ticks,
+    cores,
+    neurons_per_core,
+    *,
+    edge_frac=0.08,
+    drift=0.05,
+    edge_rate=0.8,
+    noise_rate=0.005,
+    thin=0.5,
+):
+    """Thinned DVS-like trace replay: a moving edge over sensor noise.
+
+    A contiguous window of ``edge_frac`` of the flat neuron space (the
+    moving contrast edge of a DVS recording) sweeps ``drift`` of the space
+    per tick, firing at ``edge_rate``; everything else emits
+    ``noise_rate`` background events.  The whole trace is then *thinned* -
+    every event kept independently with probability ``thin`` - the
+    standard trick for replaying a recorded event stream at a reduced
+    load.  Deterministic in the key, spatially correlated, non-stationary.
+    """
+    total = cores * neurons_per_core
+    width = max(1, int(round(edge_frac * total)))
+    stride = max(1, int(round(drift * total)))
+    start = (jnp.arange(ticks) * stride) % total  # (ticks,) window start
+    offset = (jnp.arange(total)[None, :] - start[:, None]) % total
+    on_edge = offset < width  # (ticks, total)
+    p = jnp.where(on_edge, edge_rate, noise_rate) * thin
+    raw = jax.random.uniform(key, (ticks, total), minval=0.0, maxval=1.0) < p
+    return raw.reshape(ticks, cores, neurons_per_core)
+
+
+def _burst_expected_rate(params, cores, neurons_per_core):
+    frac = params["duty"] / params["period"]
+    return frac * params["burst_rate"] + (1.0 - frac) * params["background"]
+
+
+def _hotspot_expected_rate(params, cores, neurons_per_core):
+    hot = params["hot_cores"]
+    return (hot * params["hot_rate"] + (cores - hot) * params["cold_rate"]) / cores
+
+
+def _dvs_expected_rate(params, cores, neurons_per_core):
+    total = cores * neurons_per_core
+    w = max(1, int(round(params["edge_frac"] * total))) / total
+    return params["thin"] * (w * params["edge_rate"] + (1.0 - w) * params["noise_rate"])
+
+
+def mixture(
+    key,
+    ticks,
+    cores,
+    neurons_per_core,
+    *,
+    components=(("sparse_poisson", 0.7), ("synchronized_burst", 0.3)),
+):
+    """Per-tick categorical mixture of registered scenarios.
+
+    components: ((name, weight), ...) - each tick is drawn from one
+    component (chosen with probability proportional to its weight) using
+    that component's registered defaults.  Nested mixtures are rejected.
+    """
+    names, weights = _mixture_components(components)
+    k_sel, *k_parts = jax.random.split(key, 1 + len(names))
+    frames = jnp.stack(
+        [
+            get_scenario(name).generate(
+                k, ticks, cores, neurons_per_core, **get_scenario(name).defaults
+            )
+            for name, k in zip(names, k_parts)
+        ]
+    )
+    p = jnp.asarray(weights) / sum(weights)
+    choice = jax.random.choice(k_sel, len(names), shape=(ticks,), p=p)
+    return frames[choice, jnp.arange(ticks)]
+
+
+def _mixture_components(components) -> tuple[tuple[str, ...], tuple[float, ...]]:
+    if not components:
+        raise ValueError("mixture needs at least one (name, weight) component")
+    names, weights = [], []
+    for name, weight in components:
+        if name == "mixture":
+            raise ValueError("mixture components must be leaf scenarios, not 'mixture'")
+        get_scenario(name)  # raises with the registered list on unknown names
+        if not weight > 0:
+            raise ValueError(f"component {name!r} weight must be > 0, got {weight}")
+        names.append(name)
+        weights.append(float(weight))
+    return tuple(names), tuple(weights)
+
+
+def _mixture_expected_rate(params, cores, neurons_per_core):
+    names, weights = _mixture_components(params["components"])
+    total_w = sum(weights)
+    return sum(
+        w / total_w * expected_rate(name, cores, neurons_per_core)
+        for name, w in zip(names, weights)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Registration (at import, like the arbiter/CAM/NoC built-ins)
+# ---------------------------------------------------------------------------
+
+register_scenario(
+    "sparse_poisson",
+    ScenarioSpec(
+        name="sparse_poisson",
+        generate=sparse_poisson,
+        expected_rate=lambda p, c, n: p["rate"],
+        defaults={"rate": 0.02},
+        description="i.i.d. low-rate Bernoulli (the paper's sparse-event mode)",
+    ),
+)
+
+register_scenario(
+    "synchronized_burst",
+    ScenarioSpec(
+        name="synchronized_burst",
+        generate=synchronized_burst,
+        expected_rate=_burst_expected_rate,
+        defaults={"period": 4, "duty": 1, "burst_rate": 0.9, "background": 0.005},
+        description="near-silent frames punctuated by fabric-wide bursts",
+    ),
+)
+
+register_scenario(
+    "hotspot_core",
+    ScenarioSpec(
+        name="hotspot_core",
+        generate=hotspot_core,
+        expected_rate=_hotspot_expected_rate,
+        defaults={"hot_cores": 1, "hot_rate": 0.5, "cold_rate": 0.01},
+        description="a few saturated cores against a cold fabric",
+    ),
+)
+
+register_scenario(
+    "clustered",
+    ScenarioSpec(
+        name="clustered",
+        generate=clustered,
+        expected_rate=lambda p, c, n: p["active_prob"] * p["rate"],
+        defaults={"cluster_size": 16, "active_prob": 0.25, "rate": 0.5},
+        description="rate-coded cluster gating aligned with noc.placement clusters",
+    ),
+)
+
+register_scenario(
+    "dvs_trace",
+    ScenarioSpec(
+        name="dvs_trace",
+        generate=dvs_trace,
+        expected_rate=_dvs_expected_rate,
+        defaults={
+            "edge_frac": 0.08,
+            "drift": 0.05,
+            "edge_rate": 0.8,
+            "noise_rate": 0.005,
+            "thin": 0.5,
+        },
+        description="thinned DVS-like replay: a moving edge over sensor noise",
+    ),
+)
+
+register_scenario(
+    "mixture",
+    ScenarioSpec(
+        name="mixture",
+        generate=mixture,
+        expected_rate=_mixture_expected_rate,
+        defaults={"components": (("sparse_poisson", 0.7), ("synchronized_burst", 0.3))},
+        description="per-tick categorical mixture of registered scenarios",
+    ),
+)

@@ -1,0 +1,4 @@
+"""Cross-path conformance grid: every registered traffic scenario through
+every execution path of the fabric (dense oracle, event-driven session,
+pallas kernels, chips>1 flat, sharded vmap), asserted equivalent under
+the documented tolerance contract (see `tests.conformance.paths`)."""

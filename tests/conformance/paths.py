@@ -1,0 +1,143 @@
+"""Execution-path runners and the stats tolerance contract.
+
+One fabric, five ways to execute it:
+
+  oracle          dense tag-vs-every-source CAM sweep + per-core DES
+                  arbiter (`interface_tick(oracle=True)`), eager per tick
+  event           the event-driven `InterfaceSession.run` scan
+  pallas          same session with ``impl="pallas"`` (cam_search /
+                  hat_encode kernels, interpret mode off-TPU)
+  chips2          the same fabric partitioned into 2 chips
+                  (`HierTables` two-tier NoC), unsharded scan
+  chips2_sharded  ``run(shard="chips")`` - per-chip tick mapped under
+                  vmap on single-device hosts (shard_map on real meshes)
+
+Conformance contract (asserted by `assert_conformant`):
+
+  * currents are BIT-IDENTICAL across all five paths, for every
+    scenario, arbiter scheme, and NoC scheme;
+  * partition-independent stats (`PATH_INVARIANT_FIELDS`: events,
+    encode latency/energy, CAM searches/energy/time) agree across all
+    paths - counts exactly, energies within `REL_TOL`;
+  * NoC/chip transport stats (`TRANSPORT_FIELDS`) agree within each
+    partitioning (flat paths with flat paths, chip paths with chip
+    paths) but legitimately differ across partitionings: chips>1 moves
+    traffic from the core mesh onto the inter-chip tier by design.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import jax
+import pytest
+
+from repro.core import fabric
+from repro.interface import Interface, StepStats
+from repro.interface import pipeline as interface_pipeline
+from repro.noc import topology
+
+ARBITER_SCHEMES = ("binary_tree", "greedy_tree", "token_ring", "hier_ring", "hier_tree")
+NOC_SCHEMES = ("broadcast", "unicast", "multicast_tree")
+GRID = tuple(itertools.product(ARBITER_SCHEMES, NOC_SCHEMES))
+
+# Stats that do not depend on how the fabric is partitioned or executed.
+PATH_INVARIANT_FIELDS = (
+    "events",
+    "encode_latency",
+    "encode_energy",
+    "cam_searches",
+    "cam_energy",
+    "cam_time_ns",
+)
+# Transport stats: comparable only within one chip partitioning.
+TRANSPORT_FIELDS = (
+    "noc_hops",
+    "noc_latency",
+    "noc_energy",
+    "chip_hops",
+    "chip_latency",
+    "chip_energy",
+)
+EXACT_FIELDS = ("events", "cam_searches", "noc_hops", "chip_hops")
+REL_TOL = 1e-6
+
+FLAT_PATHS = ("oracle", "event", "pallas")
+CHIP_PATHS = ("chips2", "chips2_sharded")
+
+
+def small_config(arb_scheme, noc_scheme, cores=4, n=16, entries=32):
+    return fabric.FabricConfig(
+        cores=cores,
+        neurons_per_core=n,
+        cam_entries_per_core=entries,
+        scheme=arb_scheme,
+        noc=topology.NocConfig(noc_scheme),
+    )
+
+
+def run_oracle(cfg, params, spikes):
+    """Eager per-tick reference: dense CAM sweep + DES arbiter."""
+    tables = interface_pipeline.build_tables(params, cfg)
+    acc, currents = StepStats.zeros(), []
+    for t in range(spikes.shape[0]):
+        cur, st = interface_pipeline.interface_tick(params, spikes[t], cfg, tables, oracle=True)
+        acc = acc.accumulate(st)
+        currents.append(cur)
+    return jax.numpy.stack(currents), acc
+
+
+def run_event(cfg, params, spikes):
+    return Interface(cfg).compile(params).run(spikes)
+
+
+def run_pallas(cfg, params, spikes):
+    return Interface(dataclasses.replace(cfg, impl="pallas")).compile(params).run(spikes)
+
+
+def run_chips2(cfg, params, spikes):
+    return Interface(dataclasses.replace(cfg, chips=2)).compile(params).run(spikes)
+
+
+def run_chips2_sharded(cfg, params, spikes):
+    session = Interface(dataclasses.replace(cfg, chips=2)).compile(params)
+    return session.run(spikes, shard="chips")
+
+
+PATHS = {
+    "oracle": run_oracle,
+    "event": run_event,
+    "pallas": run_pallas,
+    "chips2": run_chips2,
+    "chips2_sharded": run_chips2_sharded,
+}
+
+
+def run_paths(cfg, params, spikes, names=tuple(PATHS)):
+    return {name: PATHS[name](cfg, params, spikes) for name in names}
+
+
+def _assert_field(a: StepStats, b: StepStats, field: str, label: str) -> None:
+    va, vb = float(getattr(a, field)), float(getattr(b, field))
+    if field in EXACT_FIELDS:
+        assert va == vb, f"{label}: {field} {va} != {vb}"
+    else:
+        assert va == pytest.approx(vb, rel=REL_TOL), f"{label}: {field} {va} != {vb}"
+
+
+def assert_conformant(results: dict, label: str = "") -> None:
+    """Apply the conformance contract to `run_paths` output."""
+    ref_name = "oracle" if "oracle" in results else next(iter(results))
+    ref_cur, ref_st = results[ref_name]
+    for name, (cur, st) in results.items():
+        where = f"{label}[{ref_name} vs {name}]"
+        assert bool(jax.numpy.all(cur == ref_cur)), f"{where}: currents differ"
+        for field in PATH_INVARIANT_FIELDS:
+            _assert_field(ref_st, st, field, where)
+    for group in (FLAT_PATHS, CHIP_PATHS):
+        present = [n for n in group if n in results]
+        for name in present[1:]:
+            where = f"{label}[{present[0]} vs {name}]"
+            for field in TRANSPORT_FIELDS:
+                _assert_field(results[present[0]][1], results[name][1], field, where)

@@ -1,0 +1,117 @@
+"""`benchmarks/check_regression.py` gate semantics.
+
+Malformed records fail with an explicit message (not a KeyError), the
+optional ``scenario`` tag keys records independently while pre-scenario
+payloads keep matching, and a shrunken sweep (baseline keys with no
+candidate counterpart) fails instead of silently going ungated.
+"""
+
+import json
+
+import pytest
+
+from benchmarks import check_regression as cr
+
+
+def _record(tick_ms, scenario=None, **over):
+    rec = {
+        "cores": 16,
+        "neurons_per_core": 256,
+        "cam_entries_per_core": 128,
+        "ticks": 8,
+        "new_tick_ms": tick_ms,
+    }
+    if scenario is not None:
+        rec["scenario"] = scenario
+    rec.update(over)
+    return rec
+
+
+def _payload(records):
+    return {"benchmark": "interface_session_tick", "git_sha": "testsha", "records": records}
+
+
+def _run(tmp_path, monkeypatch, capsys, current, baseline):
+    monkeypatch.delenv("BENCH_BASELINE_SKIP", raising=False)
+    cur = tmp_path / "cur.json"
+    base = tmp_path / "base.json"
+    cur.write_text(json.dumps(current))
+    base.write_text(json.dumps(baseline))
+    rc = cr.main([str(cur), "--baseline", str(base)])
+    return rc, capsys.readouterr().out
+
+
+def test_gate_passes_on_matching_records(tmp_path, monkeypatch, capsys):
+    rc, out = _run(
+        tmp_path,
+        monkeypatch,
+        capsys,
+        _payload([_record(1.0), _record(2.0, scenario="sparse_poisson")]),
+        _payload([_record(1.1), _record(2.1, scenario="sparse_poisson")]),
+    )
+    assert rc == 0
+    assert "gate passed" in out
+
+
+def test_missing_sweep_key_fails_with_clear_message(tmp_path, monkeypatch, capsys):
+    bad = _record(1.0)
+    del bad["cores"]
+    rc, out = _run(tmp_path, monkeypatch, capsys, _payload([bad]), _payload([_record(1.0)]))
+    assert rc == 1
+    assert "missing sweep key" in out
+    assert "cores" in out
+    assert "Traceback" not in out
+
+
+def test_missing_value_field_fails_with_clear_message(tmp_path, monkeypatch, capsys):
+    bad = _record(1.0)
+    del bad["new_tick_ms"]
+    rc, out = _run(tmp_path, monkeypatch, capsys, _payload([bad]), _payload([_record(1.0)]))
+    assert rc == 1
+    assert "new_tick_ms" in out
+
+
+def test_index_raises_record_format_error_not_key_error():
+    with pytest.raises(cr.RecordFormatError, match="ticks"):
+        bad = _record(1.0)
+        del bad["ticks"]
+        cr._index(_payload([bad]), "current")
+
+
+def test_scenario_records_gate_independently(tmp_path, monkeypatch, capsys):
+    baseline = _payload(
+        [_record(1.0, scenario="sparse_poisson"), _record(1.0, scenario="synchronized_burst")]
+    )
+    current = _payload(
+        [_record(1.0, scenario="sparse_poisson"), _record(9.0, scenario="synchronized_burst")]
+    )
+    rc, out = _run(tmp_path, monkeypatch, capsys, current, baseline)
+    assert rc == 1
+    assert "REGRESSED" in out
+    assert "synchronized_burst" in out
+
+
+def test_shrunken_sweep_fails(tmp_path, monkeypatch, capsys):
+    baseline = _payload([_record(1.0), _record(1.0, scenario="dvs_trace")])
+    current = _payload([_record(1.0)])
+    rc, out = _run(tmp_path, monkeypatch, capsys, current, baseline)
+    assert rc == 1
+    assert "no candidate record" in out
+    assert "dvs_trace" in out
+
+
+def test_new_records_are_report_only(tmp_path, monkeypatch, capsys):
+    baseline = _payload([_record(1.0)])
+    current = _payload([_record(1.0), _record(5.0, scenario="hotspot_core")])
+    rc, out = _run(tmp_path, monkeypatch, capsys, current, baseline)
+    assert rc == 0
+    assert "new" in out
+
+
+def test_pre_scenario_baseline_still_gates(tmp_path, monkeypatch, capsys):
+    """Old payloads (no scenario tags anywhere) keep working unchanged."""
+    current = _payload([_record(9.0)])
+    baseline = _payload([_record(1.0)])
+    rc, out = _run(tmp_path, monkeypatch, capsys, current, baseline)
+    assert rc == 1
+    assert "regressed beyond the threshold" in out

@@ -10,6 +10,7 @@ import pytest
 from repro.core import cam as cam_mod
 from repro.core import fabric
 from repro.noc import multicast, placement, router, topology
+from tests._hypothesis_compat import given, settings, strategies as st
 
 KEY = jax.random.PRNGKey(0)
 
@@ -247,6 +248,58 @@ def test_apply_placement_preserves_currents():
     want = np.zeros(total, np.float32)
     want[perm] = np.asarray(cur0).reshape(-1)
     assert np.allclose(np.asarray(cur2).reshape(-1), want, atol=1e-5)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**16))
+def test_greedy_placement_is_valid_permutation_property(seed):
+    """Optimizer output is a bijection onto [0, total) for any wiring."""
+    cores, n = 4, 8
+    cfg = _cfg(cores=cores, n=n, entries=2 * n)
+    params = fabric.random_connectivity(jax.random.PRNGKey(seed), cfg)
+    a = placement.fanout_adjacency(params, cfg)
+    perm = placement.greedy_overlap_placement(a, cores, n)
+    assert np.array_equal(np.sort(perm), np.arange(cores * n))
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**16))
+def test_optimized_cost_not_worse_than_identity_property(seed):
+    cores, n = 4, 8
+    cfg = _cfg(cores=cores, n=n, entries=4 * n)
+    params = placement.clustered_connectivity(seed, cfg, cluster_size=n,
+                                              fan_in=3)
+    a = placement.fanout_adjacency(params, cfg)
+    greedy = placement.greedy_overlap_placement(a, cores, n)
+    ident = placement.identity_placement(cores * n)
+    assert (placement.traffic_cost(a, greedy, cores, n)
+            <= placement.traffic_cost(a, ident, cores, n))
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**16))
+def test_traffic_cost_invariant_under_relabeling(seed):
+    """Costs depend on where neurons are placed, never on their labels:
+    relabeling the input wiring (cluster ids included) and transporting
+    the placement through the relabeling leaves every objective fixed."""
+    cores, n = 4, 8
+    total = cores * n
+    rng = np.random.RandomState(seed)
+    cfg = _cfg(cores=cores, n=n, entries=4 * n)
+    params = placement.clustered_connectivity(seed, cfg, cluster_size=n,
+                                              fan_in=3)
+    a = placement.fanout_adjacency(params, cfg)
+    perm = placement.random_placement(seed + 1, total)
+
+    q = rng.permutation(total)               # old label -> new label
+    inv = np.argsort(q)
+    a_rel = a[inv][:, inv]                   # a_rel[q[s], q[d]] == a[s, d]
+    perm_rel = np.empty(total, dtype=np.int64)
+    perm_rel[q] = perm                       # same physical placement
+    assert placement.traffic_cost(a_rel, perm_rel, cores, n) == \
+        placement.traffic_cost(a, perm, cores, n)
+    assert placement.cam_search_count(a_rel, perm_rel, cores, n) == \
+        placement.cam_search_count(a, perm, cores, n)
 
 
 def test_identity_placement_preserves_entry_content():

@@ -1,0 +1,83 @@
+"""Golden tests for the paper's abstract-level claims.
+
+The abstract (arxiv 2308.04171) states three headline numbers; these
+tests pin the reproduction to them with explicit tolerances:
+
+  * "reduces the latency by more than 70% in sparse-event mode,
+    compared to the state-of-the-art arbitration architectures" - the
+    hierarchical arbiter tree (HAT) vs the hierarchical token ring, in
+    the calibrated 22FDX ns domain (Table I derives 78.3%);
+  * the CSCD CAM "saves approximately 46% energy ... against
+    conventional asynchronous CAM using configurable delay lines"
+    (delay-line CAM = the ``conventional`` variant);
+  * "achieves a 40% increase in throughput" - the cycle-time cut of the
+    full proposed CAM at the 512-entry design point (Fig. 10: 40.4%).
+
+Each claim is asserted both from the closed-form/report layer and, for
+the latency claim, re-derived from generated `repro.traffic` rasters so
+the number comes out of simulated workloads, not formulas alone.
+"""
+
+import pytest
+
+from benchmarks import paper_tables
+from repro.core import cam, ppa
+from repro.interface import ppa_report
+
+
+def test_sparse_mode_latency_reduction_at_least_70_percent():
+    rows, derived = paper_tables.table1_sparse_latency()
+    # abstract: ">70%"; Table I at N=256: 1 - 2.0/9.2 = 0.783
+    assert derived["hat_vs_htr_sparse_reduction"] >= 0.70
+    assert derived["hat_vs_htr_sparse_reduction"] == pytest.approx(0.783, abs=0.02)
+
+
+def test_sparse_mode_reduction_reproduces_from_generated_traffic():
+    """The >=70% claim from scenario traffic, not closed-form inputs."""
+    rows, derived = paper_tables.traffic_arbiter_latency(ticks=32)
+    assert derived["sparse_reduction_vs_hier_ring"] >= 0.70
+    assert derived["sparse_reduction_vs_token_ring"] >= 0.90
+    # Table II: HAT's full-frame burst completion within ~10% of the
+    # token ring (the burst-optimal scheme) - sparse wins are not bought
+    # with a burst collapse
+    assert derived["burst_ratio_vs_token_ring"] == pytest.approx(1.07, abs=0.08)
+
+
+def test_hat_sparse_latency_via_ppa_report():
+    hat = ppa_report_sparse_ns("hier_tree")
+    htr = ppa_report_sparse_ns("hier_ring")
+    assert 1.0 - hat / htr >= 0.70
+
+
+def ppa_report_sparse_ns(scheme: str) -> float:
+    from repro.interface import InterfaceConfig
+
+    rep = ppa_report(InterfaceConfig(cores=4, neurons_per_core=256, scheme=scheme))
+    return rep["arbiter"]["sparse_latency_ns"]
+
+
+def test_cam_energy_saving_approximately_46_percent():
+    # abstract: "saves approximately 46% energy"; paper Fig. 11 random
+    # case reports 46.7%, encoded as the calibration constant
+    assert ppa.CAM_ENERGY_SAVING["random"] == pytest.approx(0.467, abs=0.005)
+    # the behavioural model reproduces the paper's endpoint cases...
+    assert cam.energy_saving("all_match") == pytest.approx(
+        ppa.CAM_ENERGY_SAVING["all_match"], abs=0.02
+    )
+    assert cam.energy_saving("all_mismatch") == pytest.approx(
+        ppa.CAM_ENERGY_SAVING["all_mismatch"], abs=0.02
+    )
+    # ...while the random case lands at ~40%: the paper's 46.7% is not
+    # simultaneously consistent with its endpoints under a linear energy
+    # model (documented repro finding, see cam.py / fig11_cam_energy)
+    assert 0.35 <= cam.energy_saving("random") <= 0.47
+
+
+def test_cam_throughput_gain_approximately_40_percent():
+    # abstract: "a 40% increase in throughput"; Fig. 10 at 512 entries
+    # reports a 40.4% search-cycle-time cut vs the delay-line CAM
+    assert cam.cycle_improvement(512) == pytest.approx(0.404, abs=0.02)
+    assert cam.cycle_improvement(512) >= 0.35
+    rows, derived = paper_tables.fig10_cam_cycle()
+    assert derived["improvement_512"] == pytest.approx(derived["paper_512"], abs=0.02)
+    assert derived["improvement_16"] == pytest.approx(derived["paper_16"], abs=0.02)
