@@ -12,17 +12,24 @@ Records are matched on (cores, neurons_per_core, cam_entries_per_core, ticks)
 plus the optional ``scenario`` tag (`noc_bench --scenario`; records without
 one match under ``"-"``, so pre-scenario payloads keep gating).  The gate
 compares ``new_tick_ms`` (the event-driven session tick, the number the repo
-optimizes for).  Millisecond-scale measurements are scheduler-noise bound
-even best-of-N, so a regression must clear the ratio threshold AND an
-absolute slack (``--min-delta-ms``, default 0.5 ms per tick) to fail; runs
-inside the slack report ``ok (noise)``.  A delta table is always printed,
-including the machine-independent oracle speedup so runner-speed drift is
+optimizes for) and, when BOTH payloads carry it, the streaming
+``tick_ms_p99`` percentile (`repro.obs.metrics`) - a tail-latency
+regression that leaves the best-of-N minimum untouched still fails.  Old
+baselines without percentiles keep gating on ``new_tick_ms`` alone.
+Millisecond-scale measurements are scheduler-noise bound even best-of-N, so
+a regression must clear the ratio threshold AND an absolute slack
+(``--min-delta-ms``, default 0.5 ms per tick) to fail; runs inside the
+slack report ``ok (noise)``.  A delta table is always printed, including
+the machine-independent oracle speedup so runner-speed drift is
 distinguishable from a real regression.  Records only the candidate has are
 report-only (sweeps may grow), but a malformed record (missing sweep keys or
 ``new_tick_ms``) and a baseline key with no candidate counterpart both fail
 with an explicit message - a silently shrunken sweep would leave part of the
-baseline ungated.  Set ``BENCH_BASELINE_SKIP=1`` to turn the whole gate into
-a report-only run (e.g. on known-slow debug builds).
+baseline ungated.  When the payloads record different ``platform``s
+(noc_bench stamps ``jax.devices()[0].platform``) wall clocks are not
+comparable: the gate warns and reports only instead of failing.  Set
+``BENCH_BASELINE_SKIP=1`` to turn the whole gate into a report-only run
+(e.g. on known-slow debug builds).
 """
 
 from __future__ import annotations
@@ -41,6 +48,9 @@ KEY_FIELDS = ("cores", "neurons_per_core", "cam_entries_per_core", "ticks")
 # are indexed under, so old payloads and new ones stay comparable.
 OPTIONAL_KEY_FIELDS = (("scenario", "-"),)
 VALUE_FIELD = "new_tick_ms"
+# Gated only when present in BOTH payloads, so pre-percentile baselines
+# (schema_version < 2) keep working unchanged.
+P99_FIELD = "tick_ms_p99"
 
 
 class RecordFormatError(ValueError):
@@ -67,32 +77,46 @@ def _fmt_key(key: tuple) -> str:
     return "x".join(str(k) for k in key)
 
 
+def _judge(b: float, c: float, threshold: float, min_delta_ms: float) -> str:
+    ratio = c / max(b, 1e-12)
+    if ratio <= threshold:
+        return "ok"
+    if c - b <= min_delta_ms:
+        return "ok (noise)"
+    return "REGRESSED"
+
+
 def compare(
     current: dict, baseline: dict, threshold: float, min_delta_ms: float
 ) -> tuple[list, bool]:
-    """Returns (table rows, ok).  A row per matched record key."""
+    """Returns (table rows, ok).  A row per matched (record key, metric).
+
+    Every matched key gates ``new_tick_ms``; keys whose baseline AND
+    candidate records both carry ``tick_ms_p99`` gate that too under the
+    same threshold/slack, so a tail-only regression cannot hide behind a
+    healthy best-of-N minimum.
+    """
     cur = _index(current, "current")
     base = _index(baseline, "baseline")
     rows, ok = [], True
     for key in sorted(set(cur) | set(base)):
         if key not in cur:
             # the sweep shrank: part of the baseline would go ungated
-            rows.append((key, base[key][VALUE_FIELD], None, None, "MISSING"))
+            rows.append((key, VALUE_FIELD, base[key][VALUE_FIELD], None, None, "MISSING"))
             ok = False
             continue
         if key not in base:
-            rows.append((key, None, cur[key][VALUE_FIELD], None, "new"))
+            rows.append((key, VALUE_FIELD, None, cur[key][VALUE_FIELD], None, "new"))
             continue
-        b, c = base[key][VALUE_FIELD], cur[key][VALUE_FIELD]
-        ratio = c / max(b, 1e-12)
-        if ratio <= threshold:
-            status = "ok"
-        elif c - b <= min_delta_ms:
-            status = "ok (noise)"
-        else:
-            status = "REGRESSED"
-            ok = False
-        rows.append((key, b, c, ratio, status))
+        metrics = [VALUE_FIELD]
+        if P99_FIELD in base[key] and P99_FIELD in cur[key]:
+            metrics.append(P99_FIELD)
+        for metric in metrics:
+            b, c = base[key][metric], cur[key][metric]
+            status = _judge(b, c, threshold, min_delta_ms)
+            if status == "REGRESSED":
+                ok = False
+            rows.append((key, metric, b, c, c / max(b, 1e-12), status))
     return rows, ok
 
 
@@ -106,15 +130,15 @@ def print_table(rows: list, current: dict, baseline: dict, threshold: float) -> 
         f"current sha {current.get('git_sha', 'unknown')[:12]}"
     )
     header = (
-        f"{'cores x n/core x entries x ticks x scenario':>44} {'base_ms':>9} "
-        f"{'cur_ms':>9} {'ratio':>7} {'status':>10}"
+        f"{'cores x n/core x entries x ticks x scenario':>44} {'metric':>12} "
+        f"{'base_ms':>9} {'cur_ms':>9} {'ratio':>7} {'status':>10}"
     )
     print(header)
-    for key, b, c, ratio, status in rows:
+    for key, metric, b, c, ratio, status in rows:
         b_s = f"{b:9.3f}" if b is not None else f"{'-':>9}"
         c_s = f"{c:9.3f}" if c is not None else f"{'-':>9}"
         r_s = f"{ratio:6.2f}x" if ratio is not None else f"{'-':>7}"
-        print(f"{_fmt_key(key):>44} {b_s} {c_s} {r_s} {status:>10}")
+        print(f"{_fmt_key(key):>44} {metric:>12} {b_s} {c_s} {r_s} {status:>10}")
     cur, base = _index(current, "current"), _index(baseline, "baseline")
     for key in sorted(set(cur) & set(base)):
         b, c = base[key].get("speedup"), cur[key].get("speedup")
@@ -162,11 +186,20 @@ def main(argv=None) -> int:
     if os.environ.get("BENCH_BASELINE_SKIP"):
         print("BENCH_BASELINE_SKIP set: reporting only, gate not enforced")
         return 0
+    plat_b = baseline.get("platform")
+    plat_c = current.get("platform")
+    if plat_b and plat_c and plat_b != plat_c:
+        print(
+            f"WARNING: platform mismatch (baseline {plat_b!r}, current "
+            f"{plat_c!r}); wall clocks are not comparable - reporting only, "
+            f"gate not enforced"
+        )
+        return 0
     if not any(status.startswith("ok") or status == "REGRESSED" for *_, status in rows):
         print("no overlapping record keys between current and baseline")
         return 1
     if not ok:
-        missing = [key for key, _b, _c, _r, status in rows if status == "MISSING"]
+        missing = [key for key, _m, _b, _c, _r, status in rows if status == "MISSING"]
         if missing:
             print(
                 "FAIL: baseline key(s) with no candidate record: "

@@ -5,7 +5,7 @@ hierarchy sweep.
 
     PYTHONPATH=src python benchmarks/noc_bench.py [--cores 4,16,64] [--ticks 16]
         [--tick-cores 16] [--tick-neurons 256] [--chips 1,2,4]
-        [--json [BENCH_interface.json]]
+        [--json [BENCH_interface.json]] [--trace obs_trace.json]
 
 Sweeps:
 
@@ -31,9 +31,16 @@ Sweeps:
    tag-vs-every-source sweep + per-core discrete-event arbiter scan),
    both under the same jit + lax.scan session harness.  Currents are
    asserted bit-identical before timing.  ``--json`` writes the records
-   (plus the git SHA and the full CLI config, so uploaded artifacts are
+   (plus ``schema_version``, ``platform``/``jax_version`` host identity,
+   the git SHA, and the full CLI config, so uploaded artifacts are
    comparable across runs) to BENCH_interface.json; CI gates on it via
-   ``benchmarks/check_regression.py``.
+   ``benchmarks/check_regression.py``.  Timed records carry streaming
+   ``tick_ms_p50/p95/p99`` percentiles over the repeat wall-clocks next
+   to the min-based ``new_tick_ms``, and scenario records embed
+   ``stats_per_tick`` so ``python -m repro.obs.report`` can render the
+   per-tier (arbiter/CAM/NoC/chip) breakdown.  ``--trace PATH`` writes a
+   Chrome-trace JSON (open in Perfetto / chrome://tracing) of the
+   compile / device-transfer / run / block-until-ready spans.
 
 5. **Chip hierarchy** (``--chips``): the same total fabric partitioned
    into 1..K chips (`repro.noc.hierarchy`): chip-local vs. inter-chip
@@ -58,6 +65,7 @@ is >= 5x the oracle at 16 cores x 256 neurons/core.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import gc
 import json
@@ -77,6 +85,13 @@ from repro.core import fabric
 from repro.interface import Interface, StepStats
 from repro.interface import pipeline as interface_pipeline
 from repro.noc import placement, topology
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+# Bump when the --json record/payload shape changes incompatibly; the
+# committed baseline and check_regression.py key off the record fields,
+# so readers use this plus `platform` to decide comparability.
+SCHEMA_VERSION = 2
 
 DEFAULT_CORES = (4, 16, 64)
 NEURONS = 16          # per core: kept small so the 64-core dense sweep fits
@@ -219,14 +234,18 @@ def tick_sweep(core_sweep, neurons, entries, ticks, repeats=3):
         cfg = fabric.FabricConfig(cores=cores, neurons_per_core=neurons,
                                   cam_entries_per_core=entries)
         params = fabric.random_connectivity(jax.random.PRNGKey(0), cfg)
-        sp = jax.random.bernoulli(jax.random.PRNGKey(2), RATE,
-                                  (ticks, cores, neurons))
+        with obs_trace.span("tick_sweep.device_transfer", cores=cores):
+            sp = jax.device_put(jax.random.bernoulli(
+                jax.random.PRNGKey(2), RATE, (ticks, cores, neurons)))
+            jax.block_until_ready(sp)
 
         session = Interface(cfg).compile(params)
 
         def fast_run():
-            out = session.run(sp)
-            jax.block_until_ready(out)
+            with obs_trace.span("tick_sweep.run", cores=cores):
+                out = session.run(sp)
+            with obs_trace.span("tick_sweep.block_until_ready", cores=cores):
+                jax.block_until_ready(out)
             return out
 
         tables, arb_plan = session.tables, session.arb_plan
@@ -252,13 +271,21 @@ def tick_sweep(core_sweep, neurons, entries, ticks, repeats=3):
         assert float(acc_new.events) == float(acc_old.events)
         assert float(acc_new.cam_searches) == float(acc_old.cam_searches)
 
-        t_new = min(_timed(fast_run) for _ in range(repeats))
+        hist = obs_metrics.Histogram("fast_tick_ms")
+        times = [_timed(fast_run) for _ in range(repeats)]
+        for t in times:
+            hist.add(t / ticks * 1e3)
+        t_new = min(times)
         t_old = min(_timed(slow_run) for _ in range(repeats))
         speedup = t_old / max(t_new, 1e-9)
+        pct = hist.summary()
         records.append({"cores": cores, "neurons_per_core": neurons,
                         "cam_entries_per_core": entries, "ticks": ticks,
                         "old_tick_ms": t_old / ticks * 1e3,
                         "new_tick_ms": t_new / ticks * 1e3,
+                        "tick_ms_p50": pct["p50"],
+                        "tick_ms_p95": pct["p95"],
+                        "tick_ms_p99": pct["p99"],
                         "speedup": speedup,
                         "currents_bit_identical": identical})
         print(f"{cores:>5} {t_old / ticks * 1e3:>15.3f} "
@@ -281,23 +308,37 @@ def scenario_sweep(names, cores, neurons, entries, ticks, repeats=3):
     records = []
     for name in names:
         gc.collect()
-        sp = traffic.generate(name, 4, ticks, cfg)
+        with obs_trace.span("scenario.generate", scenario=name):
+            sp = traffic.generate(name, 4, ticks, cfg)
 
         def run():
-            out = session.run(sp)
-            jax.block_until_ready(out)
+            with obs_trace.span("scenario.run", scenario=name):
+                out = session.run(sp)
+            with obs_trace.span("scenario.block_until_ready", scenario=name):
+                jax.block_until_ready(out)
             return out
 
         _, acc = run()                                         # compile/warm
-        t = min(_timed(run) for _ in range(repeats))
+        hist = obs_metrics.Histogram("scenario_tick_ms")
+        times = [_timed(run) for _ in range(repeats)]
+        for t in times:
+            hist.add(t / ticks * 1e3)
+        t = min(times)
+        pct = hist.summary()
         rate = traffic.expected_rate(name, cores, neurons)
         rec = {"scenario": name, "cores": cores,
                "neurons_per_core": neurons,
                "cam_entries_per_core": entries, "ticks": ticks,
                "new_tick_ms": t / ticks * 1e3,
+               "tick_ms_p50": pct["p50"],
+               "tick_ms_p95": pct["p95"],
+               "tick_ms_p99": pct["p99"],
                "expected_rate": rate,
                "events_per_tick": float(acc.events) / ticks,
-               "encode_latency_per_tick": float(acc.encode_latency) / ticks}
+               "encode_latency_per_tick": float(acc.encode_latency) / ticks,
+               # per-tick-mean StepStats: the per-tier (arbiter/CAM/NoC/
+               # chip) breakdown `python -m repro.obs.report` renders
+               "stats_per_tick": acc.summary(ticks=ticks)}
         records.append(rec)
         print(f"{name:>19} {rate:>8.3f} {rec['events_per_tick']:>11.1f} "
               f"{rec['new_tick_ms']:>8.3f} "
@@ -419,35 +460,51 @@ def main(argv=None):
                     default=None, metavar="PATH",
                     help="write the session-tick records to PATH "
                          "(default when flag given: %(const)s)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace (Perfetto) JSON of the "
+                         "compile/transfer/run/block spans to PATH "
+                         "(repro.obs.trace)")
     args = ap.parse_args(argv)
     core_sweep = tuple(int(c) for c in str(args.cores).split(",") if c)
     tick_cores = tuple(int(c) for c in str(args.tick_cores).split(",") if c)
     chips_list = tuple(int(c) for c in str(args.chips).split(",") if c) \
         if args.chips else ()
 
-    # wall clock first: a pristine process keeps the comparison honest
-    timing = api_timing_sweep(core_sweep, args.ticks)
-    tick_records = tick_sweep(tick_cores, args.tick_neurons,
-                              args.tick_entries, args.tick_ticks,
-                              repeats=args.tick_repeats)
-    chips_records = chips_sweep(chips_list, args.chips_cores, NEURONS,
-                                2 * NEURONS, args.tick_ticks,
-                                repeats=args.tick_repeats) \
-        if chips_list else []
-    scenario_names = ()
-    if args.scenario:
-        scenario_names = traffic.scenario_names() if args.scenario == "all" \
-            else tuple(s for s in str(args.scenario).split(",") if s)
-    scenario_records = scenario_sweep(
-        scenario_names, args.scenario_cores, args.tick_neurons,
-        args.tick_entries, args.tick_ticks,
-        repeats=args.tick_repeats) if scenario_names else []
-    scheme = scheme_sweep(core_sweep)
-    placed = placement_sweep(core_sweep)
+    tracer = obs_trace.Tracer("noc_bench") if args.trace else None
+    with (tracer if tracer is not None else contextlib.nullcontext()):
+        # wall clock first: a pristine process keeps the comparison honest
+        timing = api_timing_sweep(core_sweep, args.ticks)
+        tick_records = tick_sweep(tick_cores, args.tick_neurons,
+                                  args.tick_entries, args.tick_ticks,
+                                  repeats=args.tick_repeats)
+        chips_records = chips_sweep(chips_list, args.chips_cores, NEURONS,
+                                    2 * NEURONS, args.tick_ticks,
+                                    repeats=args.tick_repeats) \
+            if chips_list else []
+        scenario_names = ()
+        if args.scenario:
+            scenario_names = traffic.scenario_names() \
+                if args.scenario == "all" \
+                else tuple(s for s in str(args.scenario).split(",") if s)
+        scenario_records = scenario_sweep(
+            scenario_names, args.scenario_cores, args.tick_neurons,
+            args.tick_entries, args.tick_ticks,
+            repeats=args.tick_repeats) if scenario_names else []
+        scheme = scheme_sweep(core_sweep)
+        placed = placement_sweep(core_sweep)
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"\nwrote {args.trace} ({len(tracer.events)} trace events)")
 
     if args.json:
         payload = {"benchmark": "interface_session_tick",
+                   "schema_version": SCHEMA_VERSION,
                    "git_sha": _git_sha(),
+                   # host identity: committed baselines are only gate-
+                   # comparable on a matching platform (check_regression
+                   # warns instead of gating on mismatch)
+                   "platform": jax.devices()[0].platform,
+                   "jax_version": jax.__version__,
                    "config": vars(args),
                    "rate": RATE,
                    "records": tick_records + scenario_records}

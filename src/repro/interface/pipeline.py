@@ -45,6 +45,7 @@ from repro.kernels.cam_search import ops as cam_ops
 from repro.kernels.hat_encode import ops as hat_ops
 from repro.noc import hierarchy
 from repro.noc import router as noc_router
+from repro.obs import telemetry as obs_telemetry
 
 
 def build_tables(params, cfg):
@@ -150,6 +151,7 @@ def interface_tick(params, spikes: jnp.ndarray, cfg,
                    routing: RoutingIndex | None = None,
                    cam_cycle_ns: float | None = None,
                    oracle: bool = False,
+                   telemetry: str = "off",
                    ) -> tuple[jnp.ndarray, StepStats]:
     """One fabric tick.
 
@@ -164,8 +166,18 @@ def interface_tick(params, spikes: jnp.ndarray, cfg,
     oracle:  run the pre-optimization reference path - dense tag-vs-every-
         source CAM sweep + per-core discrete-event arbiter simulation.  The
         default event-driven path is bit-identical to it (tested).
+    telemetry: ``"off"`` (default) returns ``(currents, StepStats)``
+        exactly as always; ``"cores"`` additionally returns a
+        `repro.obs.telemetry.CoreStats` per-core breakdown as a third
+        element.  The tick computation is identical either way - currents
+        and stats are bit-identical across telemetry modes.
     returns: currents (cores, neurons_per_core) float32, `StepStats`
+        (plus `CoreStats` under ``telemetry="cores"``)
     """
+    if telemetry not in ("off", "cores"):
+        raise ValueError(
+            f"interface_tick telemetry must be 'off' or 'cores' (the "
+            f"'ticks' mode is a session-level scan concern), got {telemetry!r}")
     cores, n = spikes.shape
     if n != cfg.neurons_per_core or cores != cfg.cores:
         raise ValueError(
@@ -231,21 +243,29 @@ def interface_tick(params, spikes: jnp.ndarray, cfg,
         # ---- event-driven path: policy latency + gather/scatter -----------
         if routing is None:
             routing = build_routing_index(params, cfg)
-        latencies = arb.batched_tick_latency(arb_cfg, spikes)
-        entry_drive = _entry_drive(params, spikes_flat, routing, cfg)
-        contrib = entry_drive * params.weights
-        currents = jax.vmap(
-            lambda c, t: jnp.zeros((n,), jnp.float32).at[t].add(c)
-        )(contrib, params.targets)
-        hits_total = jnp.sum(entry_drive)
-        addr_seq = _addr_streams(spikes, cfg, n)
+        with jax.named_scope("repro.arbiter_latency"):
+            latencies = arb.batched_tick_latency(arb_cfg, spikes)
+        with jax.named_scope("repro.cam_match"):
+            entry_drive = _entry_drive(params, spikes_flat, routing, cfg)
+            contrib = entry_drive * params.weights
+            currents = jax.vmap(
+                lambda c, t: jnp.zeros((n,), jnp.float32).at[t].add(c)
+            )(contrib, params.targets)
+            hits_total = jnp.sum(entry_drive)
+        with jax.named_scope("repro.aer_encode"):
+            addr_seq = _addr_streams(spikes, cfg, n)
 
     # ---- NoC delivery + PPA accounting ------------------------------------
-    enc_per_core = jax.vmap(
-        lambda seq: arb.encode_energy_units(cfg.scheme, n, seq))(addr_seq)
-    stats = accounting_stats(cfg, tables, spikes, latencies, enc_per_core,
-                             hits_total, params.valid, cam_cycle_ns,
-                             noc_scheme)
+    with jax.named_scope("repro.accounting"):
+        enc_per_core = jax.vmap(
+            lambda seq: arb.encode_energy_units(cfg.scheme, n, seq))(addr_seq)
+        stats = accounting_stats(cfg, tables, spikes, latencies, enc_per_core,
+                                 hits_total, params.valid, cam_cycle_ns,
+                                 noc_scheme)
+    if telemetry == "cores":
+        with jax.named_scope("repro.telemetry_cores"):
+            core = per_core_stats(cfg, tables, spikes, latencies, enc_per_core)
+        return currents, stats, core
     return currents, stats
 
 
@@ -292,3 +312,30 @@ def accounting_stats(cfg, tables, spikes, latencies, enc_per_core,
                      chip_hops=chip_hops,
                      chip_latency=chip_latency,
                      chip_energy=chip_energy)
+
+
+def per_core_stats(cfg, tables, spikes, latencies,
+                   enc_per_core) -> obs_telemetry.CoreStats:
+    """Per-core telemetry breakdown of one tick (``telemetry="cores"``).
+
+    NoC/chip hops are attributed to each event's *source* core (the core
+    whose arbiter emitted it) through the same precomputed per-source hop
+    tables `accounting_stats` totals over, so the per-core vectors sum
+    exactly back to `StepStats.noc_hops` / ``chip_hops``; events and
+    encode energy likewise sum, and the per-tick ``encode_latency`` is the
+    max over cores (a tick completes when its slowest arbiter does).
+    """
+    cores = spikes.shape[0]
+    ev_flat = spikes.reshape(-1).astype(jnp.float32)
+    events = jnp.sum(spikes, axis=1).astype(jnp.float32)
+    noc_hops = jnp.sum((ev_flat * tables.hops).reshape(cores, -1), axis=1)
+    if isinstance(tables, hierarchy.HierTables):
+        chip_hops = jnp.sum((ev_flat * tables.chip_hops).reshape(cores, -1),
+                            axis=1)
+    else:
+        chip_hops = jnp.zeros((cores,), jnp.float32)
+    return obs_telemetry.CoreStats(events=events,
+                                   encode_latency=latencies.astype(jnp.float32),
+                                   encode_energy=enc_per_core * events,
+                                   noc_hops=noc_hops,
+                                   chip_hops=chip_hops)

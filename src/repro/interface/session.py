@@ -25,6 +25,13 @@ partition the replicated accounting reductions differently.
 This replaces the seed pattern of calling `fabric.step` in a Python loop,
 which re-entered jit dispatch every tick and silently rebuilt the NoC
 tables whenever the caller forgot to thread them through.
+
+Observability: ``run(..., telemetry="ticks"|"cores")`` swaps the
+accumulate-only carry for stacked per-tick `StepStats` scan ys (and, at
+``"cores"``, per-core event/latency/hop breakdowns), all still under one
+jit - see `repro.obs.telemetry` for the returned containers and their
+sum-back invariants.  Compile and run dispatch are wrapped in
+`repro.obs.trace` spans, no-ops unless a tracer is active.
 """
 
 from __future__ import annotations
@@ -41,6 +48,8 @@ from repro.core import cam as cam_mod
 from repro.interface import pipeline
 from repro.interface.config import as_interface_config
 from repro.interface.stats import StepStats
+from repro.obs import telemetry as obs_telemetry
+from repro.obs import trace as obs_trace
 
 _SHARD_MODES = (None, "chips")
 
@@ -79,10 +88,12 @@ class InterfaceSession:
         self.config = as_interface_config(config)
         self.params = params
         cfg = self.config
-        self.tables = pipeline.build_tables(params, cfg)
-        self.arb_plan = arb.ArbiterConfig(cfg.scheme, cfg.neurons_per_core)
-        self.routing = pipeline.build_routing_index(params, cfg)
-        self.cam_cycle_ns = cam_mod.cycle_time_ns(cfg.cam)
+        with obs_trace.span("interface.compile", cores=cfg.cores,
+                            chips=cfg.chips, impl=cfg.impl):
+            self.tables = pipeline.build_tables(params, cfg)
+            self.arb_plan = arb.ArbiterConfig(cfg.scheme, cfg.neurons_per_core)
+            self.routing = pipeline.build_routing_index(params, cfg)
+            self.cam_cycle_ns = cam_mod.cycle_time_ns(cfg.cam)
         tables, arb_plan, routing = self.tables, self.arb_plan, self.routing
         cam_cycle_ns = self.cam_cycle_ns
 
@@ -102,6 +113,7 @@ class InterfaceSession:
         self._run = jax.jit(run)
         self._run_batched = jax.jit(jax.vmap(run, in_axes=(None, 0)))
         self._sharded_cache = None
+        self._telemetry_cache = {}
 
     # ---- execution -------------------------------------------------------
 
@@ -109,7 +121,7 @@ class InterfaceSession:
         """One tick.  spikes: (cores, neurons_per_core) bool."""
         return self._tick(self.params, self._check(spikes, 2))
 
-    def run(self, spikes, shard: str | None = None
+    def run(self, spikes, shard: str | None = None, telemetry: str = "off"
             ) -> tuple[jnp.ndarray, StepStats]:
         """Multi-timestep simulation under one jit-compiled lax.scan.
 
@@ -120,29 +132,106 @@ class InterfaceSession:
             devices than chips.  Sharded execution always uses the XLA
             gather backend for the CAM match (bit-identical to
             ``impl="pallas"``, which is tested against it).
+        telemetry: ``"off"`` (default) is today's accumulate-only scan,
+            returning ``(currents, accumulated stats)``.  ``"ticks"``
+            additionally stacks the per-tick `StepStats` as scan ys and
+            returns ``(currents, stats, TickTelemetry)``; ``"cores"``
+            returns ``(currents, stats, CoreTelemetry)`` with per-core
+            event/latency/hop breakdowns (see `repro.obs.telemetry`).
+            Currents and accumulated stats are bit-identical in every
+            mode.  Telemetry composes with the flat path only - combine
+            it with ``shard="chips"`` on a multi-chip config and this
+            raises (run unsharded for tier attribution).
         returns (currents (T, cores, neurons_per_core), accumulated stats);
         use ``stats.summary(ticks=T)`` for per-tick means.
         """
         spikes = self._check(spikes, 3)
         fn = self._shard_fn("run", shard)
+        if telemetry != "off":
+            t_fn = self._telemetry_fn("run", telemetry, sharded=fn is not None)
+            with obs_trace.span("interface.run", telemetry=telemetry):
+                return t_fn(self.params, spikes)
         if fn is not None:
-            return fn(spikes)
-        return self._run(self.params, spikes)
+            with obs_trace.span("interface.run", shard=shard):
+                return fn(spikes)
+        with obs_trace.span("interface.run"):
+            return self._run(self.params, spikes)
 
-    def run_batched(self, spikes, shard: str | None = None
+    def run_batched(self, spikes, shard: str | None = None,
+                    telemetry: str = "off"
                     ) -> tuple[jnp.ndarray, StepStats]:
         """Batched scan: spikes (B, T, cores, neurons_per_core) bool.
 
         Returns (currents (B, T, C, N), stats with (B,)-shaped leaves,
         each accumulated over that batch element's T ticks).  ``shard``
         behaves as in `run` (the batch axis is vmapped over the sharded
-        scan).
+        scan); ``telemetry`` as in `run`, with the series leaves gaining
+        a leading batch axis (``(B, T)`` / ``(B, T, cores)``).
         """
         spikes = self._check(spikes, 4)
         fn = self._shard_fn("run_batched", shard)
+        if telemetry != "off":
+            t_fn = self._telemetry_fn("run_batched", telemetry,
+                                      sharded=fn is not None)
+            with obs_trace.span("interface.run_batched", telemetry=telemetry):
+                return t_fn(self.params, spikes)
         if fn is not None:
-            return fn(spikes)
-        return self._run_batched(self.params, spikes)
+            with obs_trace.span("interface.run_batched", shard=shard):
+                return fn(spikes)
+        with obs_trace.span("interface.run_batched"):
+            return self._run_batched(self.params, spikes)
+
+    # ---- in-jit telemetry ------------------------------------------------
+
+    def _telemetry_fn(self, kind: str, mode: str, sharded: bool):
+        """The jitted telemetry scan for (kind, mode); built lazily once."""
+        obs_telemetry.validate_mode(mode)
+        if sharded:
+            raise ValueError(
+                "telemetry is not supported together with shard='chips'; "
+                "run unsharded (the default) to collect per-tick/per-core "
+                "series - currents are bit-identical across both paths")
+        if mode not in self._telemetry_cache:
+            self._telemetry_cache[mode] = self._build_telemetry(mode)
+        return self._telemetry_cache[mode][kind]
+
+    def _build_telemetry(self, mode: str) -> dict:
+        """Scan with stacked ys: per-tick `StepStats`, plus per-core
+        breakdowns under ``"cores"``.  The tick body is the same
+        `pipeline.interface_tick` the plain run uses, so currents and the
+        accumulated stats stay bit-identical to ``telemetry="off"``."""
+        cfg = self.config
+        tables, arb_plan, routing = self.tables, self.arb_plan, self.routing
+        cam_cycle_ns = self.cam_cycle_ns
+        tick_telemetry = "cores" if mode == "cores" else "off"
+
+        def tick(p, spikes_cn):
+            return pipeline.interface_tick(p, spikes_cn, cfg, tables, arb_plan,
+                                           routing=routing,
+                                           cam_cycle_ns=cam_cycle_ns,
+                                           telemetry=tick_telemetry)
+
+        if mode == "ticks":
+            def run(p, spikes_tcn):
+                def body(acc, s_t):
+                    currents, st = tick(p, s_t)
+                    return acc.accumulate(st), (currents, st)
+                acc, (currents, series) = jax.lax.scan(
+                    body, StepStats.zeros(), spikes_tcn)
+                return currents, acc, obs_telemetry.TickTelemetry(
+                    per_tick=series)
+        else:
+            def run(p, spikes_tcn):
+                def body(acc, s_t):
+                    currents, st, core = tick(p, s_t)
+                    return acc.accumulate(st), (currents, st, core)
+                acc, (currents, series, core_series) = jax.lax.scan(
+                    body, StepStats.zeros(), spikes_tcn)
+                return currents, acc, obs_telemetry.CoreTelemetry(
+                    per_tick=series, per_core=core_series)
+
+        return {"run": jax.jit(run),
+                "run_batched": jax.jit(jax.vmap(run, in_axes=(None, 0)))}
 
     # ---- chip sharding ---------------------------------------------------
 

@@ -15,6 +15,7 @@ reports the mean per tick (the convention `models/snn.py` always used).
 
 from __future__ import annotations
 
+import math
 from typing import NamedTuple
 
 import jax
@@ -48,7 +49,20 @@ class StepStats(NamedTuple):
         return jax.tree.map(jnp.add, self, other)
 
     def mean(self, ticks) -> "StepStats":
-        """Per-tick means of an accumulated record."""
+        """Per-tick means of an accumulated record.
+
+        ``ticks`` must be a positive tick count: dividing by zero would
+        silently turn every field into inf/nan, so that raises instead.
+        (Traced values can't be validated and pass through unchecked.)
+        """
+        try:
+            ticks_f = float(ticks)
+        except TypeError:       # traced under jit / non-scalar: no host check
+            ticks_f = None
+        if ticks_f is not None and (not math.isfinite(ticks_f) or ticks_f <= 0):
+            raise ValueError(
+                f"ticks must be a positive tick count, got {ticks!r}; "
+                f"a zero-tick mean would silently report inf/nan")
         d = jnp.asarray(ticks, jnp.float32)
         return jax.tree.map(lambda a: a / d, self)
 

@@ -30,10 +30,14 @@ def _pad_rows(x: jnp.ndarray, block: int) -> jnp.ndarray:
 def cam_search(q_packed, t_packed, valid, *, impl: str = "xla",
                interpret: bool = False) -> jnp.ndarray:
     """Batched associative tag match: (B, W), (E, W), (E,) -> (B, E) int32."""
+    # named_scope: aligns device profiles with repro.obs.trace host spans
     if impl == "xla":
-        return ref.cam_search_ref(q_packed, t_packed, valid)
+        with jax.named_scope("repro.cam_search.xla"):
+            return ref.cam_search_ref(q_packed, t_packed, valid)
     if impl == "pallas":
-        return cam_search_pallas(q_packed, t_packed, valid, interpret=interpret)
+        with jax.named_scope("repro.cam_search.pallas"):
+            return cam_search_pallas(q_packed, t_packed, valid,
+                                     interpret=interpret)
     raise ValueError(f"unknown impl {impl!r}")
 
 
@@ -55,12 +59,14 @@ def cam_match_counts(q_packed, t_packed, valid, *, impl: str = "xla",
     and sums the match matrix along the entry axis.
     """
     b = q_packed.shape[0]
-    if impl == "pallas":
-        q_packed = _pad_rows(q_packed, DEFAULT_BLOCK_B)
-        t_packed = _pad_rows(t_packed, DEFAULT_BLOCK_E)
-        valid = _pad_rows(valid.astype(jnp.int32), DEFAULT_BLOCK_E)
-    m = cam_search(q_packed, t_packed, valid, impl=impl, interpret=interpret)
-    return ref.match_count_ref(m[:b])
+    with jax.named_scope("repro.cam_match_counts"):
+        if impl == "pallas":
+            q_packed = _pad_rows(q_packed, DEFAULT_BLOCK_B)
+            t_packed = _pad_rows(t_packed, DEFAULT_BLOCK_E)
+            valid = _pad_rows(valid.astype(jnp.int32), DEFAULT_BLOCK_E)
+        m = cam_search(q_packed, t_packed, valid, impl=impl,
+                       interpret=interpret)
+        return ref.match_count_ref(m[:b])
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "interpret"))

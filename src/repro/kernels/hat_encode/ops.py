@@ -17,21 +17,25 @@ def hat_encode(spikes, *, row: int = 256, impl: str = "xla",
                interpret: bool = False):
     """Service ranks + counts for a spike bitmap (see kernel docstring)."""
     n = spikes.shape[0]
+    # named_scope: aligns device profiles with repro.obs.trace host spans
     if impl == "pallas" and n <= MAX_PALLAS_N and n % row == 0:
-        return hat_encode_pallas(spikes, row=row, interpret=interpret)
+        with jax.named_scope("repro.hat_encode.pallas"):
+            return hat_encode_pallas(spikes, row=row, interpret=interpret)
     if impl == "pallas":
         raise ValueError(f"pallas hat_encode supports N % {row} == 0 and "
                          f"N <= {MAX_PALLAS_N}; got N={n}")
     if impl != "xla":
         raise ValueError(f"unknown impl {impl!r}")
     r = row if n % row == 0 else 1
-    return ref.hat_encode_ref(spikes, row=r)
+    with jax.named_scope("repro.hat_encode.xla"):
+        return ref.hat_encode_ref(spikes, row=r)
 
 
 @functools.partial(jax.jit, static_argnames=("row", "impl", "interpret"))
 def encode_stream(spikes, *, row: int = 256, impl: str = "xla",
                   interpret: bool = False):
     """Compacted AER stream: active addresses in service order, padded N."""
-    ranks, count, _ = hat_encode(spikes, row=row, impl=impl,
-                                 interpret=interpret)
-    return ref.compact_stream(ranks, count), count
+    with jax.named_scope("repro.encode_stream"):
+        ranks, count, _ = hat_encode(spikes, row=row, impl=impl,
+                                     interpret=interpret)
+        return ref.compact_stream(ranks, count), count

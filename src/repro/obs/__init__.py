@@ -1,0 +1,57 @@
+"""`repro.obs` - observability for the interface fabric.
+
+Three layers, one import:
+
+  `repro.obs.telemetry`   in-jit per-tick / per-core `StepStats` series
+                          (the ``telemetry=`` knob on `InterfaceSession`)
+  `repro.obs.trace`       host-side span tracing -> Chrome-trace JSON,
+                          aligned with device profiles via
+                          `jax.profiler.TraceAnnotation`
+  `repro.obs.metrics`     counters, streaming p50/p95/p99 histograms,
+                          JSONL sink
+  `repro.obs.report`      ``python -m repro.obs.report`` per-tier
+                          (arbiter/CAM/NoC/chip) breakdown tables
+
+See each module's docstring for the contract; ``tests/test_obs.py`` pins
+the telemetry invariants (off-mode bit-identity, series-sums-to-total,
+per-core-sums-to-per-tick).
+"""
+
+from __future__ import annotations
+
+# `report` is deliberately NOT imported eagerly: it is a ``python -m``
+# entry point, and importing it from the package would make runpy warn
+# about the module already being in sys.modules when invoked as a CLI.
+from repro.obs import metrics, telemetry, trace  # noqa: F401
+from repro.obs.metrics import (  # noqa: F401
+    Counter,
+    Histogram,
+    JsonlSink,
+    MetricsRegistry,
+    percentiles,
+)
+from repro.obs.telemetry import (  # noqa: F401
+    TELEMETRY_MODES,
+    CoreStats,
+    CoreTelemetry,
+    TickTelemetry,
+)
+from repro.obs.trace import Tracer, active_tracer, span  # noqa: F401
+
+__all__ = [
+    "metrics",
+    "telemetry",
+    "trace",
+    "Counter",
+    "Histogram",
+    "JsonlSink",
+    "MetricsRegistry",
+    "percentiles",
+    "TELEMETRY_MODES",
+    "CoreStats",
+    "CoreTelemetry",
+    "TickTelemetry",
+    "Tracer",
+    "active_tracer",
+    "span",
+]

@@ -1,0 +1,124 @@
+"""In-jit telemetry records for `InterfaceSession` runs.
+
+The session's scan normally carries only an accumulated `StepStats` - one
+scalar record for the whole run.  That is the right default (nothing extra
+crosses the device boundary), but it cannot say *which tier* dominated a
+given scenario or whether a regression was a mean shift or a tail event.
+The ``telemetry=`` knob on ``run`` / ``run_batched`` swaps the scan ys for
+richer records, all still under one jit:
+
+``"off"``
+    today's path, byte for byte: ``(currents, accumulated StepStats)``.
+``"ticks"``
+    additionally stacks the per-tick `StepStats` as scan ys:
+    ``(currents, accumulated, TickTelemetry)`` where every leaf of
+    ``TickTelemetry.per_tick`` has a leading ``(T,)`` axis (``(B, T)``
+    under ``run_batched``).  Summing the series over ticks reproduces the
+    accumulated record (tested in ``tests/test_obs.py``).
+``"cores"``
+    also stacks per-core breakdowns (`CoreStats`): events, arbiter grant
+    latency, AER encode energy, and NoC/chip hop attribution per source
+    core, each ``(T, cores)``.  Per-core values sum (or max, for latency)
+    back to the per-tick totals.
+
+Currents are bit-identical in every mode: telemetry only adds outputs, it
+never changes the tick computation.  The containers here are plain
+NamedTuples (pytrees), so they flow through jit/scan/vmap unchanged; the
+summarising helpers (`percentiles`, `to_records`) are host-side.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.interface.stats import StepStats
+from repro.obs import metrics as obs_metrics
+
+TELEMETRY_MODES = ("off", "ticks", "cores")
+
+
+def validate_mode(mode: str) -> str:
+    if mode not in TELEMETRY_MODES:
+        raise ValueError(
+            f"unknown telemetry mode {mode!r}; expected one of "
+            f"{', '.join(repr(m) for m in TELEMETRY_MODES)}"
+        )
+    return mode
+
+
+class CoreStats(NamedTuple):
+    """Per-core slice of one tick's accounting (leaves ``(cores,)``).
+
+    Stacked under the session scan the leaves become ``(T, cores)``.
+    Invariants against the per-tick `StepStats` (tested):
+
+      * ``events.sum(-1)`` equals ``StepStats.events`` exactly;
+      * ``encode_latency.max(-1)`` equals ``StepStats.encode_latency``
+        (the tick's completion time is the slowest core's grant);
+      * ``encode_energy`` / ``noc_hops`` / ``chip_hops`` sum to their
+        ``StepStats`` counterparts (hops are attributed to the *source*
+        core of each event, the core whose arbiter emitted it).
+    """
+
+    events: jnp.ndarray          # (cores,) spikes serviced per core
+    encode_latency: jnp.ndarray  # (cores,) arbiter grant completion (units)
+    encode_energy: jnp.ndarray   # (cores,) address-line toggles
+    noc_hops: jnp.ndarray        # (cores,) mesh links used by this core's events
+    chip_hops: jnp.ndarray       # (cores,) inter-chip links (zero when chips=1)
+
+
+class TickTelemetry(NamedTuple):
+    """Per-tick `StepStats` time series (every leaf carries a ``(T,)`` axis)."""
+
+    per_tick: StepStats
+
+    @property
+    def ticks(self) -> int:
+        return int(self.per_tick.events.shape[-1])
+
+    def series(self, field: str):
+        """One field's per-tick series as a host numpy-compatible array."""
+        return jnp.asarray(getattr(self.per_tick, field))
+
+    def percentiles(self, field: str, qs=(50, 95, 99)) -> dict:
+        """p50/p95/p99 (by default) of one field across ticks."""
+        values = [float(v) for v in jnp.ravel(self.series(field))]
+        return obs_metrics.percentiles(values, qs)
+
+    def to_records(self) -> list:
+        """JSONL-ready dicts, one per tick (batched runs flatten B x T)."""
+        flat = {k: jnp.ravel(v) for k, v in self.per_tick._asdict().items()}
+        ticks = flat["events"].shape[0]
+        return [{k: float(v[t]) for k, v in flat.items()} for t in range(ticks)]
+
+
+class CoreTelemetry(NamedTuple):
+    """`TickTelemetry` plus per-core breakdowns (`CoreStats`, ``(T, cores)``)."""
+
+    per_tick: StepStats
+    per_core: CoreStats
+
+    @property
+    def ticks(self) -> TickTelemetry:
+        return TickTelemetry(per_tick=self.per_tick)
+
+    def core_totals(self) -> CoreStats:
+        """Per-core sums over the run (latency: per-core max, not sum)."""
+        return CoreStats(
+            events=jnp.sum(self.per_core.events, axis=-2),
+            encode_latency=jnp.max(self.per_core.encode_latency, axis=-2),
+            encode_energy=jnp.sum(self.per_core.encode_energy, axis=-2),
+            noc_hops=jnp.sum(self.per_core.noc_hops, axis=-2),
+            chip_hops=jnp.sum(self.per_core.chip_hops, axis=-2),
+        )
+
+
+__all__ = [
+    "TELEMETRY_MODES",
+    "validate_mode",
+    "CoreStats",
+    "TickTelemetry",
+    "CoreTelemetry",
+]

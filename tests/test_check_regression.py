@@ -115,3 +115,50 @@ def test_pre_scenario_baseline_still_gates(tmp_path, monkeypatch, capsys):
     rc, out = _run(tmp_path, monkeypatch, capsys, current, baseline)
     assert rc == 1
     assert "regressed beyond the threshold" in out
+
+
+def test_p99_only_regression_gates(tmp_path, monkeypatch, capsys):
+    """A tail regression fails even when the best-of-N minimum is healthy."""
+    baseline = _payload([_record(1.0, tick_ms_p99=1.2)])
+    current = _payload([_record(1.0, tick_ms_p99=9.0)])
+    rc, out = _run(tmp_path, monkeypatch, capsys, current, baseline)
+    assert rc == 1
+    assert "REGRESSED" in out
+    assert "tick_ms_p99" in out
+    assert "regressed beyond the threshold" in out
+
+
+def test_p99_within_threshold_passes(tmp_path, monkeypatch, capsys):
+    baseline = _payload([_record(1.0, tick_ms_p99=1.2)])
+    current = _payload([_record(1.0, tick_ms_p99=1.3)])
+    rc, out = _run(tmp_path, monkeypatch, capsys, current, baseline)
+    assert rc == 0
+    assert "tick_ms_p99" in out
+    assert "gate passed" in out
+
+
+def test_pre_percentile_baseline_skips_p99_gate(tmp_path, monkeypatch, capsys):
+    """Old baselines without percentiles keep gating on new_tick_ms alone."""
+    baseline = _payload([_record(1.0)])
+    current = _payload([_record(1.0, tick_ms_p99=99.0)])
+    rc, out = _run(tmp_path, monkeypatch, capsys, current, baseline)
+    assert rc == 0
+    assert "gate passed" in out
+    assert "REGRESSED" not in out
+
+
+def test_platform_mismatch_warns_instead_of_gating(tmp_path, monkeypatch, capsys):
+    baseline = {**_payload([_record(1.0)]), "platform": "tpu"}
+    current = {**_payload([_record(9.0)]), "platform": "cpu"}
+    rc, out = _run(tmp_path, monkeypatch, capsys, current, baseline)
+    assert rc == 0
+    assert "platform mismatch" in out
+    assert "gate not enforced" in out
+
+
+def test_matching_platforms_still_gate(tmp_path, monkeypatch, capsys):
+    baseline = {**_payload([_record(1.0)]), "platform": "cpu"}
+    current = {**_payload([_record(9.0)]), "platform": "cpu"}
+    rc, out = _run(tmp_path, monkeypatch, capsys, current, baseline)
+    assert rc == 1
+    assert "regressed beyond the threshold" in out
