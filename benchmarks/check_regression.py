@@ -16,6 +16,10 @@ optimizes for) and, when BOTH payloads carry it, the streaming
 ``tick_ms_p99`` percentile (`repro.obs.metrics`) - a tail-latency
 regression that leaves the best-of-N minimum untouched still fails.  Old
 baselines without percentiles keep gating on ``new_tick_ms`` alone.
+Serve-path records (``noc_bench --serve``, schema_version >= 3)
+additionally gate ``events_per_sec`` *inverted* - the ratio column shows
+baseline/current so >1 still reads "worse", and a sustained-throughput
+drop beyond the threshold fails even when per-tick latency looks healthy.
 Millisecond-scale measurements are scheduler-noise bound even best-of-N, so
 a regression must clear the ratio threshold AND an absolute slack
 (``--min-delta-ms``, default 0.5 ms per tick) to fail; runs inside the
@@ -51,6 +55,13 @@ VALUE_FIELD = "new_tick_ms"
 # Gated only when present in BOTH payloads, so pre-percentile baselines
 # (schema_version < 2) keep working unchanged.
 P99_FIELD = "tick_ms_p99"
+# Serve-path throughput (schema_version >= 3, the "__serve__" record).
+# Higher is better, so the gate inverts the ratio: baseline/current, a
+# drop beyond the threshold fails.  Same both-present rule as p99.
+THROUGHPUT_FIELD = "events_per_sec"
+# Absolute slack for the throughput gate (events/sec): guards the ratio
+# against blowing up on near-zero baselines, mirroring --min-delta-ms.
+MIN_DELTA_EPS = 1.0
 
 
 class RecordFormatError(ValueError):
@@ -117,6 +128,16 @@ def compare(
             if status == "REGRESSED":
                 ok = False
             rows.append((key, metric, b, c, c / max(b, 1e-12), status))
+        if THROUGHPUT_FIELD in base[key] and THROUGHPUT_FIELD in cur[key]:
+            # higher is better: present ratio as baseline/current so >1
+            # still reads "worse", same threshold as the latency gates
+            b, c = base[key][THROUGHPUT_FIELD], cur[key][THROUGHPUT_FIELD]
+            ratio = b / max(c, 1e-12)
+            if ratio <= threshold or b - c <= MIN_DELTA_EPS:
+                status = "ok" if ratio <= threshold else "ok (noise)"
+            else:
+                status, ok = "REGRESSED", False
+            rows.append((key, THROUGHPUT_FIELD, b, c, ratio, status))
     return rows, ok
 
 
@@ -130,15 +151,15 @@ def print_table(rows: list, current: dict, baseline: dict, threshold: float) -> 
         f"current sha {current.get('git_sha', 'unknown')[:12]}"
     )
     header = (
-        f"{'cores x n/core x entries x ticks x scenario':>44} {'metric':>12} "
-        f"{'base_ms':>9} {'cur_ms':>9} {'ratio':>7} {'status':>10}"
+        f"{'cores x n/core x entries x ticks x scenario':>44} {'metric':>14} "
+        f"{'base':>10} {'cur':>10} {'ratio':>7} {'status':>10}"
     )
     print(header)
     for key, metric, b, c, ratio, status in rows:
-        b_s = f"{b:9.3f}" if b is not None else f"{'-':>9}"
-        c_s = f"{c:9.3f}" if c is not None else f"{'-':>9}"
+        b_s = f"{b:10.3f}" if b is not None else f"{'-':>10}"
+        c_s = f"{c:10.3f}" if c is not None else f"{'-':>10}"
         r_s = f"{ratio:6.2f}x" if ratio is not None else f"{'-':>7}"
-        print(f"{_fmt_key(key):>44} {metric:>12} {b_s} {c_s} {r_s} {status:>10}")
+        print(f"{_fmt_key(key):>44} {metric:>14} {b_s} {c_s} {r_s} {status:>10}")
     cur, base = _index(current, "current"), _index(baseline, "baseline")
     for key in sorted(set(cur) & set(base)):
         b, c = base[key].get("speedup"), cur[key].get("speedup")

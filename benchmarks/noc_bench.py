@@ -55,6 +55,17 @@ Sweeps:
    key in the ``--json`` payload so ``check_regression.py`` gates each
    scenario's tick latency separately.
 
+7. **Serving** (``--serve [TENANTS]``, default 8): sustained multi-tenant
+   load through `repro.serve.ServeEngine` - all tenants share ONE
+   precompiled session and step as lanes of a single jitted masked
+   ``run_batched``.  After a warmup round (compile paid, metrics reset),
+   measured rounds record sustained ``events_per_sec`` and per-flush
+   tick-latency percentiles into a ``__serve__``-tagged record;
+   ``check_regression.py`` gates the latency fields normally and
+   events/sec inverted (a throughput *drop* beyond threshold fails).
+   One tenant's accumulated stats are asserted bit-identical to a solo
+   ``session.run`` over its concatenated stream.
+
 Also asserts the PR acceptance criteria: at >= 16 cores, multicast-tree +
 optimized placement reduces total CAM searches and NoC link events vs. the
 broadcast baseline; re-placed fabrics conserve total synaptic current; the
@@ -91,7 +102,9 @@ from repro.obs import trace as obs_trace
 # Bump when the --json record/payload shape changes incompatibly; the
 # committed baseline and check_regression.py key off the record fields,
 # so readers use this plus `platform` to decide comparability.
-SCHEMA_VERSION = 2
+# v3: --serve emits a "__serve__"-tagged sustained-load record carrying
+# events_per_sec (gated inverted: lower is a regression).
+SCHEMA_VERSION = 3
 
 DEFAULT_CORES = (4, 16, 64)
 NEURONS = 16          # per core: kept small so the 64-core dense sweep fits
@@ -346,6 +359,86 @@ def scenario_sweep(names, cores, neurons, entries, ticks, repeats=3):
     return records
 
 
+def serve_sweep(tenants, cores, neurons, entries, ticks, repeats=3):
+    """Sustained multi-tenant load through the serving engine.
+
+    Registers ``tenants`` specs (same fabric config, mixed scenarios) on
+    one `ServeEngine` - they land on ONE shared precompiled session and
+    step as lanes of a single jitted masked ``run_batched``.  One
+    warmup round pays compilation, metrics reset, then ``repeats``
+    rounds of submit+drain measure sustained events/sec and the
+    per-flush tick-latency percentiles.  One tenant's accumulated
+    `StepStats` are asserted bit-identical to a solo ``session.run``
+    over its full concatenated stream, so the batched serve path is
+    held to the same contract the conformance grid checks.
+    """
+    from repro.serve import ServeEngine, TenantSpec, default_connectivity
+
+    print(f"\n== serve sweep ({tenants} tenants on one session, {cores} "
+          f"cores x {neurons} neurons/core, {entries} CAM entries, "
+          f"{ticks} ticks/round x {repeats} rounds) ==")
+    cfg = fabric.FabricConfig(cores=cores, neurons_per_core=neurons,
+                              cam_entries_per_core=entries)
+    names = traffic.scenario_names()
+    engine = ServeEngine(flush_ticks=ticks, flush_deadline_s=0.0)
+    specs = [TenantSpec(f"tenant{i}", cfg, scenario=names[i % len(names)],
+                        seed=i)
+             for i in range(tenants)]
+    for spec in specs:
+        engine.register(spec)
+    assert len(engine.groups) == 1, \
+        "compatible tenants must share one precompiled session"
+
+    for spec in specs:                                     # warmup: compile
+        engine.submit_scenario(spec.name, ticks)
+    engine.drain()
+    warm_rounds = 1
+    engine.reset_metrics()
+
+    for _ in range(repeats):
+        for spec in specs:
+            engine.submit_scenario(spec.name, ticks)
+        engine.drain()
+
+    # serve-path contract: one tenant's accumulated stats must be bit-
+    # identical to a solo run over its full (warmup + measured) stream
+    probe = specs[0]
+    stream = jnp.concatenate([probe.stream(ticks, round=r)
+                              for r in range(warm_rounds + repeats)])
+    _, acc_solo = Interface(cfg).compile(
+        default_connectivity(cfg, probe.connectivity_seed)).run(stream)
+    acc_srv = engine.tenant_stats(probe.name)
+    identical = all(float(a) == float(np.asarray(b))
+                    for a, b in zip(acc_solo, acc_srv))
+    assert identical, "serve-path stats drifted from the solo session run"
+
+    report = engine.serve_report()
+    fleet = report[-1]
+    served = engine.ticks_served()
+    # key on ticks-per-round (like every other sweep) so the baseline
+    # stays matchable when --tick-repeats changes; served total is data
+    rec = {"scenario": "__serve__", "cores": cores,
+           "neurons_per_core": neurons, "cam_entries_per_core": entries,
+           "ticks": ticks, "ticks_served": served,
+           "tenants": tenants, "groups": len(engine.groups),
+           "flush_ticks": ticks,
+           # mean serve-step wall clock per live tick: the headline the
+           # regression gate compares, next to the streaming percentiles
+           "new_tick_ms": fleet["busy_s"] / max(served, 1) * 1e3,
+           "tick_ms_p50": fleet["tick_ms_p50"],
+           "tick_ms_p95": fleet["tick_ms_p95"],
+           "tick_ms_p99": fleet["tick_ms_p99"],
+           "events_per_sec": fleet["events_per_sec"],
+           "events_per_tick": fleet["events"] / max(served, 1),
+           "serve_bit_identical": identical}
+    print(f"{'tenants':>7} {'ticks':>6} {'events/s':>10} {'tick_ms':>8} "
+          f"{'p50':>7} {'p99':>7} {'identical':>9}")
+    print(f"{tenants:>7} {served:>6} {rec['events_per_sec']:>10.0f} "
+          f"{rec['new_tick_ms']:>8.3f} {rec['tick_ms_p50']:>7.3f} "
+          f"{rec['tick_ms_p99']:>7.3f} {str(identical):>9}")
+    return [rec]
+
+
 def chips_sweep(chips_list, cores, neurons, entries, ticks, repeats=3):
     """Same total fabric, 1..K chips: hierarchy costs + sharded session."""
     print(f"\n== chip hierarchy sweep ({cores} cores total, {neurons} "
@@ -450,6 +543,12 @@ def main(argv=None):
     ap.add_argument("--scenario-cores", type=int, default=16,
                     help="cores for the scenario sweep (default: "
                          "%(default)s)")
+    ap.add_argument("--serve", nargs="?", const=8, default=None, type=int,
+                    metavar="TENANTS",
+                    help="run the multi-tenant serve sweep with TENANTS "
+                         "tenants (default when flag given: %(const)s) on "
+                         "one shared session; reuses the session-tick "
+                         "shape and --scenario-cores")
     ap.add_argument("--chips", default=None, metavar="LIST",
                     help="comma-separated chip counts for the hierarchy "
                          "sweep (e.g. 1,2,4; off by default)")
@@ -490,6 +589,10 @@ def main(argv=None):
             scenario_names, args.scenario_cores, args.tick_neurons,
             args.tick_entries, args.tick_ticks,
             repeats=args.tick_repeats) if scenario_names else []
+        serve_records = serve_sweep(
+            args.serve, args.scenario_cores, args.tick_neurons,
+            args.tick_entries, args.tick_ticks,
+            repeats=args.tick_repeats) if args.serve else []
         scheme = scheme_sweep(core_sweep)
         placed = placement_sweep(core_sweep)
     if tracer is not None:
@@ -507,7 +610,8 @@ def main(argv=None):
                    "jax_version": jax.__version__,
                    "config": vars(args),
                    "rate": RATE,
-                   "records": tick_records + scenario_records}
+                   "records": tick_records + scenario_records
+                   + serve_records}
         if chips_records:
             payload["chips_records"] = chips_records
         with open(args.json, "w") as f:
@@ -555,6 +659,14 @@ def main(argv=None):
               f"({', '.join(r['scenario'] for r in scenario_records)}): "
               f"{live}")
         ok &= live
+    if serve_records:
+        r = serve_records[0]
+        s_ok = (r["tenants"] >= 8 and r["groups"] == 1
+                and r["serve_bit_identical"] and r["events_per_sec"] > 0)
+        print(f"  serve: {r['tenants']} tenants on {r['groups']} session(s), "
+              f"{r['events_per_sec']:.0f} events/s, stats bit-identical to "
+              f"solo: {s_ok}")
+        ok &= s_ok
     if chips_records:
         c_ok = all(r["sharded_bit_identical"] for r in chips_records)
         paid = all(r["chip_hops"] > 0 for r in chips_records if r["chips"] > 1)

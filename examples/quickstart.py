@@ -21,7 +21,7 @@ from repro.ckpt.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, Pipeline
 from repro.models.config import ModelConfig
 from repro.optim.adamw import AdamWConfig
-from repro.serve.engine import ServeEngine
+from repro.serve.lm_engine import ServeEngine
 from repro.train import step as ts
 
 

@@ -15,7 +15,7 @@ import jax
 
 from repro import configs
 from repro.models import lm
-from repro.serve.engine import ServeEngine
+from repro.serve.lm_engine import ServeEngine
 
 
 def main():

@@ -32,6 +32,17 @@ accumulate-only carry for stacked per-tick `StepStats` scan ys (and, at
 jit - see `repro.obs.telemetry` for the returned containers and their
 sum-back invariants.  Compile and run dispatch are wrapped in
 `repro.obs.trace` spans, no-ops unless a tracer is active.
+
+Masked / ragged streams (the `repro.serve` substrate): ``run(spikes,
+mask=...)`` and ``run_batched(spikes, mask=...)`` accept a per-tick bool
+mask (``(T,)`` / ``(B, T)``).  Masked ticks contribute exactly zero to
+the accumulated `StepStats` and zero currents, so tenants with ragged
+stream lengths can be right-padded onto one batch and stay bit-identical
+to their solo runs.  ``stats0`` seeds the scan's accumulator carry
+(per-lane ``(B,)`` leaves in the batched form): chunked serving threads
+the accumulator through successive calls, keeping the float accumulation
+order exactly the tick-sequential order a single solo `run` uses - which
+is what makes chunk-streamed stats bit-identical, not merely close.
 """
 
 from __future__ import annotations
@@ -114,6 +125,7 @@ class InterfaceSession:
         self._run_batched = jax.jit(jax.vmap(run, in_axes=(None, 0)))
         self._sharded_cache = None
         self._telemetry_cache = {}
+        self._masked_cache = None
 
     # ---- execution -------------------------------------------------------
 
@@ -121,7 +133,8 @@ class InterfaceSession:
         """One tick.  spikes: (cores, neurons_per_core) bool."""
         return self._tick(self.params, self._check(spikes, 2))
 
-    def run(self, spikes, shard: str | None = None, telemetry: str = "off"
+    def run(self, spikes, shard: str | None = None, telemetry: str = "off",
+            mask=None, stats0: StepStats | None = None
             ) -> tuple[jnp.ndarray, StepStats]:
         """Multi-timestep simulation under one jit-compiled lax.scan.
 
@@ -142,10 +155,26 @@ class InterfaceSession:
             mode.  Telemetry composes with the flat path only - combine
             it with ``shard="chips"`` on a multi-chip config and this
             raises (run unsharded for tier attribution).
+        mask: optional (T,) bool - ticks where it is False contribute
+            exactly zero stats and zero currents (padding lanes of a
+            ragged stream).  Mutually exclusive with shard/telemetry.
+        stats0: optional `StepStats` seeding the accumulator carry (only
+            with ``mask``); defaults to zeros.  Chunk-streamed callers
+            thread the returned stats back in to keep accumulation
+            bit-identical to one uninterrupted run.
         returns (currents (T, cores, neurons_per_core), accumulated stats);
         use ``stats.summary(ticks=T)`` for per-tick means.
         """
         spikes = self._check(spikes, 3)
+        if mask is not None:
+            fns = self._masked_fns(shard, telemetry)
+            mask = self._check_mask(mask, spikes, 1)
+            acc0 = StepStats.zeros() if stats0 is None else stats0
+            with obs_trace.span("interface.run", masked=True):
+                spikes = fns["mask_solo"](spikes, mask)
+                return fns["run"](self.params, spikes, acc0)
+        if stats0 is not None:
+            raise ValueError("stats0 is only meaningful with mask")
         fn = self._shard_fn("run", shard)
         if telemetry != "off":
             t_fn = self._telemetry_fn("run", telemetry, sharded=fn is not None)
@@ -158,7 +187,8 @@ class InterfaceSession:
             return self._run(self.params, spikes)
 
     def run_batched(self, spikes, shard: str | None = None,
-                    telemetry: str = "off"
+                    telemetry: str = "off", mask=None,
+                    stats0: StepStats | None = None
                     ) -> tuple[jnp.ndarray, StepStats]:
         """Batched scan: spikes (B, T, cores, neurons_per_core) bool.
 
@@ -167,8 +197,30 @@ class InterfaceSession:
         behaves as in `run` (the batch axis is vmapped over the sharded
         scan); ``telemetry`` as in `run`, with the series leaves gaining
         a leading batch axis (``(B, T)`` / ``(B, T, cores)``).
+
+        ``mask`` (B, T) bool marks the live ticks of each lane: masked
+        ticks contribute zero stats/currents, so ragged tenant streams
+        right-padded to one T stay bit-identical to their solo runs (an
+        all-False lane is a no-op that returns its ``stats0`` row
+        unchanged).  ``stats0`` seeds the per-lane accumulator carry
+        ((B,)-shaped `StepStats` leaves; zeros when omitted) - thread the
+        returned stats back in when chunking one long stream over
+        multiple calls.  Mutually exclusive with shard/telemetry.
         """
         spikes = self._check(spikes, 4)
+        if mask is not None:
+            fns = self._masked_fns(shard, telemetry)
+            mask = self._check_mask(mask, spikes, 2)
+            acc0 = stats0
+            if acc0 is None:
+                b = spikes.shape[0]
+                acc0 = jax.tree.map(
+                    lambda x: jnp.zeros((b,), x.dtype), StepStats.zeros())
+            with obs_trace.span("interface.run_batched", masked=True):
+                spikes = fns["mask"](spikes, mask)
+                return fns["run_batched"](self.params, spikes, acc0)
+        if stats0 is not None:
+            raise ValueError("stats0 is only meaningful with mask")
         fn = self._shard_fn("run_batched", shard)
         if telemetry != "off":
             t_fn = self._telemetry_fn("run_batched", telemetry,
@@ -180,6 +232,71 @@ class InterfaceSession:
                 return fn(spikes)
         with obs_trace.span("interface.run_batched"):
             return self._run_batched(self.params, spikes)
+
+    # ---- masked / ragged streams -----------------------------------------
+
+    def _masked_fns(self, shard: str | None, telemetry: str) -> dict:
+        """The jitted masked-scan family; built lazily once."""
+        if shard is not None or telemetry != "off":
+            raise ValueError(
+                "mask does not compose with shard='chips' or telemetry; "
+                "run the masked scan flat (currents are bit-identical "
+                "across paths)")
+        if self._masked_cache is None:
+            self._masked_cache = self._build_masked()
+        return self._masked_cache
+
+    def _build_masked(self) -> dict:
+        """The plain accumulate scan, with the accumulator as an argument.
+
+        Masking exploits an exact property of the tick: a tick whose
+        spikes are all-False produces exactly-zero `StepStats` and zero
+        currents for every registered arbiter/NoC scheme (asserted in
+        tests/test_serve.py), so a masked tick is erased by
+        ``spikes & mask`` *before* the scan and the scan body stays
+        byte-for-byte the unmasked one - no predication nodes that could
+        perturb XLA's float scheduling.  The accumulator is a scan
+        *argument* (``acc0``) rather than the constant
+        `StepStats.zeros()`, so chunked callers thread it through
+        successive calls and preserve the tick-sequential float
+        accumulation order of one uninterrupted run.
+        """
+        cfg = self.config
+        tables, arb_plan, routing = self.tables, self.arb_plan, self.routing
+        cam_cycle_ns = self.cam_cycle_ns
+
+        def tick(p, spikes_cn):
+            return pipeline.interface_tick(p, spikes_cn, cfg, tables, arb_plan,
+                                           routing=routing,
+                                           cam_cycle_ns=cam_cycle_ns)
+
+        def run(p, spikes_tcn, acc0):
+            def body(acc, s_t):
+                currents, st = tick(p, s_t)
+                return acc.accumulate(st), currents
+            acc, currents = jax.lax.scan(body, acc0, spikes_tcn)
+            return currents, acc
+
+        # Donate the spikes/accumulator buffers on accelerators so the
+        # serving engine's double-buffered transfers reuse device memory;
+        # CPU would only warn (donation unimplemented), so skip it there.
+        donate = () if jax.default_backend() == "cpu" else (1, 2)
+        mask_lane = jax.jit(lambda s, m: s & m[:, None, None])
+        return {"run": jax.jit(run),
+                "run_batched": jax.jit(jax.vmap(run, in_axes=(None, 0, 0)),
+                                       donate_argnums=donate),
+                "mask": jax.jit(jax.vmap(mask_lane)),
+                "mask_solo": mask_lane}
+
+    def _check_mask(self, mask, spikes, ndim: int) -> jnp.ndarray:
+        mask = jnp.asarray(mask)
+        if mask.shape != spikes.shape[:ndim]:
+            raise ValueError(
+                f"mask shape {mask.shape} does not cover the spike stream's "
+                f"leading axes {spikes.shape[:ndim]}")
+        if mask.dtype != jnp.bool_:
+            mask = mask > 0
+        return mask
 
     # ---- in-jit telemetry ------------------------------------------------
 

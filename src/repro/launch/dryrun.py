@@ -42,7 +42,7 @@ from repro.models.config import ModelConfig
 from repro.optim import adamw
 from repro.optim.adamw import AdamWConfig
 from repro.parallel import sharding as shd
-from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.serve.lm_engine import make_decode_step, make_prefill_step
 from repro.train import step as ts
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__),

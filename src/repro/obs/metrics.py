@@ -128,6 +128,31 @@ class Histogram:
             seen += c
         return self.max
 
+    def merge(self, other: "Histogram") -> "Histogram":
+        """New histogram equivalent to pooling both samples.
+
+        Requires identical bucketing: merging is exact at the bucket
+        level, so pooled percentiles match a histogram fed the combined
+        sample stream (within the usual one-bucket resolution).  The
+        serving tier uses this to roll per-tenant latency histograms into
+        fleet-wide percentiles without retaining samples.
+        """
+        shape = (self.lo, self.hi, self.bins_per_decade)
+        if shape != (other.lo, other.hi, other.bins_per_decade):
+            raise ValueError(
+                f"cannot merge histograms with different bucketing: "
+                f"{shape} vs {(other.lo, other.hi, other.bins_per_decade)}"
+            )
+        out = Histogram(
+            self.name or other.name, lo=self.lo, hi=self.hi, bins_per_decade=self.bins_per_decade
+        )
+        out._counts = [a + b for a, b in zip(self._counts, other._counts)]
+        out.count = self.count + other.count
+        out.total = self.total + other.total
+        out.min = min(self.min, other.min)
+        out.max = max(self.max, other.max)
+        return out
+
     def summary(self, qs=(50, 95, 99)) -> dict:
         out = {
             "count": self.count,

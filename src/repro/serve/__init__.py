@@ -1,1 +1,30 @@
-"""serve subsystem."""
+"""`repro.serve`: multi-tenant streaming over the interface fabric.
+
+The serving tier the ROADMAP names: tenants (`TenantSpec`) each bring an
+`InterfaceConfig` and a `repro.traffic` tick stream; the `ServeEngine`
+packs compatible tenants onto shared precompiled `InterfaceSession`s and
+steps each group under a single jit (masked `run_batched` over the lane
+axis), with micro-batched ingest (`IngestQueue`), capacity limits
+(`AdmissionPolicy`), and per-tenant `repro.obs` metrics.
+
+The prefill/decode LM reference loop lives in `repro.serve.lm_engine`.
+"""
+
+from repro.serve.admission import AdmissionController, AdmissionError, AdmissionPolicy
+from repro.serve.engine import ServeEngine, TenantGroup, group_key
+from repro.serve.queue import IngestQueue, TickRequest
+from repro.serve.tenant import TenantSpec, compat_key, default_connectivity
+
+__all__ = [
+    "AdmissionController",
+    "AdmissionError",
+    "AdmissionPolicy",
+    "IngestQueue",
+    "ServeEngine",
+    "TenantGroup",
+    "TenantSpec",
+    "TickRequest",
+    "compat_key",
+    "default_connectivity",
+    "group_key",
+]

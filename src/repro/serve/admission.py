@@ -1,0 +1,83 @@
+"""Admission control: which tenants may enter, and onto which session.
+
+The engine's capacity axes are *groups* (each group owns one precompiled
+`InterfaceSession` - compile time and device tables) and *lanes* (the
+vmapped tenant axis of that session's batched step - device memory and
+per-flush compute).  `AdmissionController` enforces both, plus a
+per-request frame bound so one tenant cannot monopolize a flush.
+
+Rejections raise `AdmissionError` with the exhausted axis spelled out;
+the engine surfaces them unchanged at `register`/`submit` time, before
+any device work happens.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+from repro.serve.tenant import TenantSpec, compat_key
+
+
+class AdmissionError(RuntimeError):
+    """A tenant or request exceeds the configured serving capacity."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """Static capacity limits of one engine.
+
+    max_tenants_per_group:  lanes per shared session (the vmapped batch
+                            axis; lane count changes recompile the group).
+    max_groups:             distinct (config, connectivity) sessions the
+                            engine will precompile.
+    max_frames_per_request: largest single `submit` chunk, in tick frames.
+    """
+
+    max_tenants_per_group: int = 32
+    max_groups: int = 4
+    max_frames_per_request: int = 4096
+
+    def __post_init__(self):
+        for field in dataclasses.fields(self):
+            if getattr(self, field.name) < 1:
+                raise ValueError(f"{field.name} must be >= 1, got {getattr(self, field.name)}")
+
+
+class AdmissionController:
+    """Stateless checks over the engine's group occupancy."""
+
+    def __init__(self, policy: AdmissionPolicy | None = None):
+        self.policy = policy or AdmissionPolicy()
+
+    def admit(self, spec: TenantSpec, occupancy: Mapping[tuple, int]) -> tuple:
+        """Validate `spec` against current occupancy; return its group key.
+
+        occupancy: group key -> current tenant count.  Raises
+        `AdmissionError` when the target group is full, or when the spec
+        needs a new group and the group budget is spent.
+        """
+        key = compat_key(spec)
+        if key in occupancy:
+            if occupancy[key] >= self.policy.max_tenants_per_group:
+                raise AdmissionError(
+                    f"tenant {spec.name!r} rejected: group for {spec.scenario!r}-compatible "
+                    f"config is at capacity ({self.policy.max_tenants_per_group} lanes)"
+                )
+        elif len(occupancy) >= self.policy.max_groups:
+            raise AdmissionError(
+                f"tenant {spec.name!r} rejected: would need a new session group but the "
+                f"engine already serves {len(occupancy)} "
+                f"(max_groups={self.policy.max_groups}); reuse an existing "
+                f"(config, connectivity_seed) to share a session"
+            )
+        return key
+
+    def validate_request(self, tenant: str, ticks: int) -> None:
+        """Bound one submit chunk (called before the queue accepts it)."""
+        if ticks > self.policy.max_frames_per_request:
+            raise AdmissionError(
+                f"tenant {tenant!r} submitted {ticks} tick frames in one request "
+                f"(max_frames_per_request={self.policy.max_frames_per_request}); "
+                f"split the stream into smaller chunks"
+            )

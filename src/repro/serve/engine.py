@@ -1,80 +1,491 @@
-"""Serving engine: prefill + decode steps and a batched request loop.
+"""`repro.serve.engine`: multi-tenant streaming over the interface fabric.
 
-`make_prefill_step` / `make_decode_step` build the jit-able step functions
-lowered by the dry-run (`decode_32k` / `long_500k` cells lower
-`decode_step`, i.e. one new token against a seq_len cache).
+The ROADMAP's serving tier: many independent tenants - each an
+`InterfaceConfig` plus a `repro.traffic` tick stream (`TenantSpec`) -
+served concurrently through precompiled `InterfaceSession`s instead of
+one offline ``session.run`` at a time.  The moving parts:
 
-`ServeEngine` is the runnable single-host reference loop used by
-examples/serve_lm.py: batches requests, prefills each, then decodes all
-lanes in lock-step with per-lane stop handling - the minimal continuous-
-batching pattern.
+  admission   `AdmissionController` bounds groups/lanes/request size and
+              assigns each tenant a session-compatibility key.
+  grouping    tenants sharing (config, connectivity) become *lanes* of a
+              `TenantGroup`, which owns one precompiled session; the
+              whole group steps under a single jit via the masked
+              ``run_batched`` (vmap over the lane axis).
+  queueing    per-group `IngestQueue` with size-/deadline-triggered
+              micro-batching (`repro.serve.queue`).
+  batching    flushed requests pack into fixed-shape (lanes, flush_ticks)
+              chunks - ragged/short streams right-padded with an explicit
+              mask, so every lane stays *bit-identical* to its solo
+              ``session.run`` (currents and stats; the per-lane
+              accumulator is threaded through chunks as the scan carry).
+  transfer    double-buffered `jax.device_put`: chunk t+1's host->device
+              copy is issued while chunk t computes (with buffer donation
+              on accelerators, skipped on CPU).
+  metrics     per-tenant `repro.obs.metrics` histograms/counters
+              (events/sec, tick-latency p50/p99, queue depth), fleet-wide
+              percentiles via `Histogram.merge`, JSONL sink + records
+              shaped for ``python -m repro.obs.report``.
+
+Minimal use:
+
+    from repro.serve import ServeEngine, TenantSpec
+
+    engine = ServeEngine(flush_ticks=16)
+    engine.register(TenantSpec("t0", cfg, scenario="sparse_poisson"))
+    engine.register(TenantSpec("t1", cfg, scenario="hotspot_core"))
+    engine.submit_scenario("t0", ticks=64)   # or engine.submit(name, frames)
+    engine.submit_scenario("t1", ticks=48)
+    engine.drain()
+    records = engine.serve_report()
+
+The prefill/decode LM engine that previously lived in this module moved
+to `repro.serve.lm_engine`.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import time
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.models import lm
-from repro.models.blocks import LOCAL, ShardCtx
-from repro.models.config import ModelConfig
-
-
-def make_prefill_step(cfg: ModelConfig, ctx: ShardCtx = LOCAL,
-                      remat: bool = True):
-    def prefill_step(params, batch, cache):
-        out = lm.forward(params, batch, cfg, mode="prefill", cache=cache,
-                         ctx=ctx, remat=remat)
-        # next-token logits from the last position
-        return out["logits"][:, -1], out["cache"]
-    return prefill_step
-
-
-def make_decode_step(cfg: ModelConfig, ctx: ShardCtx = LOCAL):
-    def decode_step(params, cache, tokens, cache_len):
-        """tokens (B, 1) -> (logits (B, V), new cache)."""
-        out = lm.forward(params, {"tokens": tokens}, cfg, mode="decode",
-                         cache=cache, cache_len=cache_len, ctx=ctx,
-                         remat=False)
-        return out["logits"][:, -1], out["cache"]
-    return decode_step
+from repro.interface import Interface
+from repro.interface.stats import StepStats
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.serve.admission import AdmissionController, AdmissionPolicy
+from repro.serve.queue import IngestQueue
+from repro.serve.tenant import TenantSpec, default_connectivity
+from repro.serve.tenant import compat_key as _compat_key
 
 
 @dataclasses.dataclass
+class _Chunk:
+    """One fixed-shape batched step: left-aligned frames plus lane mask."""
+
+    spikes: np.ndarray  # (lanes, flush_ticks, cores, neurons_per_core) bool
+    mask: np.ndarray  # (lanes, flush_ticks) bool
+    took: np.ndarray  # (lanes,) int: live ticks packed into each lane
+
+
+class TenantGroup:
+    """Tenants sharing one precompiled session, stepped as vmap lanes."""
+
+    def __init__(self, key, config, params, queue: IngestQueue):
+        self.key = key
+        self.config = config
+        self.params = params
+        self.queue = queue
+        with obs_trace.span("serve.group_compile", cores=config.cores):
+            self.session = Interface(config).compile(params)
+        self.specs: dict = {}  # name -> TenantSpec
+        self.lanes: dict = {}  # name -> lane index
+        self._backlog: dict = {}  # name -> deque of host frame arrays
+        self._acc = None  # per-lane StepStats carry ((lanes,) leaves)
+
+    def add(self, spec: TenantSpec) -> int:
+        lane = len(self.lanes)
+        self.specs[spec.name] = spec
+        self.lanes[spec.name] = lane
+        self._backlog[spec.name] = collections.deque()
+        if self._acc is not None:
+            # new lane: its accumulator row starts at zero
+            self._acc = self._commit(
+                jax.tree.map(
+                    lambda x: np.concatenate([np.asarray(x), np.zeros((1,), x.dtype)]),
+                    self._acc,
+                )
+            )
+        return lane
+
+    @staticmethod
+    def _commit(tree):
+        """Place host-built accumulators on the device, committed.
+
+        Uncommitted numpy inputs and committed jit outputs hash to
+        different fast-path cache entries; committing here keeps the
+        masked batched step on ONE cache entry for the engine's lifetime
+        (the stability the soak test asserts).
+        """
+        dev = jax.devices()[0]
+        return jax.tree.map(lambda x: jax.device_put(np.asarray(x), dev), tree)
+
+    def lane_names(self) -> list:
+        return sorted(self.lanes, key=self.lanes.get)
+
+    def lane_stats(self):
+        """Per-lane cumulative `StepStats` carry ((lanes,) leaves)."""
+        if self._acc is None:
+            b = len(self.lanes)
+            self._acc = self._commit(
+                jax.tree.map(lambda x: np.zeros((b,), x.dtype), StepStats.zeros())
+            )
+        return self._acc
+
+    def stage(self, requests) -> None:
+        """Append flushed requests to the per-lane host backlog."""
+        cfg = self.config
+        for req in requests:
+            frames = np.asarray(req.frames)
+            if frames.shape[1:] != (cfg.cores, cfg.neurons_per_core):
+                raise ValueError(
+                    f"tenant {req.tenant!r} frames shaped {frames.shape[1:]} do not match the "
+                    f"group fabric ({cfg.cores}, {cfg.neurons_per_core})"
+                )
+            self._backlog[req.tenant].append(frames.astype(bool))
+
+    def backlog_ticks(self) -> int:
+        return sum(f.shape[0] for q in self._backlog.values() for f in q)
+
+    def take_chunk(self, flush_ticks: int) -> _Chunk | None:
+        """Pack up to ``flush_ticks`` backlog ticks per lane, left-aligned.
+
+        Shapes are fixed at (lanes, flush_ticks, ...) regardless of how
+        much backlog exists, so the jitted batched step compiles once per
+        lane count - partial chunks ride the mask, not a new shape.
+        """
+        b = len(self.lanes)
+        cfg = self.config
+        took = np.zeros((b,), np.int64)
+        spikes = np.zeros((b, flush_ticks, cfg.cores, cfg.neurons_per_core), bool)
+        mask = np.zeros((b, flush_ticks), bool)
+        for name, lane in self.lanes.items():
+            queue = self._backlog[name]
+            t = 0
+            while queue and t < flush_ticks:
+                frames = queue.popleft()
+                take = min(frames.shape[0], flush_ticks - t)
+                spikes[lane, t : t + take] = frames[:take]
+                t += take
+                if take < frames.shape[0]:
+                    queue.appendleft(frames[take:])
+            mask[lane, :t] = True
+            took[lane] = t
+        if not took.any():
+            return None
+        return _Chunk(spikes=spikes, mask=mask, took=took)
+
+
 class ServeEngine:
-    """Minimal batched-serving loop (single host, greedy or sampled)."""
+    """Multi-tenant streaming engine over precompiled interface sessions.
 
-    cfg: ModelConfig
-    params: dict
-    max_len: int = 256
-    temperature: float = 0.0
+    flush_ticks:       time extent of one batched step; also the ingest
+                       queue's size trigger (in tick frames).  Fixed, so
+                       chunk shapes - and the jit cache - stay stable.
+    flush_deadline_s:  max age of the oldest queued request before a
+                       partial batch flushes anyway (0 = always ready).
+    policy:            `AdmissionPolicy` capacity limits.
+    registry:          `MetricsRegistry` receiving per-tenant counters and
+                       histograms (a private one by default).
+    sink:              optional `JsonlSink`; `emit_report()` appends one
+                       record per tenant plus the fleet record.
+    keep_currents:     retain every served tick's currents per tenant
+                       (tests/benchmarks; unbounded memory under real
+                       sustained load, so off by default).
+    clock:             injectable monotonic clock (deadline tests).
+    """
 
-    def __post_init__(self):
-        self._prefill = jax.jit(make_prefill_step(self.cfg, remat=False))
-        self._decode = jax.jit(make_decode_step(self.cfg))
+    def __init__(
+        self,
+        *,
+        flush_ticks: int = 16,
+        flush_deadline_s: float = 0.005,
+        policy: AdmissionPolicy | None = None,
+        registry: obs_metrics.MetricsRegistry | None = None,
+        sink: obs_metrics.JsonlSink | None = None,
+        keep_currents: bool = False,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if flush_ticks < 1:
+            raise ValueError(f"flush_ticks must be >= 1, got {flush_ticks}")
+        self.flush_ticks = flush_ticks
+        self.flush_deadline_s = flush_deadline_s
+        self.admission = AdmissionController(policy)
+        self.registry = registry or obs_metrics.MetricsRegistry()
+        self.sink = sink
+        self.keep_currents = keep_currents
+        self.clock = clock
+        self.groups: dict = {}  # compat key -> TenantGroup
+        self._tenant_group: dict = {}  # tenant name -> TenantGroup
+        self._rounds: dict = {}  # tenant name -> scenario round counter
+        self._served: dict = {}  # tenant name -> ticks served
+        self._events_seen: dict = {}  # tenant name -> cumulative events read
+        self._currents: dict = {}  # tenant name -> list of (t_i, C, N) arrays
+        self._busy_s = 0.0
+        self._ticks = 0
+        self._events = 0.0
 
-    def generate(self, prompts: jnp.ndarray, num_steps: int,
-                 eos_id: int = -1, key=None):
-        """prompts (B, Tp) int32 -> (B, num_steps) generated tokens."""
-        b, tp = prompts.shape
-        cache = lm.init_cache(self.cfg, b, self.max_len)
-        logits, cache = self._prefill(self.params, {"tokens": prompts}, cache)
-        cache_len = jnp.int32(tp)
-        toks = []
-        done = jnp.zeros((b,), bool)
-        for i in range(num_steps):
-            if self.temperature > 0.0 and key is not None:
-                key, sub = jax.random.split(key)
-                nxt = jax.random.categorical(sub, logits / self.temperature)
-            else:
-                nxt = jnp.argmax(logits, axis=-1)
-            nxt = nxt.astype(jnp.int32)
-            nxt = jnp.where(done, 0, nxt)
-            done = done | (nxt == eos_id)
-            toks.append(nxt)
-            logits, cache = self._decode(self.params, cache, nxt[:, None],
-                                         cache_len)
-            cache_len = cache_len + 1
-        return jnp.stack(toks, axis=1)
+    # ---- registration / ingest -------------------------------------------
+
+    def register(self, spec: TenantSpec, params=None) -> TenantSpec:
+        """Admit a tenant; compile its group's session on first use.
+
+        params: optional explicit fabric connectivity for a *new* group
+        (defaults to `default_connectivity(spec.config,
+        spec.connectivity_seed)`).  Ignored for an existing group - the
+        compatibility key pins connectivity to the seed, so passing a
+        conflicting params object for an occupied key is an error.
+        """
+        if spec.name in self._tenant_group:
+            raise ValueError(f"tenant {spec.name!r} is already registered")
+        occupancy = {k: len(g.lanes) for k, g in self.groups.items()}
+        key = self.admission.admit(spec, occupancy)
+        group = self.groups.get(key)
+        if group is None:
+            if params is None:
+                params = default_connectivity(spec.config, spec.connectivity_seed)
+            queue = IngestQueue(
+                flush_frames=self.flush_ticks,
+                flush_deadline_s=self.flush_deadline_s,
+                clock=self.clock,
+            )
+            group = TenantGroup(key, spec.config, params, queue)
+            self.groups[key] = group
+        elif params is not None:
+            raise ValueError(
+                f"tenant {spec.name!r}: explicit params conflict with the already-compiled "
+                f"group for this (config, connectivity_seed); omit params to join it"
+            )
+        group.add(spec)
+        self._tenant_group[spec.name] = group
+        self._rounds[spec.name] = 0
+        self._served[spec.name] = 0
+        self._events_seen[spec.name] = 0.0
+        self._currents[spec.name] = []
+        return spec
+
+    def submit(self, tenant: str, frames) -> None:
+        """Enqueue (ticks, cores, neurons_per_core) bool frames."""
+        group = self._group_of(tenant)
+        frames = np.asarray(frames)
+        cfg = group.config
+        if frames.ndim != 3 or frames.shape[1:] != (cfg.cores, cfg.neurons_per_core):
+            raise ValueError(
+                f"tenant {tenant!r}: frames shaped {frames.shape} do not match the group "
+                f"fabric (ticks, {cfg.cores}, {cfg.neurons_per_core})"
+            )
+        self.admission.validate_request(tenant, int(frames.shape[0]))
+        group.queue.submit(tenant, frames)
+
+    def submit_scenario(self, tenant: str, ticks: int) -> None:
+        """Generate and enqueue one round of the tenant's traffic scenario."""
+        spec = self._group_of(tenant).specs[tenant]
+        frames = np.asarray(spec.stream(ticks, round=self._rounds[tenant]))
+        self._rounds[tenant] += 1
+        self.submit(tenant, frames)
+
+    def _group_of(self, tenant: str) -> TenantGroup:
+        try:
+            return self._tenant_group[tenant]
+        except KeyError:
+            raise KeyError(
+                f"unknown tenant {tenant!r}; registered: "
+                f"{', '.join(sorted(self._tenant_group)) or '(none)'}"
+            ) from None
+
+    # ---- serving loop -----------------------------------------------------
+
+    def pump(self, force: bool = False) -> int:
+        """One engine iteration: flush ready queues, step their groups.
+
+        Returns the number of live ticks served.  ``force`` flushes
+        regardless of the micro-batch triggers (drain semantics).
+        """
+        ticks_done = 0
+        depth_hist = self.registry.histogram("serve.queue_depth")
+        for group in self.groups.values():
+            depth_hist.add(group.queue.depth())
+            group.stage(group.queue.poll(force=force))
+            chunks = []
+            while True:
+                chunk = group.take_chunk(self.flush_ticks)
+                if chunk is None:
+                    break
+                chunks.append(chunk)
+            ticks_done += self._execute(group, chunks)
+        return ticks_done
+
+    def drain(self) -> int:
+        """Serve until every queue and backlog is empty; returns ticks."""
+        total = 0
+        while True:
+            served = self.pump(force=True)
+            total += served
+            if served == 0 and not any(
+                g.queue.depth() or g.backlog_ticks() for g in self.groups.values()
+            ):
+                return total
+
+    def _execute(self, group: TenantGroup, chunks: list) -> int:
+        """Step one group through its chunks with double-buffered transfer.
+
+        Chunk t+1's `jax.device_put` is issued after chunk t's batched
+        step is dispatched but before its results are blocked on, so the
+        host->device copy overlaps device compute; on accelerators the
+        masked jit additionally donates the spike/accumulator buffers.
+        """
+        if not chunks:
+            return 0
+        ticks_done = 0
+        staged = self._transfer(chunks[0])
+        for i, chunk in enumerate(chunks):
+            spikes, mask = staged
+            t0 = self.clock()
+            with obs_trace.span("serve.step", lanes=len(group.lanes)):
+                currents, acc = group.session.run_batched(
+                    spikes, mask=mask, stats0=group.lane_stats()
+                )
+                if i + 1 < len(chunks):
+                    staged = self._transfer(chunks[i + 1])
+                jax.block_until_ready((currents, acc))
+            wall_s = self.clock() - t0
+            group._acc = acc
+            self._record(group, chunk, currents, acc, wall_s)
+            ticks_done += int(chunk.took.sum())
+        return ticks_done
+
+    def _transfer(self, chunk: _Chunk):
+        with obs_trace.span("serve.device_transfer"):
+            return jax.device_put((chunk.spikes, chunk.mask))
+
+    # ---- metrics ----------------------------------------------------------
+
+    def _record(self, group, chunk: _Chunk, currents, acc, wall_s: float) -> None:
+        tick_ms = wall_s * 1e3 / self.flush_ticks
+        fleet_events = 0.0
+        events_now = np.asarray(acc.events)
+        for name, lane in group.lanes.items():
+            took = int(chunk.took[lane])
+            if took == 0:
+                continue
+            self._served[name] += took
+            delta = float(events_now[lane]) - self._events_seen[name]
+            self._events_seen[name] = float(events_now[lane])
+            fleet_events += delta
+            self.registry.counter(f"tenant.{name}.events").inc(delta)
+            self.registry.histogram(f"tenant.{name}.tick_ms").add(tick_ms)
+            if self.keep_currents:
+                self._currents[name].append(np.asarray(currents[lane, :took]))
+        self.registry.counter("serve.flushes").inc()
+        self.registry.counter("serve.ticks").inc(int(chunk.took.sum()))
+        self._busy_s += wall_s
+        self._ticks += int(chunk.took.sum())
+        self._events += fleet_events
+
+    def reset_metrics(self) -> None:
+        """Zero served-work counters/histograms (warmup-then-measure).
+
+        Benchmarks warm the jit caches with a throwaway round, then reset
+        so compile time never lands in the latency percentiles.  The
+        per-lane device accumulators are NOT reset - they carry the
+        bit-identity contract - only the host-side bookkeeping is.
+        """
+        self.registry.counters.clear()
+        self.registry.histograms.clear()
+        for name in self._served:
+            self._served[name] = 0
+            self._currents[name].clear()
+        self._busy_s = 0.0
+        self._ticks = 0
+        self._events = 0.0
+
+    def queue_depth(self) -> int:
+        """Requests currently queued across all groups."""
+        return sum(g.queue.depth() for g in self.groups.values())
+
+    def ticks_served(self, tenant: str | None = None) -> int:
+        if tenant is not None:
+            return self._served[tenant]
+        return self._ticks
+
+    def events_per_sec(self) -> float:
+        """Sustained routed events/sec over engine step wall clock."""
+        return self._events / max(self._busy_s, 1e-12)
+
+    def currents(self, tenant: str) -> np.ndarray:
+        """(ticks_served, cores, neurons_per_core) currents (keep_currents)."""
+        if not self.keep_currents:
+            raise ValueError("construct ServeEngine(keep_currents=True) to retain currents")
+        cfg = self._group_of(tenant).config
+        chunks = self._currents[tenant]
+        if not chunks:
+            return np.zeros((0, cfg.cores, cfg.neurons_per_core), np.float32)
+        return np.concatenate(chunks, axis=0)
+
+    def tenant_stats(self, tenant: str) -> StepStats:
+        """Cumulative `StepStats` for one tenant (scalar leaves)."""
+        group = self._group_of(tenant)
+        lane = group.lanes[tenant]
+        return jax.tree.map(lambda x: np.asarray(x)[lane], group.lane_stats())
+
+    def serve_report(self) -> list:
+        """Per-tenant records plus one fleet record, report-CLI shaped.
+
+        Tenant records carry ``stats_per_tick`` (so ``python -m
+        repro.obs.report`` renders the per-tier breakdown per tenant) and
+        tick-latency percentiles; the fleet record merges every tenant's
+        latency histogram (`Histogram.merge`) and reports sustained
+        ``events_per_sec``.
+        """
+        records = []
+        fleet_hist = None
+        for name in sorted(self._tenant_group):
+            group = self._tenant_group[name]
+            spec = group.specs[name]
+            served = self._served[name]
+            rec = {
+                "tenant": name,
+                "scenario": spec.scenario,
+                "cores": group.config.cores,
+                "neurons_per_core": group.config.neurons_per_core,
+                "ticks": served,
+                "events": self._events_seen[name],
+                "queue_depth": group.queue.depth(),
+            }
+            hist = self.registry.histograms.get(f"tenant.{name}.tick_ms")
+            if hist is not None and hist.count:
+                summary = hist.summary()
+                rec.update(
+                    tick_ms_p50=summary["p50"],
+                    tick_ms_p95=summary["p95"],
+                    tick_ms_p99=summary["p99"],
+                )
+                fleet_hist = hist if fleet_hist is None else fleet_hist.merge(hist)
+            if served:
+                stats = self.tenant_stats(name)._asdict()
+                rec["stats_per_tick"] = {k: float(v) / served for k, v in stats.items()}
+            records.append(rec)
+        fleet = {
+            "tenant": "__fleet__",
+            "tenants": len(self._tenant_group),
+            "groups": len(self.groups),
+            "ticks": self._ticks,
+            "events": self._events,
+            "events_per_sec": self.events_per_sec(),
+            "busy_s": self._busy_s,
+        }
+        if fleet_hist is not None and fleet_hist.count:
+            summary = fleet_hist.summary()
+            fleet.update(
+                tick_ms_p50=summary["p50"],
+                tick_ms_p95=summary["p95"],
+                tick_ms_p99=summary["p99"],
+            )
+        records.append(fleet)
+        return records
+
+    def emit_report(self) -> list:
+        """`serve_report()`, appended to the JSONL sink when one is set."""
+        records = self.serve_report()
+        if self.sink is not None:
+            for rec in records:
+                self.sink.write(rec)
+        return records
+
+
+def group_key(spec: TenantSpec) -> tuple:
+    """Public alias of the tenant session-compatibility key."""
+    return _compat_key(spec)

@@ -1,0 +1,80 @@
+"""Serving engine: prefill + decode steps and a batched request loop.
+
+`make_prefill_step` / `make_decode_step` build the jit-able step functions
+lowered by the dry-run (`decode_32k` / `long_500k` cells lower
+`decode_step`, i.e. one new token against a seq_len cache).
+
+`ServeEngine` is the runnable single-host reference loop used by
+examples/serve_lm.py: batches requests, prefills each, then decodes all
+lanes in lock-step with per-lane stop handling - the minimal continuous-
+batching pattern.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.blocks import LOCAL, ShardCtx
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: ShardCtx = LOCAL,
+                      remat: bool = True):
+    def prefill_step(params, batch, cache):
+        out = lm.forward(params, batch, cfg, mode="prefill", cache=cache,
+                         ctx=ctx, remat=remat)
+        # next-token logits from the last position
+        return out["logits"][:, -1], out["cache"]
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, ctx: ShardCtx = LOCAL):
+    def decode_step(params, cache, tokens, cache_len):
+        """tokens (B, 1) -> (logits (B, V), new cache)."""
+        out = lm.forward(params, {"tokens": tokens}, cfg, mode="decode",
+                         cache=cache, cache_len=cache_len, ctx=ctx,
+                         remat=False)
+        return out["logits"][:, -1], out["cache"]
+    return decode_step
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    """Minimal batched-serving loop (single host, greedy or sampled)."""
+
+    cfg: ModelConfig
+    params: dict
+    max_len: int = 256
+    temperature: float = 0.0
+
+    def __post_init__(self):
+        self._prefill = jax.jit(make_prefill_step(self.cfg, remat=False))
+        self._decode = jax.jit(make_decode_step(self.cfg))
+
+    def generate(self, prompts: jnp.ndarray, num_steps: int,
+                 eos_id: int = -1, key=None):
+        """prompts (B, Tp) int32 -> (B, num_steps) generated tokens."""
+        b, tp = prompts.shape
+        cache = lm.init_cache(self.cfg, b, self.max_len)
+        logits, cache = self._prefill(self.params, {"tokens": prompts}, cache)
+        cache_len = jnp.int32(tp)
+        toks = []
+        done = jnp.zeros((b,), bool)
+        for i in range(num_steps):
+            if self.temperature > 0.0 and key is not None:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits / self.temperature)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            nxt = nxt.astype(jnp.int32)
+            nxt = jnp.where(done, 0, nxt)
+            done = done | (nxt == eos_id)
+            toks.append(nxt)
+            logits, cache = self._decode(self.params, cache, nxt[:, None],
+                                         cache_len)
+            cache_len = cache_len + 1
+        return jnp.stack(toks, axis=1)

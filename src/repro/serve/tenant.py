@@ -1,0 +1,102 @@
+"""Tenant specifications for the fabric serving tier.
+
+A *tenant* is one independent user of the interface fabric: it owns an
+`InterfaceConfig`, a `repro.traffic` scenario (its tick-stream workload),
+and a seed.  Tenants do not own a compiled session - the engine packs
+*compatible* tenants (same fabric configuration and connectivity, see
+`compat_key`) onto one precompiled `InterfaceSession` and steps them as
+lanes of a single masked `run_batched` call, the software analogue of the
+DYNAPs fabric multiplexing many cores over one shared interface.
+
+The spec is deliberately declarative (name + config + scenario + seeds):
+everything heavy - connectivity, tables, jit - lives with the group, so
+registering a tenant on an existing group is cheap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+
+import repro.core  # noqa: F401  (initialize core first: breaks the config<->core cycle)
+from repro import traffic
+from repro.interface.config import InterfaceConfig, as_interface_config
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant: a fabric config plus the traffic it will stream.
+
+    name:               unique tenant id (the metrics/report label).
+    config:             `InterfaceConfig` (legacy `FabricConfig` accepted
+                        and lifted at construction).
+    scenario:           registered `repro.traffic` scenario driving this
+                        tenant's tick stream.
+    scenario_params:    overrides merged into the scenario's defaults.
+    seed:               tenant-private PRNG seed for the tick stream.
+    connectivity_seed:  seed of the shared fabric connectivity; part of
+                        the compatibility key - tenants only share a
+                        session when they share (config, connectivity).
+    """
+
+    name: str
+    config: InterfaceConfig
+    scenario: str = "sparse_poisson"
+    scenario_params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    seed: int = 0
+    connectivity_seed: int = 0
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("tenant name must be non-empty")
+        object.__setattr__(self, "config", as_interface_config(self.config))
+        # fail at registration, not first flush, on unknown scenarios/params
+        spec = traffic.get_scenario(self.scenario)
+        unknown = sorted(set(self.scenario_params) - set(spec.defaults))
+        if unknown:
+            raise ValueError(
+                f"tenant {self.name!r}: unknown scenario parameter(s) "
+                f"{', '.join(unknown)} for {self.scenario!r}; valid: "
+                f"{', '.join(sorted(spec.defaults))}"
+            )
+
+    def stream(self, ticks: int, round: int = 0):
+        """(ticks, cores, neurons_per_core) bool tick stream for one round.
+
+        Successive ``round`` values fold into the tenant seed, so a tenant
+        streaming in chunks draws fresh (but deterministic) traffic each
+        round instead of replaying the same frames.
+        """
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), round)
+        return traffic.generate(
+            self.scenario, key, ticks, self.config, **dict(self.scenario_params)
+        )
+
+    def expected_rate(self) -> float:
+        """Analytic mean spike probability of this tenant's stream."""
+        return traffic.expected_rate(
+            self.scenario,
+            self.config.cores,
+            self.config.neurons_per_core,
+            **dict(self.scenario_params),
+        )
+
+
+def compat_key(spec: TenantSpec) -> tuple:
+    """Hashable session-compatibility key.
+
+    Tenants mapping to the same key are guaranteed steppable as lanes of
+    one `InterfaceSession.run_batched` call: the session binds (config,
+    connectivity), and both are pinned here.  Scenario/seed stay out - a
+    group legitimately mixes workloads.
+    """
+    return (spec.config, spec.connectivity_seed)
+
+
+def default_connectivity(config: InterfaceConfig, connectivity_seed: int):
+    """The deterministic shared connectivity a group compiles against."""
+    from repro.interface.types import random_connectivity
+
+    return random_connectivity(jax.random.PRNGKey(connectivity_seed), config)

@@ -31,6 +31,7 @@ from repro.obs import metrics as obs_metrics
 from repro.obs import report as obs_report
 from repro.obs import telemetry as obs_telemetry
 from repro.obs import trace as obs_trace
+from tests._hypothesis_compat import given, settings, strategies as st
 from tests.conformance.paths import ARBITER_SCHEMES, EXACT_FIELDS, GRID, NOC_SCHEMES, small_config
 
 REL = 1e-6
@@ -294,6 +295,49 @@ def test_histogram_edge_cases():
         hist.percentile(-1)
     with pytest.raises(ValueError, match="lo"):
         obs_metrics.Histogram("bad", lo=1.0, hi=0.5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(st.floats(1e-4, 1e4), min_size=1, max_size=64),
+    st.lists(st.floats(1e-4, 1e4), min_size=0, max_size=64),
+)
+def test_histogram_merge_matches_pooled_sample(a, b):
+    """merge(h1, h2) == the histogram fed both sample streams.
+
+    Bucket counts, count, min, max (and therefore every percentile, which
+    is a pure function of those) must match the pooled histogram exactly;
+    totals to float tolerance (summation order legitimately differs).
+    The serving tier relies on this to roll per-tenant latency histograms
+    into fleet percentiles without retaining samples.
+    """
+    h1, h2, pooled = (obs_metrics.Histogram(n) for n in ("a", "b", "pooled"))
+    for v in a:
+        h1.add(v)
+        pooled.add(v)
+    for v in b:
+        h2.add(v)
+        pooled.add(v)
+    merged = h1.merge(h2)
+    assert merged._counts == pooled._counts
+    assert merged.count == pooled.count == len(a) + len(b)
+    assert merged.min == pooled.min and merged.max == pooled.max
+    for q in (0, 50, 95, 99, 100):
+        assert merged.percentile(q) == pooled.percentile(q)
+    assert merged.mean == pytest.approx(pooled.mean, rel=1e-12)
+    # originals are untouched
+    assert h1.count == len(a) and h2.count == len(b)
+
+
+def test_histogram_merge_rejects_mismatched_bucketing():
+    base = obs_metrics.Histogram("base")
+    for other in (
+        obs_metrics.Histogram("lo", lo=1e-3),
+        obs_metrics.Histogram("hi", hi=1e3),
+        obs_metrics.Histogram("bins", bins_per_decade=32),
+    ):
+        with pytest.raises(ValueError, match="bucketing"):
+            base.merge(other)
 
 
 def test_counter_registry_and_snapshot():

@@ -1,0 +1,307 @@
+"""Serving tier (`repro.serve`) + masked/ragged session batching.
+
+The contract under test, bottom layer first:
+
+* ``InterfaceSession.run_batched(spikes, mask=...)``: every masked lane's
+  currents AND accumulated `StepStats` are BIT-IDENTICAL to a solo
+  ``session.run`` over just its live ticks - sampled across the full
+  5-arbiter x 3-NoC conformance grid, ragged lengths included, with an
+  all-padding lane staying exactly zero.
+* ``stats0`` threads the accumulator through chunked calls: a stream
+  served in chunks accumulates bit-identically to one uninterrupted run.
+* `IngestQueue` flushes on the size trigger, the deadline trigger
+  (injectable clock), or ``force`` - and not before.
+* `AdmissionController` bounds lanes/groups/request size with
+  `AdmissionError`, before any device work.
+* `ServeEngine` end-to-end: mixed-scenario tenants on one shared session
+  serve bit-identically to their solo runs, report records carry the
+  percentile + ``stats_per_tick`` fields the report CLI renders, and
+  incompatible configs land on separate groups.
+* The LM reference loop still imports from `repro.serve.lm_engine`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fabric
+from repro.interface import Interface, StepStats
+from repro.serve import (
+    AdmissionController,
+    AdmissionError,
+    AdmissionPolicy,
+    IngestQueue,
+    ServeEngine,
+    TenantSpec,
+    compat_key,
+    default_connectivity,
+)
+from tests.conformance.paths import GRID, small_config
+
+TICKS = 6
+
+
+def _session(cfg, seed=0):
+    params = fabric.random_connectivity(jax.random.PRNGKey(seed), cfg)
+    return Interface(cfg).compile(params)
+
+
+def _spikes(cfg, ticks=TICKS, seed=3, lead=()):
+    shape = lead + (ticks, cfg.cores, cfg.neurons_per_core)
+    return jax.random.bernoulli(jax.random.PRNGKey(seed), 0.25, shape)
+
+
+def _assert_stats_equal(a: StepStats, b: StepStats, label: str) -> None:
+    for field in StepStats._fields:
+        va, vb = np.asarray(getattr(a, field)), np.asarray(getattr(b, field))
+        assert np.array_equal(va, vb), f"{label}: {field} {va} != {vb}"
+
+
+# ---- masked / ragged batched stepping --------------------------------------
+
+
+@pytest.mark.parametrize("arb_scheme,noc_scheme", GRID)
+def test_masked_lanes_bit_identical_to_solo_across_grid(arb_scheme, noc_scheme):
+    """Ragged lanes == solo runs, on every arbiter x NoC path."""
+    cfg = small_config(arb_scheme, noc_scheme)
+    session = _session(cfg)
+    lengths = (TICKS, TICKS // 2, 0)  # full, ragged, all-padding
+    spikes = _spikes(cfg, lead=(len(lengths),))
+    mask = np.zeros((len(lengths), TICKS), bool)
+    for lane, t in enumerate(lengths):
+        mask[lane, :t] = True
+    currents, acc = session.run_batched(spikes, mask=jnp.asarray(mask))
+    for lane, t in enumerate(lengths):
+        label = f"{arb_scheme}/{noc_scheme} lane{lane} t={t}"
+        if t == 0:
+            _assert_stats_equal(
+                jax.tree.map(lambda x: x[lane], acc), StepStats.zeros(), label
+            )
+            assert not np.asarray(currents[lane]).any(), f"{label}: currents leaked"
+            continue
+        cur_solo, acc_solo = session.run(spikes[lane, :t])
+        assert np.array_equal(
+            np.asarray(currents[lane, :t]), np.asarray(cur_solo)
+        ), f"{label}: currents differ"
+        _assert_stats_equal(jax.tree.map(lambda x: x[lane], acc), acc_solo, label)
+
+
+def test_masked_solo_run_matches_truncated():
+    cfg = small_config("binary_tree", "multicast_tree")
+    session = _session(cfg)
+    spikes = _spikes(cfg)
+    mask = jnp.arange(TICKS) < 4
+    cur_m, acc_m = session.run(spikes, mask=mask)
+    cur_t, acc_t = session.run(spikes[:4])
+    assert np.array_equal(np.asarray(cur_m[:4]), np.asarray(cur_t))
+    _assert_stats_equal(acc_m, acc_t, "masked solo vs truncated")
+
+
+def test_stats0_carry_chunked_equals_one_shot():
+    """Chunk-streamed serving accumulates bit-identically to one run."""
+    cfg = small_config("greedy_tree", "unicast")
+    session = _session(cfg)
+    spikes = _spikes(cfg, ticks=8, lead=(2,))
+    full_mask = jnp.ones((2, 8), bool)
+    cur_full, acc_full = session.run_batched(spikes, mask=full_mask)
+    acc = None
+    chunks = []
+    for lo in (0, 4):
+        cur, acc = session.run_batched(
+            spikes[:, lo : lo + 4], mask=full_mask[:, lo : lo + 4], stats0=acc
+        )
+        chunks.append(np.asarray(cur))
+    assert np.array_equal(np.concatenate(chunks, axis=1), np.asarray(cur_full))
+    _assert_stats_equal(acc, acc_full, "chunked stats0 carry")
+
+
+def test_mask_validation():
+    cfg = small_config("binary_tree", "broadcast")
+    session = _session(cfg)
+    spikes = _spikes(cfg, lead=(2,))
+    good = jnp.ones((2, TICKS), bool)
+    with pytest.raises(ValueError, match="mask"):
+        session.run_batched(spikes, mask=jnp.ones((2, TICKS + 1), bool))
+    with pytest.raises(ValueError, match="stats0"):
+        session.run(spikes[0], stats0=StepStats.zeros())
+    with pytest.raises(ValueError, match="shard"):
+        session.run_batched(spikes, mask=good, shard="chips")
+    with pytest.raises(ValueError, match="telemetry"):
+        session.run_batched(spikes, mask=good, telemetry="ticks")
+
+
+# ---- ingest queue ----------------------------------------------------------
+
+
+class _FakeClock:
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self):
+        return self.now
+
+
+def _frames(n, cfg):
+    return np.zeros((n, cfg.cores, cfg.neurons_per_core), bool)
+
+
+def test_queue_size_trigger():
+    cfg = small_config("binary_tree", "broadcast")
+    q = IngestQueue(flush_frames=8, flush_deadline_s=60.0, clock=_FakeClock())
+    q.submit("a", _frames(5, cfg))
+    assert not q.ready() and q.poll() == []
+    q.submit("b", _frames(3, cfg))  # 8 frames total: size trigger fires
+    assert q.ready() and q.pending_frames() == 8
+    out = q.poll()
+    assert [r.tenant for r in out] == ["a", "b"]
+    assert q.depth() == 0 and q.pending_frames() == 0
+
+
+def test_queue_deadline_trigger_and_force():
+    cfg = small_config("binary_tree", "broadcast")
+    clock = _FakeClock()
+    q = IngestQueue(flush_frames=100, flush_deadline_s=0.5, clock=clock)
+    q.submit("a", _frames(2, cfg))
+    clock.now = 0.4
+    assert not q.ready()
+    clock.now = 0.5  # oldest request hits its latency deadline
+    assert q.ready() and len(q.poll()) == 1
+    q.submit("b", _frames(1, cfg))
+    assert len(q.poll(force=True)) == 1  # drain semantics ignore triggers
+    with pytest.raises(ValueError, match="frames"):
+        q.submit("c", np.zeros((0, cfg.cores, cfg.neurons_per_core), bool))
+
+
+# ---- admission -------------------------------------------------------------
+
+
+def test_admission_bounds():
+    cfg = small_config("binary_tree", "broadcast")
+    ctrl = AdmissionController(AdmissionPolicy(max_tenants_per_group=2, max_groups=1))
+    spec = TenantSpec("t0", cfg)
+    key = ctrl.admit(spec, {})
+    assert key == compat_key(spec)
+    with pytest.raises(AdmissionError, match="capacity"):
+        ctrl.admit(spec, {key: 2})
+    other = TenantSpec("t1", cfg, connectivity_seed=9)  # needs a new group
+    with pytest.raises(AdmissionError, match="max_groups"):
+        ctrl.admit(other, {key: 1})
+    with pytest.raises(AdmissionError, match="max_frames_per_request"):
+        ctrl.validate_request("t0", 5000)
+    with pytest.raises(ValueError, match=">= 1"):
+        AdmissionPolicy(max_groups=0)
+
+
+def test_tenant_spec_validation_and_streams():
+    cfg = small_config("binary_tree", "broadcast")
+    with pytest.raises(ValueError, match="non-empty"):
+        TenantSpec("", cfg)
+    with pytest.raises(ValueError, match="unknown scenario parameter"):
+        TenantSpec("t", cfg, scenario="sparse_poisson", scenario_params={"nope": 1})
+    spec = TenantSpec("t", cfg, scenario="sparse_poisson", seed=5)
+    a, b = spec.stream(4, round=0), spec.stream(4, round=0)
+    assert np.array_equal(np.asarray(a), np.asarray(b)), "streams must be deterministic"
+    c = spec.stream(4, round=1)
+    assert not np.array_equal(np.asarray(a), np.asarray(c)), "rounds must draw fresh traffic"
+    assert 0.0 < spec.expected_rate() < 1.0
+
+
+# ---- serve engine ----------------------------------------------------------
+
+
+def _engine(cfg, scenarios, **kw):
+    kw.setdefault("flush_ticks", 4)
+    kw.setdefault("flush_deadline_s", 0.0)
+    engine = ServeEngine(**kw)
+    specs = [
+        TenantSpec(f"t{i}", cfg, scenario=sc, seed=i) for i, sc in enumerate(scenarios)
+    ]
+    for spec in specs:
+        engine.register(spec)
+    return engine, specs
+
+
+def test_engine_serves_bit_identical_to_solo():
+    cfg = small_config("binary_tree", "multicast_tree")
+    engine, specs = _engine(
+        cfg, ["sparse_poisson", "hotspot_core", "synchronized_burst"], keep_currents=True
+    )
+    assert len(engine.groups) == 1, "same (config, connectivity) must share a session"
+    ticks = (7, 4, 9)  # ragged across tenants, none a flush multiple
+    for spec, t in zip(specs, ticks):
+        engine.submit_scenario(spec.name, t)
+    assert engine.drain() == sum(ticks)
+
+    session = _session(cfg)  # same seed-0 connectivity as the group
+    for spec, t in zip(specs, ticks):
+        cur_solo, acc_solo = session.run(spec.stream(t, round=0))
+        assert np.array_equal(engine.currents(spec.name), np.asarray(cur_solo)), spec.name
+        _assert_stats_equal(engine.tenant_stats(spec.name), acc_solo, spec.name)
+        assert engine.ticks_served(spec.name) == t
+
+
+def test_engine_report_records_and_metrics():
+    cfg = small_config("binary_tree", "broadcast")
+    engine, specs = _engine(cfg, ["sparse_poisson", "mixture"])
+    for spec in specs:
+        engine.submit_scenario(spec.name, 6)
+    engine.drain()
+    records = engine.serve_report()
+    assert [r["tenant"] for r in records] == ["t0", "t1", "__fleet__"]
+    for rec in records[:-1]:
+        assert rec["ticks"] == 6
+        assert {"tick_ms_p50", "tick_ms_p95", "tick_ms_p99", "stats_per_tick"} <= set(rec)
+        assert rec["stats_per_tick"]["events"] > 0
+    fleet = records[-1]
+    assert fleet["tenants"] == 2 and fleet["ticks"] == 12
+    assert fleet["events_per_sec"] > 0
+    # fleet percentiles come from Histogram.merge over the tenant hists
+    assert fleet["tick_ms_p99"] >= fleet["tick_ms_p50"] > 0
+    assert engine.registry.counter("serve.ticks").value == 12
+    snapshot = engine.registry.snapshot()
+    assert "tenant.t0.tick_ms" in snapshot and "serve.queue_depth" in snapshot
+
+
+def test_engine_grouping_and_errors():
+    cfg_a = small_config("binary_tree", "broadcast")
+    cfg_b = small_config("binary_tree", "broadcast", cores=8)
+    engine = ServeEngine(flush_ticks=4, policy=AdmissionPolicy(max_groups=2))
+    engine.register(TenantSpec("a0", cfg_a))
+    engine.register(TenantSpec("b0", cfg_b))  # incompatible shape: new group
+    assert len(engine.groups) == 2
+    with pytest.raises(ValueError, match="already registered"):
+        engine.register(TenantSpec("a0", cfg_a))
+    with pytest.raises(ValueError, match="conflict"):
+        engine.register(
+            TenantSpec("a1", cfg_a), params=default_connectivity(cfg_a, 0)
+        )
+    with pytest.raises(KeyError, match="unknown tenant"):
+        engine.submit("ghost", np.zeros((1, cfg_a.cores, cfg_a.neurons_per_core), bool))
+    with pytest.raises(ValueError, match="do not match"):
+        engine.submit("a0", np.zeros((1, cfg_b.cores, cfg_b.neurons_per_core), bool))
+    with pytest.raises(ValueError, match="keep_currents"):
+        engine.currents("a0")
+
+
+def test_engine_deadline_holds_partial_batches():
+    """Under the deadline, a partial batch waits; force flushes it."""
+    cfg = small_config("binary_tree", "broadcast")
+    clock = _FakeClock()
+    engine = ServeEngine(flush_ticks=8, flush_deadline_s=1.0, clock=clock)
+    engine.register(TenantSpec("t0", cfg))
+    engine.submit_scenario("t0", 3)  # 3 < 8 frames and inside the deadline
+    assert engine.pump() == 0 and engine.queue_depth() == 1
+    clock.now = 1.0
+    assert engine.pump() == 3  # deadline trigger fires the partial flush
+    engine.submit_scenario("t0", 2)
+    clock.now = 1.5
+    assert engine.drain() == 2  # force path ignores triggers entirely
+
+
+def test_lm_engine_relocated():
+    from repro.serve import lm_engine
+
+    assert hasattr(lm_engine, "ServeEngine") and hasattr(lm_engine, "make_decode_step")
+    # the package-level ServeEngine is the fabric streaming engine now
+    assert hasattr(ServeEngine, "register") and hasattr(ServeEngine, "drain")

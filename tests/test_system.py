@@ -8,7 +8,7 @@ from repro.data.pipeline import DataConfig, Pipeline
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.optim.adamw import AdamWConfig
-from repro.serve.engine import ServeEngine
+from repro.serve.lm_engine import ServeEngine
 from repro.train import step as ts
 
 KEY = jax.random.PRNGKey(0)
