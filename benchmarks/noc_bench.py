@@ -66,6 +66,16 @@ Sweeps:
    One tenant's accumulated stats are asserted bit-identical to a solo
    ``session.run`` over its concatenated stream.
 
+8. **Chaos** (``--chaos [ROUNDS]``, default 12): the serve engine under
+   a seeded mixed `repro.ft` fault plan (transfer/execute failures, slow
+   devices, per-tenant lane faults; one tenant additionally compiled
+   with a fabric-level `FaultModel`).  Asserts graceful degradation:
+   every chaos charge fires, the accounting identity closes exactly,
+   every lane recovers, and the masked jit cache never grows.  Emits a
+   ``__chaos__``-tagged record; ``--chaos-report PATH`` writes the JSONL
+   serve report (fault counters + recovery percentiles) for
+   ``python -m repro.obs.report`` and the CI artifact.
+
 Also asserts the PR acceptance criteria: at >= 16 cores, multicast-tree +
 optimized placement reduces total CAM searches and NoC link events vs. the
 broadcast baseline; re-placed fabrics conserve total synaptic current; the
@@ -439,6 +449,110 @@ def serve_sweep(tenants, cores, neurons, entries, ticks, repeats=3):
     return [rec]
 
 
+def chaos_sweep(rounds, cores, neurons, entries, ticks, report_path=None):
+    """Serve engine under a seeded mixed fault plan (``--chaos``).
+
+    Builds a small fleet (6 tenants, the last carrying a fabric-level
+    `repro.ft.FaultModel`, so two groups share the engine), arms
+    `FaultPlan.mixed` over ``rounds`` pump rounds through a
+    `ChaosInjector` (no-op sleeps: the plan is about determinism, not
+    wall time), and drives submit+pump to exhaustion.  Asserts the
+    engine degrades gracefully and recovers every time: every chaos
+    charge fires, the accounting identity submitted == served + shed +
+    pending closes exactly, every lane ends healthy after the drain,
+    and each group's masked batched jit holds ONE cache entry.  Emits a
+    ``__chaos__``-tagged record (sweep keys + wall clock so
+    check_regression.py can index it; candidate-only records report as
+    "new", the fault path is never latency-gated) and, with
+    ``--chaos-report PATH``, the JSONL serve report for
+    ``python -m repro.obs.report`` / the CI artifact.
+    """
+    from repro.ft import ChaosInjector, FaultModel, FaultPlan, \
+        RetriesExhaustedError
+    from repro.serve import HealthPolicy, RetryPolicy, ServeEngine, \
+        TenantSpec
+
+    tenants = 6
+    print(f"\n== chaos sweep ({rounds} rounds, {tenants} tenants, {cores} "
+          f"cores x {neurons} neurons/core, {entries} CAM entries, "
+          f"{ticks} ticks/round) ==")
+    cfg = fabric.FabricConfig(cores=cores, neurons_per_core=neurons,
+                              cam_entries_per_core=entries)
+    names = traffic.scenario_names()
+    specs = []
+    for i in range(tenants):
+        fault = FaultModel(drop_rate=0.05, seed=3) \
+            if i == tenants - 1 else None
+        specs.append(TenantSpec(f"chaos{i}", cfg,
+                                scenario=names[i % len(names)], seed=i,
+                                fault=fault))
+    plan = FaultPlan.mixed([s.name for s in specs], rounds=rounds, seed=0)
+    injector = ChaosInjector(plan, sleep=lambda s: None)
+    sink = obs_metrics.JsonlSink(report_path) if report_path else None
+    engine = ServeEngine(flush_ticks=ticks, flush_deadline_s=0.0,
+                         chaos=injector,
+                         retry=RetryPolicy(max_retries=3,
+                                           backoff_base_s=0.0),
+                         health=HealthPolicy(quarantine_after=2,
+                                             quarantine_rounds=2),
+                         sink=sink, sleep=lambda s: None)
+    for spec in specs:
+        engine.register(spec)
+
+    hard_failures = 0
+    for _ in range(rounds):
+        for spec in specs:
+            engine.submit_scenario(spec.name, ticks)
+        try:
+            engine.pump(force=True)
+        except RetriesExhaustedError:
+            hard_failures += 1          # restaged; a later pump serves it
+    while True:                         # drain through any leftover charges
+        try:
+            engine.drain()
+            break
+        except RetriesExhaustedError:
+            hard_failures += 1
+
+    report = engine.emit_report()
+    if sink is not None:
+        sink.close()
+        print(f"  wrote {report_path} ({len(report)} serve records)")
+    fleet = report[-1]
+    acct = engine.accounting()
+    recovered = all(engine.lane_health(s.name) == "healthy" for s in specs)
+    cache_entries = max(
+        g.session._masked_cache["run_batched"]._cache_size()
+        for g in engine.groups.values() if g.session._masked_cache)
+    served = engine.ticks_served()
+    rec = {"scenario": "__chaos__", "cores": cores,
+           "neurons_per_core": neurons, "cam_entries_per_core": entries,
+           "ticks": ticks, "rounds": rounds, "tenants": tenants,
+           "groups": len(engine.groups), "ticks_served": served,
+           "ticks_submitted": engine.ticks_submitted(),
+           "hard_failures": hard_failures,
+           "new_tick_ms": fleet["busy_s"] / max(served, 1) * 1e3,
+           "tick_ms_p50": fleet.get("tick_ms_p50", 0.0),
+           "tick_ms_p95": fleet.get("tick_ms_p95", 0.0),
+           "tick_ms_p99": fleet.get("tick_ms_p99", 0.0),
+           "faults": fleet.get("faults", {}),
+           "plan_exhausted": injector.exhausted(),
+           "accounting_closes": acct["closes"],
+           "lanes_recovered": recovered,
+           "jit_cache_entries": cache_entries}
+    for k in ("recovery_ms_p50", "recovery_ms_p99"):
+        if k in fleet:
+            rec[k] = fleet[k]
+    print(f"{'rounds':>6} {'served':>7} {'injected':>8} {'retries':>7} "
+          f"{'hard':>4} {'closes':>6} {'recovered':>9} {'cache':>5}")
+    faults = rec["faults"]
+    print(f"{rounds:>6} {served:>7} {faults.get('injected', 0):>8} "
+          f"{faults.get('retries', 0):>7} {hard_failures:>4} "
+          f"{str(acct['closes']):>6} {str(recovered):>9} "
+          f"{cache_entries:>5}")
+    return [rec]
+
+
 def chips_sweep(chips_list, cores, neurons, entries, ticks, repeats=3):
     """Same total fabric, 1..K chips: hierarchy costs + sharded session."""
     print(f"\n== chip hierarchy sweep ({cores} cores total, {neurons} "
@@ -549,6 +663,15 @@ def main(argv=None):
                          "tenants (default when flag given: %(const)s) on "
                          "one shared session; reuses the session-tick "
                          "shape and --scenario-cores")
+    ap.add_argument("--chaos", nargs="?", const=12, default=None, type=int,
+                    metavar="ROUNDS",
+                    help="run the chaos sweep: the serve engine under a "
+                         "seeded mixed fault plan for ROUNDS pump rounds "
+                         "(default when flag given: %(const)s); reuses the "
+                         "session-tick shape and --scenario-cores")
+    ap.add_argument("--chaos-report", default=None, metavar="PATH",
+                    help="write the chaos run's JSONL serve report to PATH "
+                         "(render with python -m repro.obs.report)")
     ap.add_argument("--chips", default=None, metavar="LIST",
                     help="comma-separated chip counts for the hierarchy "
                          "sweep (e.g. 1,2,4; off by default)")
@@ -593,6 +716,10 @@ def main(argv=None):
             args.serve, args.scenario_cores, args.tick_neurons,
             args.tick_entries, args.tick_ticks,
             repeats=args.tick_repeats) if args.serve else []
+        chaos_records = chaos_sweep(
+            args.chaos, args.scenario_cores, args.tick_neurons,
+            args.tick_entries, args.tick_ticks,
+            report_path=args.chaos_report) if args.chaos else []
         scheme = scheme_sweep(core_sweep)
         placed = placement_sweep(core_sweep)
     if tracer is not None:
@@ -611,7 +738,7 @@ def main(argv=None):
                    "config": vars(args),
                    "rate": RATE,
                    "records": tick_records + scenario_records
-                   + serve_records}
+                   + serve_records + chaos_records}
         if chips_records:
             payload["chips_records"] = chips_records
         with open(args.json, "w") as f:
@@ -667,6 +794,17 @@ def main(argv=None):
               f"{r['events_per_sec']:.0f} events/s, stats bit-identical to "
               f"solo: {s_ok}")
         ok &= s_ok
+    if chaos_records:
+        r = chaos_records[0]
+        c_ok = (r["plan_exhausted"] and r["accounting_closes"]
+                and r["lanes_recovered"] and r["jit_cache_entries"] == 1)
+        print(f"  chaos: {r['faults'].get('injected', 0)} faults injected "
+              f"over {r['rounds']} rounds, plan exhausted="
+              f"{r['plan_exhausted']}, accounting closes="
+              f"{r['accounting_closes']}, lanes recovered="
+              f"{r['lanes_recovered']}, jit cache entries="
+              f"{r['jit_cache_entries']}: {c_ok}")
+        ok &= c_ok
     if chips_records:
         c_ok = all(r["sharded_bit_identical"] for r in chips_records)
         paid = all(r["chip_hops"] > 0 for r in chips_records if r["chips"] > 1)

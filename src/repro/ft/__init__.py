@@ -1,1 +1,43 @@
-"""ft subsystem."""
+"""`repro.ft`: fault injection and fault-tolerant execution.
+
+Two layers, one seed-deterministic story:
+
+  fabric  `repro.ft.faults.FaultModel` - dead cores, dropped events,
+          corrupted CAM entries as pure transforms compiled into an
+          `InterfaceSession` (`Interface.compile(params, fault=...)`),
+          so faulted runs stay inside the one jitted step.
+  host    `repro.ft.chaos` - `FaultPlan`/`ChaosInjector` raising/stalling
+          at configured `ServeEngine` pump rounds (transfer failures,
+          slow devices, per-tenant lane faults), with the typed error
+          ladder the hardened engine retries/surfaces.
+
+The seed-era training runner (checkpoint/resume, `Watchdog`,
+`FailureInjector`) lives in `repro.ft.runner`, its counters now on
+`repro.obs.metrics`.
+"""
+
+from repro.ft.chaos import (
+    FAULT_KINDS,
+    ChaosError,
+    ChaosInjector,
+    ExecuteFault,
+    FaultEvent,
+    FaultPlan,
+    RetriesExhaustedError,
+    TransferFault,
+    TransientFaultError,
+)
+from repro.ft.faults import FaultModel
+
+__all__ = [
+    "FAULT_KINDS",
+    "ChaosError",
+    "ChaosInjector",
+    "ExecuteFault",
+    "FaultEvent",
+    "FaultModel",
+    "FaultPlan",
+    "RetriesExhaustedError",
+    "TransferFault",
+    "TransientFaultError",
+]

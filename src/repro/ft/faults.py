@@ -1,0 +1,169 @@
+"""`repro.ft.faults`: deterministic fabric-layer fault models.
+
+The paper's core argument is that the asynchronous core interface must
+stay live under adverse event traffic — CAM mis-matches, dropped AER
+events, dead cores.  `FaultModel` expresses those hardware faults as
+*pure transforms* so a faulted run stays inside the one compiled step and
+degrades predictably instead of crashing:
+
+  compile time  `apply_params` perturbs the routing state before the
+                session builds its tables/`RoutingIndex`: dead cores have
+                every CAM entry invalidated (they receive nothing), and
+                ``corrupt_cam_entries`` randomly chosen CAM slots get
+                their stored tags re-randomized — the classic CAM
+                mis-match, which silently misroutes those synapses.
+  run time      `apply_spikes` is jit-compatible: dead cores' spikes are
+                masked (they also emit nothing) and events are dropped
+                with probability ``drop_rate`` per (tick, core, neuron).
+                The drop mask is keyed by ``fold_in(seed, lane, global
+                tick index)``, so a stream served in chunks draws exactly
+                the same faults as one uninterrupted run — the property
+                that lets the chaos soak assert bit-identical currents.
+
+Faults are *data*, not control flow: a session compiled with a
+`FaultModel` has the same jit cache footprint as a clean one (one entry
+per entry point; the tick offset is a dynamic argument).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Deterministic, seeded fabric faults as pure transforms.
+
+    dead_cores:          core indices that neither emit nor receive events
+                         (their spikes are masked and their CAM rows
+                         invalidated).
+    drop_rate:           per-event Bernoulli drop probability in [0, 1]
+                         (lossy AER link).
+    corrupt_cam_entries: number of CAM slots whose stored tags are
+                         re-randomized at compile time (mis-match /
+                         misroute, not a crash).
+    seed:                PRNG seed for both the corruption choice and the
+                         per-tick drop masks.
+    """
+
+    dead_cores: tuple = ()
+    drop_rate: float = 0.0
+    corrupt_cam_entries: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        cores = tuple(sorted(int(c) for c in self.dead_cores))
+        if len(set(cores)) != len(cores):
+            raise ValueError(f"dead_cores has duplicates: {cores}")
+        if cores and cores[0] < 0:
+            raise ValueError(f"dead_cores must be non-negative, got {cores}")
+        object.__setattr__(self, "dead_cores", cores)
+        if not 0.0 <= float(self.drop_rate) <= 1.0:
+            raise ValueError(f"drop_rate must be in [0, 1], got {self.drop_rate}")
+        object.__setattr__(self, "drop_rate", float(self.drop_rate))
+        if int(self.corrupt_cam_entries) < 0:
+            raise ValueError(f"corrupt_cam_entries must be >= 0, got {self.corrupt_cam_entries}")
+        object.__setattr__(self, "corrupt_cam_entries", int(self.corrupt_cam_entries))
+        object.__setattr__(self, "seed", int(self.seed))
+
+    # ---- introspection ----------------------------------------------------
+
+    @property
+    def is_null(self) -> bool:
+        """True when this model perturbs nothing (compiles as fault-free)."""
+        return not self.dead_cores and self.drop_rate == 0.0 and self.corrupt_cam_entries == 0
+
+    @property
+    def perturbs_spikes(self) -> bool:
+        """True when the run-time spike transform is non-trivial."""
+        return bool(self.dead_cores) or self.drop_rate > 0.0
+
+    def validate(self, cfg) -> None:
+        """Check the model fits a fabric config; raise ValueError if not."""
+        if self.dead_cores and max(self.dead_cores) >= cfg.cores:
+            raise ValueError(
+                f"dead core {max(self.dead_cores)} out of range for a "
+                f"{cfg.cores}-core fabric"
+            )
+        total = cfg.cores * cfg.cam.entries
+        if self.corrupt_cam_entries > total:
+            raise ValueError(
+                f"corrupt_cam_entries={self.corrupt_cam_entries} exceeds the "
+                f"fabric's {total} CAM slots"
+            )
+
+    def describe(self) -> dict:
+        """Small JSON-able summary for reports."""
+        return {
+            "dead_cores": list(self.dead_cores),
+            "drop_rate": self.drop_rate,
+            "corrupt_cam_entries": self.corrupt_cam_entries,
+            "seed": self.seed,
+        }
+
+    # ---- compile-time transform ------------------------------------------
+
+    def apply_params(self, params, cfg):
+        """Perturbed copy of the routing state (host-time, pure).
+
+        Corruption happens *before* dead-core invalidation, so a corrupt
+        slot landing on a dead core is still silenced — dead means dead.
+        """
+        from repro.interface.types import int_to_bits
+
+        tags, valid = params.tags, params.valid
+        if self.corrupt_cam_entries:
+            cores, entries = valid.shape
+            k_pick, k_src = jax.random.split(jax.random.PRNGKey(self.seed))
+            flat = jax.random.choice(
+                k_pick, cores * entries, (self.corrupt_cam_entries,), replace=False
+            )
+            bad_src = jax.random.randint(
+                k_src,
+                (self.corrupt_cam_entries,),
+                0,
+                cfg.cores * cfg.neurons_per_core,
+            )
+            tag_bits = tags.shape[-1]
+            tags = (
+                tags.reshape(cores * entries, tag_bits)
+                .at[flat]
+                .set(int_to_bits(bad_src, tag_bits))
+                .reshape(tags.shape)
+            )
+        if self.dead_cores:
+            valid = valid.at[jnp.array(self.dead_cores), :].set(False)
+        return params._replace(tags=tags, valid=valid)
+
+    # ---- run-time transform ----------------------------------------------
+
+    def apply_spikes(self, spikes_tcn, tick0=0, lane=0):
+        """Faulted copy of a (T, cores, neurons) spike stream (jit-safe).
+
+        tick0: global tick index of ``spikes_tcn[0]`` — a *dynamic* scalar
+        (chunked callers pass their running offset without recompiling).
+        lane:  batch-lane index folded into the drop stream so vmapped
+        lanes draw independent faults.
+        """
+        spikes = spikes_tcn
+        if spikes.dtype != jnp.bool_:
+            spikes = spikes > 0
+        cores = spikes.shape[-2]
+        if self.dead_cores:
+            alive = jnp.ones((cores,), bool).at[jnp.array(self.dead_cores)].set(False)
+            spikes = spikes & alive[:, None]
+        if self.drop_rate > 0.0:
+            shape = spikes.shape[-2:]
+            base = jax.random.fold_in(jax.random.PRNGKey(self.seed), jnp.asarray(lane, jnp.int32))
+            tick0 = jnp.asarray(tick0, jnp.int32)
+
+            def keep(t):
+                key = jax.random.fold_in(base, tick0 + t)
+                return jax.random.bernoulli(key, 1.0 - self.drop_rate, shape)
+
+            keeps = jax.vmap(keep)(jnp.arange(spikes.shape[0], dtype=jnp.int32))
+            spikes = spikes & keeps
+        return spikes

@@ -22,33 +22,64 @@ import time
 import jax
 
 from repro.ckpt.manager import CheckpointManager
+from repro.obs import metrics as obs_metrics
 
 
 @dataclasses.dataclass
 class FailureInjector:
+    """Raises once at each configured step; counts onto `obs.metrics`.
+
+    registry/prefix: optional `MetricsRegistry` receiving a
+    ``<prefix>.injected_failures`` counter, so training-time fault drills
+    share one telemetry substrate with the serving tier.
+    """
+
     fail_at_steps: tuple = ()
+    registry: obs_metrics.MetricsRegistry | None = None
+    prefix: str = "ft"
     _fired: set = dataclasses.field(default_factory=set)
 
     def check(self, step: int):
         if step in self.fail_at_steps and step not in self._fired:
             self._fired.add(step)
+            if self.registry is not None:
+                self.registry.counter(f"{self.prefix}.injected_failures").inc()
             raise RuntimeError(f"injected failure at step {step}")
 
 
 class Watchdog:
-    def __init__(self, straggler_factor: float = 3.0):
+    """Flags steps slower than `straggler_factor` x the running median.
+
+    Counters/histograms live on a `repro.obs.metrics` registry (a
+    private one by default): every observation lands in
+    ``<prefix>.step_ms``, stragglers increment ``<prefix>.stragglers``.
+    The `stragglers` attribute and `times` list keep the seed-era
+    interface working; the registry is looked up per call so an engine
+    that clears its registry (warmup reset) keeps counting correctly.
+    """
+
+    def __init__(self, straggler_factor: float = 3.0,
+                 registry: obs_metrics.MetricsRegistry | None = None,
+                 prefix: str = "ft"):
         self.times: list[float] = []
         self.factor = straggler_factor
-        self.stragglers = 0
+        self.registry = registry or obs_metrics.MetricsRegistry()
+        self.prefix = prefix
 
     def observe(self, dt: float) -> bool:
         self.times.append(dt)
+        self.registry.histogram(f"{self.prefix}.step_ms").add(dt * 1e3)
         hist = sorted(self.times[-50:])
         median = hist[len(hist) // 2]
         is_straggler = len(self.times) > 5 and dt > self.factor * median
         if is_straggler:
-            self.stragglers += 1
+            self.registry.counter(f"{self.prefix}.stragglers").inc()
         return is_straggler
+
+    @property
+    def stragglers(self) -> int:
+        counter = self.registry.counters.get(f"{self.prefix}.stragglers")
+        return int(counter.value) if counter is not None else 0
 
 
 def run_training(train_step, state, pipeline, *, num_steps: int,

@@ -43,6 +43,15 @@ to their solo runs.  ``stats0`` seeds the scan's accumulator carry
 the accumulator through successive calls, keeping the float accumulation
 order exactly the tick-sequential order a single solo `run` uses - which
 is what makes chunk-streamed stats bit-identical, not merely close.
+
+Fault injection (the `repro.ft` substrate): ``compile(params,
+fault=FaultModel(...))`` bakes deterministic fabric faults into the
+session - dead cores and corrupted CAM entries perturb the routing state
+before tables are built, dropped events are masked by a jitted
+per-(lane, tick) Bernoulli transform keyed on a dynamic ``fault_tick0``
+offset - so faulted runs stay inside the one compiled step, degrade
+predictably, and chunked faulted streams replay the exact fault sequence
+of one uninterrupted run.
 """
 
 from __future__ import annotations
@@ -72,9 +81,16 @@ class Interface:
         """config: `InterfaceConfig` or a legacy `FabricConfig`."""
         self.config = as_interface_config(config)
 
-    def compile(self, params) -> "InterfaceSession":
-        """Bind routing state; build all plans/tables/constants once."""
-        return InterfaceSession(self.config, params)
+    def compile(self, params, fault=None) -> "InterfaceSession":
+        """Bind routing state; build all plans/tables/constants once.
+
+        fault: optional `repro.ft.faults.FaultModel` compiled into the
+        session - dead cores / corrupted CAM entries perturb the routing
+        state *before* tables are built, and dropped/dead-core spikes are
+        masked at run time by a jit-compatible transform, so faulted runs
+        stay inside the one compiled step and degrade instead of crash.
+        """
+        return InterfaceSession(self.config, params, fault=fault)
 
     def ppa_report(self) -> dict:
         from repro.interface import report
@@ -95,8 +111,15 @@ class InterfaceSession:
       cam_cycle_ns  CAM search cycle time for the configured variant
     """
 
-    def __init__(self, config, params):
+    def __init__(self, config, params, fault=None):
         self.config = as_interface_config(config)
+        if fault is not None:
+            fault.validate(self.config)
+            if fault.is_null:
+                fault = None          # compiles exactly as fault-free
+        self.fault = fault
+        if fault is not None:
+            params = fault.apply_params(params, self.config)
         self.params = params
         cfg = self.config
         with obs_trace.span("interface.compile", cores=cfg.cores,
@@ -126,6 +149,7 @@ class InterfaceSession:
         self._sharded_cache = None
         self._telemetry_cache = {}
         self._masked_cache = None
+        self._fault_cache = None
 
     # ---- execution -------------------------------------------------------
 
@@ -134,7 +158,7 @@ class InterfaceSession:
         return self._tick(self.params, self._check(spikes, 2))
 
     def run(self, spikes, shard: str | None = None, telemetry: str = "off",
-            mask=None, stats0: StepStats | None = None
+            mask=None, stats0: StepStats | None = None, fault_tick0=None
             ) -> tuple[jnp.ndarray, StepStats]:
         """Multi-timestep simulation under one jit-compiled lax.scan.
 
@@ -162,10 +186,17 @@ class InterfaceSession:
             with ``mask``); defaults to zeros.  Chunk-streamed callers
             thread the returned stats back in to keep accumulation
             bit-identical to one uninterrupted run.
+        fault_tick0: global tick index of ``spikes[0]`` for the session's
+            compiled `FaultModel` drop stream (only meaningful when the
+            session was compiled with a spike-perturbing fault; defaults
+            to 0 there).  A *dynamic* scalar: chunked callers pass their
+            running offset without growing the jit cache, and chunked
+            faulted runs stay bit-identical to one uninterrupted run.
         returns (currents (T, cores, neurons_per_core), accumulated stats);
         use ``stats.summary(ticks=T)`` for per-tick means.
         """
         spikes = self._check(spikes, 3)
+        spikes = self._apply_fault("run", spikes, fault_tick0)
         if mask is not None:
             fns = self._masked_fns(shard, telemetry)
             mask = self._check_mask(mask, spikes, 1)
@@ -188,7 +219,7 @@ class InterfaceSession:
 
     def run_batched(self, spikes, shard: str | None = None,
                     telemetry: str = "off", mask=None,
-                    stats0: StepStats | None = None
+                    stats0: StepStats | None = None, fault_tick0=None
                     ) -> tuple[jnp.ndarray, StepStats]:
         """Batched scan: spikes (B, T, cores, neurons_per_core) bool.
 
@@ -206,8 +237,14 @@ class InterfaceSession:
         ((B,)-shaped `StepStats` leaves; zeros when omitted) - thread the
         returned stats back in when chunking one long stream over
         multiple calls.  Mutually exclusive with shard/telemetry.
+
+        ``fault_tick0`` behaves as in `run`, per lane: a scalar (shared
+        offset) or a (B,) vector of per-lane global tick offsets for the
+        compiled `FaultModel`'s drop stream; each lane folds its index
+        into the stream so lanes draw independent faults.
         """
         spikes = self._check(spikes, 4)
+        spikes = self._apply_fault("run_batched", spikes, fault_tick0)
         if mask is not None:
             fns = self._masked_fns(shard, telemetry)
             mask = self._check_mask(mask, spikes, 2)
@@ -287,6 +324,49 @@ class InterfaceSession:
                                        donate_argnums=donate),
                 "mask": jax.jit(jax.vmap(mask_lane)),
                 "mask_solo": mask_lane}
+
+    # ---- fault injection -------------------------------------------------
+
+    def _apply_fault(self, kind: str, spikes, fault_tick0):
+        """Run the compiled `FaultModel`'s jitted spike transform.
+
+        No-op (and rejects ``fault_tick0``) when the session has no
+        spike-perturbing fault, so the fault-free path stays byte-for-
+        byte the plain one.  The tick offset is a dynamic argument -
+        one cache entry covers every chunk offset.
+        """
+        if self.fault is None or not self.fault.perturbs_spikes:
+            if fault_tick0 is not None:
+                raise ValueError(
+                    "fault_tick0 is only meaningful on a session compiled "
+                    "with a spike-perturbing FaultModel (dead_cores or "
+                    "drop_rate)")
+            return spikes
+        if self._fault_cache is None:
+            self._fault_cache = self._build_fault()
+        t0 = jnp.asarray(0 if fault_tick0 is None else fault_tick0,
+                         jnp.int32)
+        if kind == "run_batched":
+            t0 = jnp.broadcast_to(t0, (spikes.shape[0],))
+        return self._fault_cache[kind](spikes, t0)
+
+    def _build_fault(self) -> dict:
+        """Jitted dead-core/drop transforms; lanes fold their index in."""
+        fault = self.fault
+
+        def solo(s, t0):
+            return fault.apply_spikes(s, tick0=t0, lane=jnp.int32(0))
+
+        def lane(s, t0, i):
+            return fault.apply_spikes(s, tick0=t0, lane=i)
+
+        batched = jax.vmap(lane, in_axes=(0, 0, 0))
+
+        def run_b(s, t0):
+            lanes = jnp.arange(s.shape[0], dtype=jnp.int32)
+            return batched(s, t0, lanes)
+
+        return {"run": jax.jit(solo), "run_batched": jax.jit(run_b)}
 
     def _check_mask(self, mask, spikes, ndim: int) -> jnp.ndarray:
         mask = jnp.asarray(mask)

@@ -69,7 +69,7 @@ def tier_rows(stats: dict) -> list:
 
 
 def _record_title(rec: dict) -> str:
-    bits = [str(rec.get("scenario") or rec.get("benchmark") or "record")]
+    bits = [str(rec.get("scenario") or rec.get("benchmark") or rec.get("tenant") or "record")]
     if "cores" in rec and "neurons_per_core" in rec:
         bits.append(f"{rec['cores']} cores x {rec['neurons_per_core']} n/core")
     if "cam_entries_per_core" in rec:
@@ -102,12 +102,26 @@ def format_record(rec: dict) -> str:
         lines.append(f"  tick wall clock: {wall}")
     elif "new_tick_ms" in rec:
         lines.append(f"  tick wall clock: min {rec['new_tick_ms']:.3f} ms")
+    faults = rec.get("faults")
+    if faults:
+        counts = ", ".join(f"{k} {int(v)}" for k, v in sorted(faults.items()))
+        lines.append(f"  faults: {counts}")
+        rec_pcts = [(k, rec[k]) for k in ("recovery_ms_p50", "recovery_ms_p99") if k in rec]
+        if rec_pcts:
+            rendered = "  ".join(f"{k.split('_')[-1]} {v:.3f} ms" for k, v in rec_pcts)
+            lines.append(f"  fault recovery: {rendered}")
+    if rec.get("health") and rec["health"] != "healthy":
+        lines.append(f"  health: {rec['health']}")
     return "\n".join(lines)
 
 
 def format_report(records: list, scenario: str | None = None) -> str:
     chosen = [r for r in records if scenario is None or r.get("scenario") == scenario]
-    with_stats = [r for r in chosen if r.get("stats_per_tick") or "new_tick_ms" in r]
+    with_stats = [
+        r
+        for r in chosen
+        if r.get("stats_per_tick") or "new_tick_ms" in r or r.get("faults")
+    ]
     if not with_stats:
         return "no reportable records" + (f" for scenario {scenario!r}" if scenario else "")
     head = []

@@ -4,14 +4,29 @@ The serving tier the ROADMAP names: tenants (`TenantSpec`) each bring an
 `InterfaceConfig` and a `repro.traffic` tick stream; the `ServeEngine`
 packs compatible tenants onto shared precompiled `InterfaceSession`s and
 steps each group under a single jit (masked `run_batched` over the lane
-axis), with micro-batched ingest (`IngestQueue`), capacity limits
-(`AdmissionPolicy`), and per-tenant `repro.obs` metrics.
+axis), with micro-batched ingest (`IngestQueue`), capacity limits and
+typed rejection errors (`AdmissionPolicy`), per-tenant `repro.obs`
+metrics, and - since PR 8 - graceful degradation: bounded retries
+(`RetryPolicy`), a per-lane health state machine (`HealthPolicy` /
+`HealthTracker`), deadline shedding, and `repro.ft` fault injection at
+both the fabric (`TenantSpec.fault`) and host (`ServeEngine(chaos=...)`)
+layers.
 
 The prefill/decode LM reference loop lives in `repro.serve.lm_engine`.
 """
 
-from repro.serve.admission import AdmissionController, AdmissionError, AdmissionPolicy
+from repro.serve.admission import (
+    AdmissionController,
+    AdmissionError,
+    AdmissionPolicy,
+    DeadlineExceededError,
+    FrameValidationError,
+    QueueOverflowError,
+    ServeError,
+    validate_frames,
+)
 from repro.serve.engine import ServeEngine, TenantGroup, group_key
+from repro.serve.health import HealthPolicy, HealthTracker, LaneState, RetryPolicy
 from repro.serve.queue import IngestQueue, TickRequest
 from repro.serve.tenant import TenantSpec, compat_key, default_connectivity
 
@@ -19,12 +34,21 @@ __all__ = [
     "AdmissionController",
     "AdmissionError",
     "AdmissionPolicy",
+    "DeadlineExceededError",
+    "FrameValidationError",
+    "HealthPolicy",
+    "HealthTracker",
     "IngestQueue",
+    "LaneState",
+    "QueueOverflowError",
+    "RetryPolicy",
     "ServeEngine",
+    "ServeError",
     "TenantGroup",
     "TenantSpec",
     "TickRequest",
     "compat_key",
     "default_connectivity",
     "group_key",
+    "validate_frames",
 ]

@@ -4,11 +4,21 @@ The engine's capacity axes are *groups* (each group owns one precompiled
 `InterfaceSession` - compile time and device tables) and *lanes* (the
 vmapped tenant axis of that session's batched step - device memory and
 per-flush compute).  `AdmissionController` enforces both, plus a
-per-request frame bound so one tenant cannot monopolize a flush.
+per-request frame bound so one tenant cannot monopolize a flush, an
+optional per-group pending-frame bound (queue overflow backpressure), and
+an optional request deadline past which the engine sheds queued work.
 
-Rejections raise `AdmissionError` with the exhausted axis spelled out;
-the engine surfaces them unchanged at `register`/`submit` time, before
-any device work happens.
+Everything here raises *typed* errors before any device work happens:
+
+    ServeError (RuntimeError)
+    ├── AdmissionError            capacity exceeded at register/submit
+    │   ├── QueueOverflowError    per-group pending-frame bound hit
+    │   └── DeadlineExceededError queued request aged past the shed
+    │                             deadline (raised per shed, surfaced via
+    │                             `ServeEngine.shed_errors()`)
+    └── FrameValidationError      malformed frames (also a ValueError,
+                                  so legacy shape-mismatch handlers keep
+                                  working)
 """
 
 from __future__ import annotations
@@ -16,11 +26,61 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping
 
+import numpy as np
+
 from repro.serve.tenant import TenantSpec, compat_key
 
 
-class AdmissionError(RuntimeError):
+class ServeError(RuntimeError):
+    """Base of every typed serving-tier error."""
+
+
+class AdmissionError(ServeError):
     """A tenant or request exceeds the configured serving capacity."""
+
+
+class QueueOverflowError(AdmissionError):
+    """A group's pending-frame bound is exhausted (backpressure signal)."""
+
+
+class DeadlineExceededError(AdmissionError):
+    """A queued request aged past the shed deadline and was dropped."""
+
+
+class FrameValidationError(ServeError, ValueError):
+    """Submitted frames are malformed (shape/dtype/non-finite values)."""
+
+
+def validate_frames(frames, shape: tuple | None = None, tenant: str = "?") -> np.ndarray:
+    """Validate one submitted frame chunk before any device work.
+
+    Rejects wrong rank, empty streams, wrong (cores, neurons) shape when
+    ``shape`` is known, non-numeric dtypes, and non-finite float values
+    (a NaN silently casts to True under ``astype(bool)``, which would
+    poison the fabric inside the jitted step where nothing can diagnose
+    it).  Returns the frames as a host bool array.
+    """
+    arr = np.asarray(frames)
+    if arr.dtype.kind not in "biuf":
+        raise FrameValidationError(
+            f"tenant {tenant!r}: frames dtype {arr.dtype} is not a bool/int/float "
+            f"spike raster"
+        )
+    if arr.ndim != 3 or arr.shape[0] < 1:
+        raise FrameValidationError(
+            f"frames must be (ticks >= 1, cores, neurons_per_core), got shape {arr.shape}"
+        )
+    if shape is not None and arr.shape[1:] != tuple(shape):
+        raise FrameValidationError(
+            f"tenant {tenant!r}: frames shaped {arr.shape} do not match the group "
+            f"fabric (ticks, {shape[0]}, {shape[1]})"
+        )
+    if arr.dtype.kind == "f" and not np.isfinite(arr).all():
+        raise FrameValidationError(
+            f"tenant {tenant!r}: frames contain non-finite values (NaN/Inf); "
+            f"a NaN casts to True and would silently poison the fabric"
+        )
+    return arr.astype(bool)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,16 +92,34 @@ class AdmissionPolicy:
     max_groups:             distinct (config, connectivity) sessions the
                             engine will precompile.
     max_frames_per_request: largest single `submit` chunk, in tick frames.
+    max_pending_frames:     per-group bound on queued + backlogged tick
+                            frames; `submit` raises `QueueOverflowError`
+                            beyond it (None = unbounded, the legacy
+                            behavior).
+    shed_deadline_s:        max age of a queued request at flush time;
+                            older requests are shed with
+                            `DeadlineExceededError` instead of served
+                            (None = never shed).
     """
 
     max_tenants_per_group: int = 32
     max_groups: int = 4
     max_frames_per_request: int = 4096
+    max_pending_frames: int | None = None
+    shed_deadline_s: float | None = None
 
     def __post_init__(self):
-        for field in dataclasses.fields(self):
-            if getattr(self, field.name) < 1:
-                raise ValueError(f"{field.name} must be >= 1, got {getattr(self, field.name)}")
+        for name in ("max_tenants_per_group", "max_groups", "max_frames_per_request"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"{name} must be >= 1, got {getattr(self, name)}")
+        if self.max_pending_frames is not None and self.max_pending_frames < 1:
+            raise ValueError(
+                f"max_pending_frames must be >= 1 or None, got {self.max_pending_frames}"
+            )
+        if self.shed_deadline_s is not None and self.shed_deadline_s < 0:
+            raise ValueError(
+                f"shed_deadline_s must be >= 0 or None, got {self.shed_deadline_s}"
+            )
 
 
 class AdmissionController:
@@ -73,11 +151,23 @@ class AdmissionController:
             )
         return key
 
-    def validate_request(self, tenant: str, ticks: int) -> None:
-        """Bound one submit chunk (called before the queue accepts it)."""
+    def validate_request(self, tenant: str, ticks: int, pending_frames: int | None = None) -> None:
+        """Bound one submit chunk (called before the queue accepts it).
+
+        pending_frames: the target group's queued + backlogged tick
+        frames; when given and `max_pending_frames` is set, a request
+        that would overflow the bound raises `QueueOverflowError`.
+        """
         if ticks > self.policy.max_frames_per_request:
             raise AdmissionError(
                 f"tenant {tenant!r} submitted {ticks} tick frames in one request "
                 f"(max_frames_per_request={self.policy.max_frames_per_request}); "
                 f"split the stream into smaller chunks"
+            )
+        cap = self.policy.max_pending_frames
+        if cap is not None and pending_frames is not None and pending_frames + ticks > cap:
+            raise QueueOverflowError(
+                f"tenant {tenant!r} rejected: group already holds {pending_frames} "
+                f"pending tick frames and {ticks} more would exceed "
+                f"max_pending_frames={cap}; pump the engine (or wait) and retry"
             )

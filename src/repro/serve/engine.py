@@ -6,11 +6,12 @@ served concurrently through precompiled `InterfaceSession`s instead of
 one offline ``session.run`` at a time.  The moving parts:
 
   admission   `AdmissionController` bounds groups/lanes/request size and
-              assigns each tenant a session-compatibility key.
-  grouping    tenants sharing (config, connectivity) become *lanes* of a
-              `TenantGroup`, which owns one precompiled session; the
-              whole group steps under a single jit via the masked
-              ``run_batched`` (vmap over the lane axis).
+              assigns each tenant a session-compatibility key; frames are
+              validated (shape/dtype/finite) before any device work.
+  grouping    tenants sharing (config, connectivity, fault) become
+              *lanes* of a `TenantGroup`, which owns one precompiled
+              session; the whole group steps under a single jit via the
+              masked ``run_batched`` (vmap over the lane axis).
   queueing    per-group `IngestQueue` with size-/deadline-triggered
               micro-batching (`repro.serve.queue`).
   batching    flushed requests pack into fixed-shape (lanes, flush_ticks)
@@ -25,6 +26,33 @@ one offline ``session.run`` at a time.  The moving parts:
               (events/sec, tick-latency p50/p99, queue depth), fleet-wide
               percentiles via `Histogram.merge`, JSONL sink + records
               shaped for ``python -m repro.obs.report``.
+
+Graceful degradation (PR 8): the engine survives a hostile environment
+instead of assuming the happy path -
+
+  faults      an optional `repro.ft.chaos.ChaosInjector` fires a seeded
+              `FaultPlan` at configured pump rounds; tenants may also
+              compile a fabric-level `repro.ft.faults.FaultModel` into
+              their session (via ``TenantSpec.fault``).
+  retries     transient transfer/execute faults retry under a bounded
+              exponential-backoff `RetryPolicy`; the per-lane accumulator
+              commits only after a successful step, so a replayed chunk
+              can never double-count, and `RetriesExhaustedError`
+              restages unserved work back onto the backlog first - the
+              accounting identity submitted == served + shed + pending
+              holds through every failure.
+  health      a per-lane `HealthTracker` walks healthy -> degraded ->
+              quarantined; quarantined lanes are masked out of the shared
+              batched step *without recompiling* (mask rows, not shapes)
+              and probe back in after a cooldown.
+  shedding    queued requests older than ``AdmissionPolicy.shed_deadline_s``
+              are dropped at flush time as typed `DeadlineExceededError`s
+              (`shed_errors()`), and `QueueOverflowError` bounds pending
+              work at submit time.
+  watchdog    the `repro.ft.runner.Watchdog` observes per-flush wall time
+              on the engine registry (``serve.flush_ms`` /
+              ``serve.stragglers``), one telemetry substrate with
+              training.
 
 Minimal use:
 
@@ -52,11 +80,19 @@ from typing import Callable
 import jax
 import numpy as np
 
+from repro.ft.chaos import RetriesExhaustedError, TransientFaultError
+from repro.ft.runner import Watchdog
 from repro.interface import Interface
 from repro.interface.stats import StepStats
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
-from repro.serve.admission import AdmissionController, AdmissionPolicy
+from repro.serve.admission import (
+    AdmissionController,
+    AdmissionPolicy,
+    DeadlineExceededError,
+    validate_frames,
+)
+from repro.serve.health import HealthPolicy, HealthTracker, RetryPolicy
 from repro.serve.queue import IngestQueue
 from repro.serve.tenant import TenantSpec, default_connectivity
 from repro.serve.tenant import compat_key as _compat_key
@@ -74,23 +110,29 @@ class _Chunk:
 class TenantGroup:
     """Tenants sharing one precompiled session, stepped as vmap lanes."""
 
-    def __init__(self, key, config, params, queue: IngestQueue):
+    def __init__(self, key, config, params, queue: IngestQueue, fault=None):
         self.key = key
         self.config = config
         self.params = params
         self.queue = queue
+        self.fault = fault
         with obs_trace.span("serve.group_compile", cores=config.cores):
-            self.session = Interface(config).compile(params)
+            self.session = Interface(config).compile(params, fault=fault)
         self.specs: dict = {}  # name -> TenantSpec
         self.lanes: dict = {}  # name -> lane index
         self._backlog: dict = {}  # name -> deque of host frame arrays
         self._acc = None  # per-lane StepStats carry ((lanes,) leaves)
+        # per-lane global tick offset of the compiled fault's drop stream
+        self._lane_ticks = np.zeros((0,), np.int32)
 
     def add(self, spec: TenantSpec) -> int:
         lane = len(self.lanes)
         self.specs[spec.name] = spec
         self.lanes[spec.name] = lane
         self._backlog[spec.name] = collections.deque()
+        self._lane_ticks = np.concatenate(
+            [self._lane_ticks, np.zeros((1,), np.int32)]
+        )
         if self._acc is not None:
             # new lane: its accumulator row starts at zero
             self._acc = self._commit(
@@ -125,6 +167,14 @@ class TenantGroup:
             )
         return self._acc
 
+    def fault_tick0(self) -> np.ndarray:
+        """(lanes,) global tick offsets for the compiled fault stream."""
+        return self._lane_ticks
+
+    def advance_fault_ticks(self, flush_ticks: int) -> None:
+        """One chunk executed: every lane's fault window moved forward."""
+        self._lane_ticks = self._lane_ticks + np.int32(flush_ticks)
+
     def stage(self, requests) -> None:
         """Append flushed requests to the per-lane host backlog."""
         cfg = self.config
@@ -140,12 +190,19 @@ class TenantGroup:
     def backlog_ticks(self) -> int:
         return sum(f.shape[0] for q in self._backlog.values() for f in q)
 
-    def take_chunk(self, flush_ticks: int) -> _Chunk | None:
+    def backlog_ticks_of(self, name: str) -> int:
+        return sum(f.shape[0] for f in self._backlog[name])
+
+    def take_chunk(self, flush_ticks: int, skip=frozenset()) -> _Chunk | None:
         """Pack up to ``flush_ticks`` backlog ticks per lane, left-aligned.
 
         Shapes are fixed at (lanes, flush_ticks, ...) regardless of how
         much backlog exists, so the jitted batched step compiles once per
         lane count - partial chunks ride the mask, not a new shape.
+
+        skip: lane names (quarantined tenants) left out of this chunk -
+        their backlog is retained untouched and their mask row stays
+        all-False, so degradation never changes shapes or the jit cache.
         """
         b = len(self.lanes)
         cfg = self.config
@@ -153,6 +210,8 @@ class TenantGroup:
         spikes = np.zeros((b, flush_ticks, cfg.cores, cfg.neurons_per_core), bool)
         mask = np.zeros((b, flush_ticks), bool)
         for name, lane in self.lanes.items():
+            if name in skip:
+                continue
             queue = self._backlog[name]
             t = 0
             while queue and t < flush_ticks:
@@ -177,7 +236,9 @@ class ServeEngine:
                        chunk shapes - and the jit cache - stay stable.
     flush_deadline_s:  max age of the oldest queued request before a
                        partial batch flushes anyway (0 = always ready).
-    policy:            `AdmissionPolicy` capacity limits.
+    policy:            `AdmissionPolicy` capacity limits (now including
+                       ``max_pending_frames`` backpressure and the
+                       ``shed_deadline_s`` shed bound).
     registry:          `MetricsRegistry` receiving per-tenant counters and
                        histograms (a private one by default).
     sink:              optional `JsonlSink`; `emit_report()` appends one
@@ -186,6 +247,17 @@ class ServeEngine:
                        (tests/benchmarks; unbounded memory under real
                        sustained load, so off by default).
     clock:             injectable monotonic clock (deadline tests).
+    chaos:             optional `repro.ft.chaos.ChaosInjector` firing a
+                       seeded `FaultPlan` at this engine's pump rounds.
+    retry:             `RetryPolicy` for transient transfer/execute
+                       faults (bounded exponential backoff).
+    health:            `HealthPolicy` thresholds of the per-lane state
+                       machine (quarantine/probe/recover).
+    watchdog:          optional `repro.ft.runner.Watchdog`; by default
+                       one is created on this engine's registry with the
+                       ``serve`` prefix (flush wall-time histogram +
+                       straggler counter).
+    sleep:             injectable backoff sleep (fake-clock tests).
     """
 
     def __init__(
@@ -198,6 +270,11 @@ class ServeEngine:
         sink: obs_metrics.JsonlSink | None = None,
         keep_currents: bool = False,
         clock: Callable[[], float] = time.monotonic,
+        chaos=None,
+        retry: RetryPolicy | None = None,
+        health: HealthPolicy | None = None,
+        watchdog: Watchdog | None = None,
+        sleep: Callable[[float], None] = time.sleep,
     ):
         if flush_ticks < 1:
             raise ValueError(f"flush_ticks must be >= 1, got {flush_ticks}")
@@ -208,12 +285,22 @@ class ServeEngine:
         self.sink = sink
         self.keep_currents = keep_currents
         self.clock = clock
+        self.chaos = chaos
+        self.retry = retry or RetryPolicy()
+        self.health = HealthTracker(health, registry=self.registry, clock=clock)
+        self.watchdog = watchdog or Watchdog(registry=self.registry, prefix="serve")
+        self._sleep = sleep
         self.groups: dict = {}  # compat key -> TenantGroup
         self._tenant_group: dict = {}  # tenant name -> TenantGroup
         self._rounds: dict = {}  # tenant name -> scenario round counter
         self._served: dict = {}  # tenant name -> ticks served
+        self._submitted: dict = {}  # tenant name -> ticks submitted
+        self._shed: dict = {}  # tenant name -> ticks shed past deadline
         self._events_seen: dict = {}  # tenant name -> cumulative events read
         self._currents: dict = {}  # tenant name -> list of (t_i, C, N) arrays
+        self._shed_log: collections.deque = collections.deque(maxlen=256)
+        self._round = 0  # pump round counter (the chaos plan's time axis)
+        self._faulted_this_round: set = set()  # lanes faulted in this pump
         self._busy_s = 0.0
         self._ticks = 0
         self._events = 0.0
@@ -241,8 +328,9 @@ class ServeEngine:
                 flush_frames=self.flush_ticks,
                 flush_deadline_s=self.flush_deadline_s,
                 clock=self.clock,
+                frame_shape=(spec.config.cores, spec.config.neurons_per_core),
             )
-            group = TenantGroup(key, spec.config, params, queue)
+            group = TenantGroup(key, spec.config, params, queue, fault=spec.fault)
             self.groups[key] = group
         elif params is not None:
             raise ValueError(
@@ -253,22 +341,33 @@ class ServeEngine:
         self._tenant_group[spec.name] = group
         self._rounds[spec.name] = 0
         self._served[spec.name] = 0
+        self._submitted[spec.name] = 0
+        self._shed[spec.name] = 0
         self._events_seen[spec.name] = 0.0
         self._currents[spec.name] = []
+        self.health.add(spec.name)
         return spec
 
     def submit(self, tenant: str, frames) -> None:
-        """Enqueue (ticks, cores, neurons_per_core) bool frames."""
+        """Enqueue (ticks, cores, neurons_per_core) bool frames.
+
+        Frames are validated host-side first (`FrameValidationError` on
+        wrong shape/dtype or non-finite values - nothing malformed ever
+        reaches the jitted step), then bounded (`AdmissionError` /
+        `QueueOverflowError`) against the group's pending work.
+        """
         group = self._group_of(tenant)
-        frames = np.asarray(frames)
         cfg = group.config
-        if frames.ndim != 3 or frames.shape[1:] != (cfg.cores, cfg.neurons_per_core):
-            raise ValueError(
-                f"tenant {tenant!r}: frames shaped {frames.shape} do not match the group "
-                f"fabric (ticks, {cfg.cores}, {cfg.neurons_per_core})"
-            )
-        self.admission.validate_request(tenant, int(frames.shape[0]))
+        frames = validate_frames(
+            frames, shape=(cfg.cores, cfg.neurons_per_core), tenant=tenant
+        )
+        self.admission.validate_request(
+            tenant,
+            int(frames.shape[0]),
+            pending_frames=group.queue.pending_frames() + group.backlog_ticks(),
+        )
         group.queue.submit(tenant, frames)
+        self._submitted[tenant] += int(frames.shape[0])
 
     def submit_scenario(self, tenant: str, ticks: int) -> None:
         """Generate and enqueue one round of the tenant's traffic scenario."""
@@ -293,15 +392,27 @@ class ServeEngine:
 
         Returns the number of live ticks served.  ``force`` flushes
         regardless of the micro-batch triggers (drain semantics).
+
+        Each pump is one *round* of the chaos clock: quarantine cooldowns
+        age first, then this round's scheduled lane faults land, then
+        expired requests are shed, and finally every group steps with its
+        quarantined lanes masked out.
         """
+        self._round += 1
+        self.health.advance()
+        self._faulted_this_round.clear()
+        if self.chaos is not None:
+            for ev in self.chaos.lane_faults(self._round):
+                self._lane_fault(ev)
         ticks_done = 0
         depth_hist = self.registry.histogram("serve.queue_depth")
         for group in self.groups.values():
             depth_hist.add(group.queue.depth())
-            group.stage(group.queue.poll(force=force))
+            group.stage(self._shed_expired(group.queue.poll(force=force)))
+            skip = {n for n in group.lanes if not self.health.usable(n)}
             chunks = []
             while True:
-                chunk = group.take_chunk(self.flush_ticks)
+                chunk = group.take_chunk(self.flush_ticks, skip=skip)
                 if chunk is None:
                     break
                 chunks.append(chunk)
@@ -309,7 +420,12 @@ class ServeEngine:
         return ticks_done
 
     def drain(self) -> int:
-        """Serve until every queue and backlog is empty; returns ticks."""
+        """Serve until every queue and backlog is empty; returns ticks.
+
+        Quarantined lanes hold their backlog, so a drain keeps pumping -
+        aging cooldowns - until every lane has recovered and served; it
+        terminates because quarantine is always finite.
+        """
         total = 0
         while True:
             served = self.pump(force=True)
@@ -319,6 +435,106 @@ class ServeEngine:
             ):
                 return total
 
+    def _shed_expired(self, requests) -> list:
+        """Drop queued requests older than the policy's shed deadline.
+
+        Each shed is recorded as a typed `DeadlineExceededError` (see
+        `shed_errors`) and counted - shed ticks stay part of the
+        accounting identity, they just move to the ``shed`` column.
+        """
+        limit = self.admission.policy.shed_deadline_s
+        if limit is None or not requests:
+            return requests
+        now = self.clock()
+        kept = []
+        for req in requests:
+            age = now - req.enqueued_at
+            if age <= limit:
+                kept.append(req)
+                continue
+            err = DeadlineExceededError(
+                f"tenant {req.tenant!r}: request aged {age:.4f}s in queue "
+                f"(shed_deadline_s={limit}); {req.ticks} tick frames shed"
+            )
+            self._shed_log.append(err)
+            self._shed[req.tenant] = self._shed.get(req.tenant, 0) + req.ticks
+            self.registry.counter("serve.shed").inc()
+            self.registry.counter("serve.shed_ticks").inc(req.ticks)
+        return kept
+
+    def _lane_fault(self, ev) -> None:
+        """One injected lane fault: advance the tenant's health machine."""
+        if ev.tenant not in self._tenant_group:
+            self.registry.counter("serve.faults.unknown_lane").inc()
+            return
+        self.registry.counter("serve.faults").inc()
+        self._faulted_this_round.add(ev.tenant)
+        self.health.record_failure(ev.tenant)
+
+    def _with_retries(self, what: str, fn):
+        """Run ``fn`` with bounded exponential backoff on transient faults.
+
+        Only `TransientFaultError`s are retried; anything else (a real
+        bug) propagates immediately.  After the budget is spent a
+        `RetriesExhaustedError` chains the last fault.  A successful
+        retry records the episode in ``serve.recovery_ms``.
+        """
+        policy = self.retry
+        delay = policy.backoff_base_s
+        t_first = None
+        for attempt in range(policy.max_retries + 1):
+            try:
+                out = fn()
+            except TransientFaultError as e:
+                self.registry.counter("serve.faults").inc()
+                self.registry.counter("serve.retries").inc()
+                self.registry.counter(f"serve.retries.{what}").inc()
+                if t_first is None:
+                    t_first = self.clock()
+                if attempt >= policy.max_retries:
+                    self.registry.counter("serve.retries_exhausted").inc()
+                    raise RetriesExhaustedError(
+                        f"{what} still failing after {policy.max_retries} "
+                        f"retries (backoff from {policy.backoff_base_s}s)"
+                    ) from e
+                self._sleep(delay)
+                delay *= policy.backoff_factor
+                continue
+            if t_first is not None:
+                self.registry.counter("serve.retry_recoveries").inc()
+                self.registry.histogram("serve.recovery_ms").add(
+                    max(self.clock() - t_first, 0.0) * 1e3
+                )
+            return out
+        raise AssertionError("unreachable")  # loop always returns or raises
+
+    def _restage(self, group: TenantGroup, chunks: list) -> None:
+        """Return unserved chunks to the front of the backlog, in order.
+
+        Called before a `RetriesExhaustedError` propagates: the ticks a
+        failed chunk carried go back to ``pending``, keeping
+        submitted == served + shed + pending true even across hard
+        failures (and letting a later pump serve them).
+        """
+        for chunk in reversed(chunks):
+            for name, lane in group.lanes.items():
+                took = int(chunk.took[lane])
+                if took:
+                    group._backlog[name].appendleft(
+                        np.asarray(chunk.spikes[lane, :took])
+                    )
+
+    def _step(self, group: TenantGroup, spikes, mask):
+        """One batched masked step (the unit a retry replays)."""
+        if self.chaos is not None:
+            self.chaos.on_execute(self._round)
+        kw = {}
+        if group.session.fault is not None and group.session.fault.perturbs_spikes:
+            kw["fault_tick0"] = group.fault_tick0()
+        return group.session.run_batched(
+            spikes, mask=mask, stats0=group.lane_stats(), **kw
+        )
+
     def _execute(self, group: TenantGroup, chunks: list) -> int:
         """Step one group through its chunks with double-buffered transfer.
 
@@ -326,28 +542,56 @@ class ServeEngine:
         step is dispatched but before its results are blocked on, so the
         host->device copy overlaps device compute; on accelerators the
         masked jit additionally donates the spike/accumulator buffers.
+
+        Fault handling: every transfer and step runs under
+        `_with_retries`; the group accumulator commits only *after* a
+        successful step (a replayed chunk can never double-count), and on
+        `RetriesExhaustedError` the unserved chunks are restaged before
+        the error propagates.
         """
         if not chunks:
             return 0
         ticks_done = 0
-        staged = self._transfer(chunks[0])
+        try:
+            staged = self._with_retries("transfer", lambda: self._transfer(chunks[0]))
+        except RetriesExhaustedError:
+            self._restage(group, chunks)
+            raise
         for i, chunk in enumerate(chunks):
             spikes, mask = staged
             t0 = self.clock()
+            transfer_err = None
             with obs_trace.span("serve.step", lanes=len(group.lanes)):
-                currents, acc = group.session.run_batched(
-                    spikes, mask=mask, stats0=group.lane_stats()
-                )
+                try:
+                    currents, acc = self._with_retries(
+                        "execute", lambda: self._step(group, spikes, mask)
+                    )
+                except RetriesExhaustedError:
+                    self._restage(group, chunks[i:])
+                    raise
                 if i + 1 < len(chunks):
-                    staged = self._transfer(chunks[i + 1])
+                    try:
+                        staged = self._with_retries(
+                            "transfer", lambda: self._transfer(chunks[i + 1])
+                        )
+                    except RetriesExhaustedError as e:
+                        transfer_err = e
                 jax.block_until_ready((currents, acc))
             wall_s = self.clock() - t0
             group._acc = acc
+            group.advance_fault_ticks(self.flush_ticks)
+            self.watchdog.observe(wall_s)
             self._record(group, chunk, currents, acc, wall_s)
             ticks_done += int(chunk.took.sum())
+            if transfer_err is not None:
+                # chunk i is fully recorded; only i+1.. go back to pending
+                self._restage(group, chunks[i + 1 :])
+                raise transfer_err
         return ticks_done
 
     def _transfer(self, chunk: _Chunk):
+        if self.chaos is not None:
+            self.chaos.on_transfer(self._round)
         with obs_trace.span("serve.device_transfer"):
             return jax.device_put((chunk.spikes, chunk.mask))
 
@@ -367,6 +611,11 @@ class ServeEngine:
             fleet_events += delta
             self.registry.counter(f"tenant.{name}.events").inc(delta)
             self.registry.histogram(f"tenant.{name}.tick_ms").add(tick_ms)
+            if name not in self._faulted_this_round:
+                # a lane that faulted *this* round doesn't get recovery
+                # credit for also serving in it - its streak must survive
+                # a clean round first
+                self.health.record_success(name)
             if self.keep_currents:
                 self._currents[name].append(np.asarray(currents[lane, :took]))
         self.registry.counter("serve.flushes").inc()
@@ -382,12 +631,18 @@ class ServeEngine:
         so compile time never lands in the latency percentiles.  The
         per-lane device accumulators are NOT reset - they carry the
         bit-identity contract - only the host-side bookkeeping is.
+        Accounting columns (submitted/shed) reset together with served,
+        so the closure identity restarts from zero; reset with pending
+        work still queued and it will read as over-served until drained.
         """
         self.registry.counters.clear()
         self.registry.histograms.clear()
         for name in self._served:
             self._served[name] = 0
+            self._submitted[name] = 0
+            self._shed[name] = 0
             self._currents[name].clear()
+        self._shed_log.clear()
         self._busy_s = 0.0
         self._ticks = 0
         self._events = 0.0
@@ -400,6 +655,49 @@ class ServeEngine:
         if tenant is not None:
             return self._served[tenant]
         return self._ticks
+
+    def ticks_submitted(self, tenant: str | None = None) -> int:
+        if tenant is not None:
+            return self._submitted[tenant]
+        return sum(self._submitted.values())
+
+    def ticks_shed(self, tenant: str | None = None) -> int:
+        if tenant is not None:
+            return self._shed.get(tenant, 0)
+        return sum(self._shed.values())
+
+    def shed_errors(self) -> list:
+        """The typed `DeadlineExceededError`s of recent sheds (bounded)."""
+        return list(self._shed_log)
+
+    def lane_health(self, tenant: str) -> str:
+        """The tenant's health state (``healthy``/``degraded``/``quarantined``)."""
+        self._group_of(tenant)  # raise the canonical unknown-tenant error
+        return self.health.state(tenant).value
+
+    def accounting(self) -> dict:
+        """Per-tenant work ledger and whether it closes exactly.
+
+        For every tenant, ``submitted == served + shed + pending`` must
+        hold at any quiescent point - through retries, quarantines, and
+        sheds.  The chaos soak asserts ``closes`` after every drain.
+        """
+        per: dict = {}
+        for group in self.groups.values():
+            queued = group.queue.pending_by_tenant()
+            for name in group.lanes:
+                pending = queued.get(name, 0) + group.backlog_ticks_of(name)
+                per[name] = {
+                    "submitted": self._submitted[name],
+                    "served": self._served[name],
+                    "shed": self._shed.get(name, 0),
+                    "pending": int(pending),
+                }
+        closes = all(
+            v["submitted"] == v["served"] + v["shed"] + v["pending"]
+            for v in per.values()
+        )
+        return {"tenants": per, "closes": closes}
 
     def events_per_sec(self) -> float:
         """Sustained routed events/sec over engine step wall clock."""
@@ -421,14 +719,40 @@ class ServeEngine:
         lane = group.lanes[tenant]
         return jax.tree.map(lambda x: np.asarray(x)[lane], group.lane_stats())
 
+    def _fault_summary(self) -> dict:
+        """Non-zero fault/degradation counters, report-shaped."""
+        names = {
+            "injected": "serve.faults",
+            "retries": "serve.retries",
+            "retries_exhausted": "serve.retries_exhausted",
+            "retry_recoveries": "serve.retry_recoveries",
+            "shed_requests": "serve.shed",
+            "shed_ticks": "serve.shed_ticks",
+            "degraded": "serve.degraded",
+            "quarantines": "serve.quarantines",
+            "probes": "serve.probes",
+            "recoveries": "serve.recoveries",
+            "stragglers": "serve.stragglers",
+        }
+        out = {}
+        for label, counter in names.items():
+            c = self.registry.counters.get(counter)
+            if c is not None and c.value:
+                out[label] = int(c.value)
+        if self.chaos is not None:
+            for kind, n in sorted(self.chaos.injected.items()):
+                out[f"chaos_{kind}"] = int(n)
+        return out
+
     def serve_report(self) -> list:
         """Per-tenant records plus one fleet record, report-CLI shaped.
 
         Tenant records carry ``stats_per_tick`` (so ``python -m
         repro.obs.report`` renders the per-tier breakdown per tenant) and
         tick-latency percentiles; the fleet record merges every tenant's
-        latency histogram (`Histogram.merge`) and reports sustained
-        ``events_per_sec``.
+        latency histogram (`Histogram.merge`), reports sustained
+        ``events_per_sec``, and - when any fault machinery fired - a
+        ``faults`` counter dict plus recovery-time percentiles.
         """
         records = []
         fleet_hist = None
@@ -442,9 +766,14 @@ class ServeEngine:
                 "cores": group.config.cores,
                 "neurons_per_core": group.config.neurons_per_core,
                 "ticks": served,
+                "submitted": self._submitted[name],
+                "shed_ticks": self._shed.get(name, 0),
+                "health": self.health.state(name).value,
                 "events": self._events_seen[name],
                 "queue_depth": group.queue.depth(),
             }
+            if spec.fault is not None:
+                rec["fault"] = spec.fault.describe()
             hist = self.registry.histograms.get(f"tenant.{name}.tick_ms")
             if hist is not None and hist.count:
                 summary = hist.summary()
@@ -473,6 +802,16 @@ class ServeEngine:
                 tick_ms_p50=summary["p50"],
                 tick_ms_p95=summary["p95"],
                 tick_ms_p99=summary["p99"],
+            )
+        faults = self._fault_summary()
+        if faults:
+            fleet["faults"] = faults
+        recovery = self.registry.histograms.get("serve.recovery_ms")
+        if recovery is not None and recovery.count:
+            summary = recovery.summary()
+            fleet.update(
+                recovery_ms_p50=summary["p50"],
+                recovery_ms_p99=summary["p99"],
             )
         records.append(fleet)
         return records

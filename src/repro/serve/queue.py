@@ -13,6 +13,12 @@ once (a *flush*).  Two triggers end the filling phase:
 ``flush_deadline_s=0`` makes any non-empty queue ready - the synchronous
 mode benchmarks use.  The clock is injectable so tests can drive the
 deadline deterministically.
+
+Robustness (PR 8): `submit` validates frames up front - wrong
+rank/shape, non-numeric dtype, and non-finite values raise a typed
+`FrameValidationError` (also a ValueError) *before* anything reaches the
+device; an optional ``max_pending_frames`` bound raises
+`QueueOverflowError` instead of queueing unboundedly under backpressure.
 """
 
 from __future__ import annotations
@@ -22,6 +28,8 @@ import dataclasses
 import threading
 import time
 from typing import Any, Callable
+
+from repro.serve.admission import QueueOverflowError, validate_frames
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,29 +53,57 @@ class IngestQueue:
         flush_frames: int = 64,
         flush_deadline_s: float = 0.005,
         clock: Callable[[], float] = time.monotonic,
+        max_pending_frames: int | None = None,
+        frame_shape: tuple | None = None,
     ):
         if flush_frames < 1:
             raise ValueError(f"flush_frames must be >= 1, got {flush_frames}")
         if flush_deadline_s < 0:
             raise ValueError(f"flush_deadline_s must be >= 0, got {flush_deadline_s}")
+        if max_pending_frames is not None and max_pending_frames < 1:
+            raise ValueError(
+                f"max_pending_frames must be >= 1 or None, got {max_pending_frames}"
+            )
         self.flush_frames = flush_frames
         self.flush_deadline_s = flush_deadline_s
+        self.max_pending_frames = max_pending_frames
+        self.frame_shape = tuple(frame_shape) if frame_shape is not None else None
         self.clock = clock
         self._lock = threading.Lock()
         self._items: collections.deque = collections.deque()
         self._frames = 0
 
     def submit(self, tenant: str, frames) -> TickRequest:
-        """Enqueue one chunk of tick frames for a tenant."""
-        if frames.ndim != 3 or frames.shape[0] < 1:
-            raise ValueError(
-                f"frames must be (ticks >= 1, cores, neurons_per_core), got shape {frames.shape}"
-            )
+        """Enqueue one validated chunk of tick frames for a tenant.
+
+        Raises `FrameValidationError` on malformed frames and
+        `QueueOverflowError` when ``max_pending_frames`` would be
+        exceeded - both *before* the request is queued or anything
+        touches the device.
+        """
+        frames = validate_frames(frames, shape=self.frame_shape, tenant=tenant)
         req = TickRequest(tenant=tenant, frames=frames, enqueued_at=self.clock())
         with self._lock:
+            if (
+                self.max_pending_frames is not None
+                and self._frames + req.ticks > self.max_pending_frames
+            ):
+                raise QueueOverflowError(
+                    f"tenant {tenant!r} rejected: queue holds {self._frames} pending "
+                    f"tick frames and {req.ticks} more would exceed "
+                    f"max_pending_frames={self.max_pending_frames}"
+                )
             self._items.append(req)
             self._frames += req.ticks
         return req
+
+    def pending_by_tenant(self) -> dict:
+        """tenant -> queued tick frames (accounting-closure bookkeeping)."""
+        with self._lock:
+            out: dict = {}
+            for req in self._items:
+                out[req.tenant] = out.get(req.tenant, 0) + req.ticks
+            return out
 
     def depth(self) -> int:
         """Queued requests (the queue-depth metric the engine samples)."""

@@ -22,6 +22,7 @@ import jax
 
 import repro.core  # noqa: F401  (initialize core first: breaks the config<->core cycle)
 from repro import traffic
+from repro.ft.faults import FaultModel
 from repro.interface.config import InterfaceConfig, as_interface_config
 
 
@@ -39,6 +40,12 @@ class TenantSpec:
     connectivity_seed:  seed of the shared fabric connectivity; part of
                         the compatibility key - tenants only share a
                         session when they share (config, connectivity).
+    fault:              optional `repro.ft.faults.FaultModel` compiled
+                        into this tenant's session (fault-injection
+                        studies).  Part of the compatibility key, so
+                        faulted tenants never share a session with clean
+                        ones - which is what keeps non-faulted tenants
+                        bit-identical to a fault-free run.
     """
 
     name: str
@@ -47,11 +54,19 @@ class TenantSpec:
     scenario_params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     seed: int = 0
     connectivity_seed: int = 0
+    fault: FaultModel | None = None
 
     def __post_init__(self):
         if not self.name:
             raise ValueError("tenant name must be non-empty")
         object.__setattr__(self, "config", as_interface_config(self.config))
+        if self.fault is not None:
+            if not isinstance(self.fault, FaultModel):
+                raise ValueError(
+                    f"tenant {self.name!r}: fault must be a FaultModel, "
+                    f"got {type(self.fault).__name__}"
+                )
+            self.fault.validate(self.config)
         # fail at registration, not first flush, on unknown scenarios/params
         spec = traffic.get_scenario(self.scenario)
         unknown = sorted(set(self.scenario_params) - set(spec.defaults))
@@ -89,10 +104,11 @@ def compat_key(spec: TenantSpec) -> tuple:
 
     Tenants mapping to the same key are guaranteed steppable as lanes of
     one `InterfaceSession.run_batched` call: the session binds (config,
-    connectivity), and both are pinned here.  Scenario/seed stay out - a
-    group legitimately mixes workloads.
+    connectivity) - and, when set, the compiled-in `FaultModel` - so all
+    three are pinned here.  Scenario/seed stay out - a group legitimately
+    mixes workloads.
     """
-    return (spec.config, spec.connectivity_seed)
+    return (spec.config, spec.connectivity_seed, spec.fault)
 
 
 def default_connectivity(config: InterfaceConfig, connectivity_seed: int):

@@ -1,0 +1,163 @@
+"""Chaos soak of the serving engine (``slow`` tier) - PR 8's capstone.
+
+Drives a mixed-scenario tenant fleet (one tenant additionally carrying a
+fabric-level `FaultModel`) through ~40 rounds of load while a seeded
+`FaultPlan.mixed` fires transfer failures, execute failures, slow
+devices, and repeated lane faults at it, and asserts the graceful-
+degradation contract end to end:
+
+* **the engine recovers every time**: every chaos charge is delivered,
+  every hard failure (retry budget spent) restages its work and a later
+  pump serves it, and every lane ends the soak healthy;
+* **accounting closes exactly**: submitted == served + shed + pending
+  per tenant at every failure point and at the end (nothing shed here,
+  nothing lost);
+* **the jit cache never grows**: quarantine masking, retry replays, and
+  the faulted tenant's drop stream are all data - each group's masked
+  batched step stays at ONE compiled entry for the whole soak;
+* **clean tenants are undisturbed**: their currents are BIT-IDENTICAL
+  to the same fleet served by a chaos-free twin engine;
+* **host memory stays bounded** and the final report carries the fault
+  counters and recovery percentiles the obs CLI renders.
+"""
+
+import gc
+
+import numpy as np
+import pytest
+
+from repro.ft import ChaosInjector, FaultModel, FaultPlan, RetriesExhaustedError
+from repro.serve import HealthPolicy, RetryPolicy, ServeEngine, TenantSpec
+from tests.conformance.paths import small_config
+
+ROUNDS = 40
+TICKS_PER_ROUND = 16
+SCENARIOS = ("sparse_poisson", "hotspot_core", "synchronized_burst", "mixture", "clustered")
+FAULT = FaultModel(drop_rate=0.1, seed=13)  # the last tenant's lossy fabric
+
+
+def _specs(cfg):
+    specs = [TenantSpec(f"t{i}", cfg, scenario=sc, seed=i) for i, sc in enumerate(SCENARIOS)]
+    specs[-1] = TenantSpec(
+        specs[-1].name,
+        cfg,
+        scenario=specs[-1].scenario,
+        seed=len(SCENARIOS) - 1,
+        fault=FAULT,
+    )
+    return specs
+
+
+@pytest.mark.slow
+def test_chaos_soak_recovers_every_time():
+    cfg = small_config("binary_tree", "multicast_tree")
+    specs = _specs(cfg)
+    names = [s.name for s in specs]
+    plan = FaultPlan.mixed(names, rounds=ROUNDS, seed=11)
+    injector = ChaosInjector(plan, sleep=lambda s: None)
+    engine = ServeEngine(
+        flush_ticks=TICKS_PER_ROUND,
+        flush_deadline_s=0.0,
+        chaos=injector,
+        retry=RetryPolicy(max_retries=3, backoff_base_s=0.0),
+        health=HealthPolicy(quarantine_after=2, quarantine_rounds=2),
+        sleep=lambda s: None,
+        keep_currents=True,
+    )
+    calm = ServeEngine(flush_ticks=TICKS_PER_ROUND, flush_deadline_s=0.0, keep_currents=True)
+    for spec in specs:
+        engine.register(spec)
+        calm.register(spec)
+    assert len(engine.groups) == 2, "the faulted tenant gets its own group"
+    batched_fns = [
+        g.session._masked_cache["run_batched"]
+        for g in list(engine.groups.values()) + list(calm.groups.values())
+        if g.session._masked_cache is not None
+    ]
+
+    # warm round on both engines: pays compilation before the gc baseline
+    for e in (engine, calm):
+        for spec in specs:
+            e.submit_scenario(spec.name, TICKS_PER_ROUND)
+        e.drain()
+    gc.collect()
+    objects_before = len(gc.get_objects())
+
+    hard_failures = 0
+    for _ in range(ROUNDS - 1):
+        for e in (engine, calm):
+            for spec in specs:
+                e.submit_scenario(spec.name, TICKS_PER_ROUND)
+        calm.pump(force=True)
+        try:
+            engine.pump(force=True)
+        except RetriesExhaustedError:
+            hard_failures += 1
+            acct = engine.accounting()
+            assert acct["closes"], "ledger must close at every failure point"
+    # leftover charges (events scheduled at rounds the loop already
+    # passed but that found no work to hit) fire during the drain
+    while True:
+        try:
+            engine.drain()
+            break
+        except RetriesExhaustedError:
+            hard_failures += 1
+    calm.drain()
+
+    # -- the engine recovered every time -----------------------------------
+    assert injector.exhausted(), (
+        f"undelivered chaos charges: injected {injector.injected_total()} "
+        f"of {plan.total_charges()}"
+    )
+    assert injector.injected_total() == plan.total_charges()
+    for name in names:
+        assert engine.lane_health(name) == "healthy", name
+    total = ROUNDS * TICKS_PER_ROUND
+    for name in names:
+        assert engine.ticks_served(name) == total, name
+    acct = engine.accounting()
+    assert acct["closes"]
+    for name in names:
+        assert acct["tenants"][name] == {
+            "submitted": total,
+            "served": total,
+            "shed": 0,
+            "pending": 0,
+        }, name
+
+    # -- the jit cache never grew ------------------------------------------
+    for fn in batched_fns:
+        assert fn._cache_size() == 1, "chaos must not leak compiled entries"
+
+    # -- clean tenants bit-identical to the undisturbed twin ----------------
+    for name in names:
+        assert np.array_equal(engine.currents(name), calm.currents(name)), (
+            f"{name}: chaos perturbed a tenant's served currents"
+        )
+        a = engine.tenant_stats(name)._asdict()
+        b = calm.tenant_stats(name)._asdict()
+        for field, va in a.items():
+            assert float(np.asarray(va)) == float(np.asarray(b[field])), (name, field)
+
+    # -- host memory stays bounded -----------------------------------------
+    gc.collect()
+    growth = len(gc.get_objects()) - objects_before
+    assert growth < 50_000, f"host object growth over {ROUNDS} rounds: {growth}"
+
+    # -- the report carries the fault story ---------------------------------
+    fleet = engine.serve_report()[-1]
+    faults = fleet["faults"]
+    # slow_device charges stall rather than raise, so they count in the
+    # per-kind chaos tallies but not in the engine's fault counter
+    assert faults["injected"] == injector.injected_total() - injector.injected.get(
+        "slow_device", 0
+    )
+    for kind, fired in injector.injected.items():
+        assert faults[f"chaos_{kind}"] == fired
+    if faults.get("retry_recoveries"):
+        assert "recovery_ms_p50" in fleet
+    if hard_failures:
+        assert faults["retries_exhausted"] == hard_failures
+    lossy = next(r for r in engine.serve_report() if r.get("tenant") == specs[-1].name)
+    assert lossy["fault"] == FAULT.describe()

@@ -1,0 +1,318 @@
+"""Fault injection (`repro.ft`): fabric fault models and host chaos plans.
+
+Fabric layer (`repro.ft.faults.FaultModel`, compiled into a session):
+
+* a null model compiles as fault-free (bit-identical to a clean session);
+* dead cores neither emit nor receive: their currents are exactly zero
+  and fleet events can only shrink;
+* ``drop_rate=1`` silences the fabric entirely; intermediate rates are
+  deterministic in (seed, lane, global tick) - a stream served in chunks
+  with running ``fault_tick0`` offsets draws EXACTLY the same faults as
+  one uninterrupted run (the chaos soak's bit-identity hinges on this);
+* vmapped lanes fold their index into the drop stream, so identical
+  spikes on different lanes draw independent faults;
+* corrupted CAM entries misroute (finite degradation), never crash;
+* faults are data, not control flow: the jitted fault transform holds
+  ONE cache entry across chunk offsets, and ``fault_tick0`` is rejected
+  on sessions without a spike-perturbing fault.
+
+Host layer (`repro.ft.chaos`):
+
+* `FaultPlan.mixed` is deterministic in (tenants, rounds, seed), covers
+  every fault kind, and schedules every event inside [1, rounds];
+* a `ChaosInjector` fires every charge exactly once regardless of retry
+  interleaving, and reports exhaustion;
+* `FaultEvent` validates kinds/rounds/targets with explicit errors.
+
+Satellite: the seed-era `repro.ft.runner` Watchdog/FailureInjector now
+count onto `repro.obs.metrics` while keeping their legacy interface.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fabric
+from repro.ft import (
+    FAULT_KINDS,
+    ChaosInjector,
+    ExecuteFault,
+    FaultEvent,
+    FaultModel,
+    FaultPlan,
+    TransferFault,
+    TransientFaultError,
+)
+from repro.ft.runner import FailureInjector, Watchdog
+from repro.interface import Interface
+from repro.obs import metrics as obs_metrics
+from tests.conformance.paths import small_config
+
+TICKS = 12
+
+
+def _fabric(cfg, seed=0):
+    return fabric.random_connectivity(jax.random.PRNGKey(seed), cfg)
+
+
+def _spikes(cfg, ticks=TICKS, seed=3, lead=()):
+    shape = lead + (ticks, cfg.cores, cfg.neurons_per_core)
+    return jax.random.bernoulli(jax.random.PRNGKey(seed), 0.3, shape)
+
+
+# ---- FaultModel validation --------------------------------------------------
+
+
+def test_fault_model_validation():
+    with pytest.raises(ValueError, match="drop_rate"):
+        FaultModel(drop_rate=1.5)
+    with pytest.raises(ValueError, match="duplicates"):
+        FaultModel(dead_cores=(1, 1))
+    with pytest.raises(ValueError, match="non-negative"):
+        FaultModel(dead_cores=(-1,))
+    with pytest.raises(ValueError, match="corrupt_cam_entries"):
+        FaultModel(corrupt_cam_entries=-2)
+    cfg = small_config("binary_tree", "broadcast")
+    with pytest.raises(ValueError, match="out of range"):
+        FaultModel(dead_cores=(cfg.cores,)).validate(cfg)
+    with pytest.raises(ValueError, match="CAM slots"):
+        FaultModel(corrupt_cam_entries=10**6).validate(cfg)
+    # fits: no raise, and compile accepts it end to end
+    model = FaultModel(dead_cores=(0,), drop_rate=0.25, corrupt_cam_entries=2)
+    model.validate(cfg)
+    assert not model.is_null and model.perturbs_spikes
+    assert model.describe()["dead_cores"] == [0]
+
+
+def test_null_fault_compiles_as_fault_free():
+    cfg = small_config("binary_tree", "multicast_tree")
+    params = _fabric(cfg)
+    sp = _spikes(cfg)
+    clean = Interface(cfg).compile(params)
+    nulled = Interface(cfg).compile(params, fault=FaultModel())
+    assert FaultModel().is_null
+    assert nulled.fault is None  # null model normalized away at compile
+    cur_a, acc_a = clean.run(sp)
+    cur_b, acc_b = nulled.run(sp)
+    assert jnp.array_equal(cur_a, cur_b)
+    assert float(acc_a.events) == float(acc_b.events)
+    with pytest.raises(ValueError, match="fault_tick0"):
+        nulled.run(sp, fault_tick0=4)
+
+
+# ---- fabric-layer semantics -------------------------------------------------
+
+
+def test_dead_core_emits_and_receives_nothing():
+    cfg = small_config("binary_tree", "multicast_tree")
+    params = _fabric(cfg)
+    sp = _spikes(cfg)
+    dead = 1
+    cur_clean, acc_clean = Interface(cfg).compile(params).run(sp)
+    session = Interface(cfg).compile(params, fault=FaultModel(dead_cores=(dead,)))
+    cur, acc = session.run(sp)
+    assert np.asarray(cur)[:, dead, :].max() == 0.0, "dead core received current"
+    assert float(acc.events) <= float(acc_clean.events)
+    assert np.isfinite(np.asarray(cur)).all()
+
+
+def test_drop_rate_one_silences_the_fabric():
+    cfg = small_config("binary_tree", "broadcast")
+    session = Interface(cfg).compile(_fabric(cfg), fault=FaultModel(drop_rate=1.0))
+    cur, acc = session.run(_spikes(cfg))
+    assert float(jnp.abs(cur).max()) == 0.0
+    assert float(acc.events) == 0.0
+
+
+def test_chunked_drops_bit_identical_to_one_run():
+    cfg = small_config("binary_tree", "multicast_tree")
+    params = _fabric(cfg)
+    sp = _spikes(cfg)
+    session = Interface(cfg).compile(params, fault=FaultModel(drop_rate=0.4, seed=5))
+    cur_full, acc_full = session.run(sp)
+    t_split = TICKS // 2
+    cur_a, acc_a = session.run(sp[:t_split], fault_tick0=0)
+    cur_b, _ = session.run(sp[t_split:], fault_tick0=t_split)
+    assert jnp.array_equal(cur_full, jnp.concatenate([cur_a, cur_b]))
+    # sanity: the fault actually dropped something
+    _, acc_clean = Interface(cfg).compile(params).run(sp)
+    assert float(acc_full.events) < float(acc_clean.events)
+    assert float(acc_a.events) <= float(acc_full.events)
+
+
+def test_lanes_draw_independent_drop_streams():
+    cfg = small_config("binary_tree", "broadcast")
+    session = Interface(cfg).compile(_fabric(cfg), fault=FaultModel(drop_rate=0.5, seed=2))
+    one = _spikes(cfg, seed=7)
+    batched = jnp.stack([one, one, one])  # identical spikes per lane
+    cur, acc = session.run_batched(batched)
+    events = np.asarray(acc.events)
+    assert len({float(e) for e in events}) > 1, (
+        "identical lanes drew identical faults; lane index is not folded in"
+    )
+    # lane 0 of the batch == the solo run at the same offset
+    cur_solo, _ = session.run(one, fault_tick0=0)
+    assert jnp.array_equal(cur[0], cur_solo)
+
+
+def test_fault_jit_cache_stable_across_offsets():
+    cfg = small_config("binary_tree", "broadcast")
+    session = Interface(cfg).compile(_fabric(cfg), fault=FaultModel(drop_rate=0.3))
+    sp = _spikes(cfg, ticks=6)
+    for offset in (0, 6, 12, 99):
+        session.run(sp, fault_tick0=offset)
+    assert session._fault_cache["run"]._cache_size() == 1, (
+        "fault_tick0 must be a dynamic argument, not a recompile trigger"
+    )
+
+
+def test_fault_tick0_rejected_on_clean_sessions():
+    cfg = small_config("binary_tree", "broadcast")
+    session = Interface(cfg).compile(_fabric(cfg))
+    with pytest.raises(ValueError, match="fault_tick0"):
+        session.run(_spikes(cfg), fault_tick0=0)
+    # CAM corruption perturbs params, not spikes: still no tick offset
+    corrupted = Interface(cfg).compile(_fabric(cfg), fault=FaultModel(corrupt_cam_entries=4))
+    with pytest.raises(ValueError, match="fault_tick0"):
+        corrupted.run(_spikes(cfg), fault_tick0=0)
+
+
+def test_corrupt_cam_degrades_without_crashing():
+    cfg = small_config("binary_tree", "multicast_tree")
+    params = _fabric(cfg)
+    sp = _spikes(cfg)
+    session = Interface(cfg).compile(params, fault=FaultModel(corrupt_cam_entries=8, seed=9))
+    cur, acc = session.run(sp)
+    assert np.isfinite(np.asarray(cur)).all()
+    assert float(acc.events) >= 0.0
+    # determinism: same seed, same misroutes
+    redo = Interface(cfg).compile(params, fault=FaultModel(corrupt_cam_entries=8, seed=9))
+    again, _ = redo.run(sp)
+    assert jnp.array_equal(cur, again)
+
+
+# ---- host-layer chaos plans -------------------------------------------------
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(round=1, kind="meteor_strike")
+    with pytest.raises(ValueError, match="round"):
+        FaultEvent(round=0, kind="transfer_fail")
+    with pytest.raises(ValueError, match="times"):
+        FaultEvent(round=1, kind="transfer_fail", times=0)
+    with pytest.raises(ValueError, match="tenant"):
+        FaultEvent(round=1, kind="lane_fault")  # needs a target
+    with pytest.raises(ValueError, match="tenant"):
+        FaultEvent(round=1, kind="slow_device", tenant="t0")  # must not have one
+    with pytest.raises(TypeError, match="FaultEvent"):
+        FaultPlan(events=("not an event",))
+
+
+def test_mixed_plan_deterministic_and_in_range():
+    tenants = [f"t{i}" for i in range(4)]
+    plan = FaultPlan.mixed(tenants, rounds=20, seed=3)
+    again = FaultPlan.mixed(tenants, rounds=20, seed=3)
+    assert plan.events == again.events, "mixed plan must be seed-deterministic"
+    assert plan.events != FaultPlan.mixed(tenants, rounds=20, seed=4).events
+    assert set(ev.kind for ev in plan.events) == set(FAULT_KINDS)
+    assert all(1 <= ev.round <= 20 for ev in plan.events)
+    assert plan.total_charges() == sum(plan.kinds().values()) >= len(FAULT_KINDS)
+    # the minimum round budget still covers every kind, in range
+    tiny = FaultPlan.mixed(tenants, rounds=4, seed=0)
+    assert set(ev.kind for ev in tiny.events) == set(FAULT_KINDS)
+    assert all(ev.round <= 4 for ev in tiny.events)
+    with pytest.raises(ValueError, match="rounds"):
+        FaultPlan.mixed(tenants, rounds=3)
+    with pytest.raises(ValueError, match="tenant"):
+        FaultPlan.mixed([], rounds=8)
+
+
+def test_injector_fires_every_charge_exactly_once():
+    plan = FaultPlan(
+        events=(
+            FaultEvent(round=1, kind="transfer_fail", times=2),
+            FaultEvent(round=2, kind="execute_fail", times=1),
+            FaultEvent(round=2, kind="slow_device", times=2, delay_s=0.5),
+            FaultEvent(round=3, kind="lane_fault", tenant="t1", times=2),
+        )
+    )
+    slept = []
+    injector = ChaosInjector(plan, sleep=slept.append)
+    lane_hits = []
+    for round_ in range(1, 6):
+        for ev in injector.lane_faults(round_):
+            lane_hits.append((round_, ev.tenant))
+        # retry loop: keep attempting until the round's charges heal
+        for hook, err in (
+            (injector.on_transfer, TransferFault),
+            (injector.on_execute, ExecuteFault),
+        ):
+            for _ in range(8):
+                try:
+                    hook(round_)
+                    break
+                except err:
+                    continue
+    assert injector.exhausted()
+    assert injector.injected_total() == plan.total_charges() == 7
+    assert injector.injected == {
+        "transfer_fail": 2,
+        "execute_fail": 1,
+        "slow_device": 2,
+        "lane_fault": 2,
+    }
+    assert slept == [0.5, 0.5]
+    # one lane charge per pump: the times=2 event spans two rounds
+    assert lane_hits == [(3, "t1"), (4, "t1")]
+    # replays after exhaustion are clean no-ops
+    injector.on_transfer(9)
+    injector.on_execute(9)
+    assert injector.lane_faults(9) == []
+    assert injector.injected_total() == 7
+
+
+def test_chaos_error_ladder():
+    assert issubclass(TransferFault, TransientFaultError)
+    assert issubclass(ExecuteFault, TransientFaultError)
+    # before an event's round, nothing fires
+    injector = ChaosInjector(FaultPlan(events=(FaultEvent(round=5, kind="transfer_fail"),)))
+    injector.on_transfer(4)
+    assert not injector.injected
+    with pytest.raises(TransferFault):
+        injector.on_transfer(5)
+    assert injector.exhausted()
+
+
+# ---- satellite: runner counters on obs.metrics ------------------------------
+
+
+def test_watchdog_counts_onto_metrics_registry():
+    reg = obs_metrics.MetricsRegistry()
+    w = Watchdog(straggler_factor=3.0, registry=reg, prefix="ft")
+    for _ in range(6):
+        assert not w.observe(0.01)
+    assert w.observe(0.5), "a 50x step must flag as straggler"
+    assert w.stragglers == 1  # legacy attribute, now registry-backed
+    assert reg.counters["ft.stragglers"].value == 1
+    assert reg.histograms["ft.step_ms"].count == 7
+    # registry looked up per call: survives a warmup-style clear
+    reg.counters.clear()
+    reg.histograms.clear()
+    w.observe(0.9)
+    assert w.stragglers == 1 and reg.counters["ft.stragglers"].value == 1
+
+
+def test_failure_injector_counts_onto_metrics_registry():
+    reg = obs_metrics.MetricsRegistry()
+    injector = FailureInjector(fail_at_steps=(3,), registry=reg)
+    injector.check(2)
+    with pytest.raises(RuntimeError, match="injected failure at step 3"):
+        injector.check(3)
+    injector.check(3)  # fires once, then the drill is over
+    assert reg.counters["ft.injected_failures"].value == 1
+    # registry-less injectors (the seed-era interface) still work
+    bare = FailureInjector(fail_at_steps=(1,))
+    with pytest.raises(RuntimeError):
+        bare.check(1)
