@@ -34,6 +34,12 @@ baseline ungated.  When the payloads record different ``platform``s
 comparable: the gate warns and reports only instead of failing.  Set
 ``BENCH_BASELINE_SKIP=1`` to turn the whole gate into a report-only run
 (e.g. on known-slow debug builds).
+
+Independently of the baseline, sparsity-sweep records (schema_version >= 4)
+carry an in-run ``sparse_speedup`` (dense event tick / fused sparse tick,
+both timed in the candidate run): the ``sparsity_sparse_poisson`` record at
+DYNAPs scale (>= 16 cores x 256 neurons) must stay >= 3x or the gate fails
+even on platform mismatch, since the ratio is machine-relative.
 """
 
 from __future__ import annotations
@@ -62,6 +68,14 @@ THROUGHPUT_FIELD = "events_per_sec"
 # Absolute slack for the throughput gate (events/sec): guards the ratio
 # against blowing up on near-zero baselines, mirroring --min-delta-ms.
 MIN_DELTA_EPS = 1.0
+# Sparse-tick floor (schema_version >= 4): the sparsity sweep's
+# sparse_poisson record must keep the fused sparse tick >= this factor
+# faster than the dense event path *in the same run* - an in-run ratio,
+# so it gates even when absolute wall clocks are not baseline-comparable.
+SPARSE_SCENARIO = "sparsity_sparse_poisson"
+SPARSE_MIN_SPEEDUP = 3.0
+SPARSE_MIN_CORES = 16
+SPARSE_MIN_NEURONS = 256
 
 
 class RecordFormatError(ValueError):
@@ -170,6 +184,40 @@ def print_table(rows: list, current: dict, baseline: dict, threshold: float) -> 
             )
 
 
+def check_sparse_speedup(current: dict) -> tuple[list, bool]:
+    """The in-run sparse-tick floor: ``sparse_speedup`` on the sparsity
+    sweep's ``sparse_poisson`` record must stay >= `SPARSE_MIN_SPEEDUP`
+    at DYNAPs scale.  Independent of the baseline (both paths were timed
+    in the candidate run), so it is enforced even when platforms differ.
+    Payloads without sparsity records (schema_version < 4) pass."""
+    msgs, ok = [], True
+    for r in current.get("records", []):
+        if (r.get("scenario") != SPARSE_SCENARIO
+                or r.get("cores", 0) < SPARSE_MIN_CORES
+                or r.get("neurons_per_core", 0) < SPARSE_MIN_NEURONS):
+            continue
+        speedup = r.get("sparse_speedup")
+        if speedup is None:
+            msgs.append(
+                f"FAIL: {SPARSE_SCENARIO} record at {r['cores']}x"
+                f"{r['neurons_per_core']} lacks sparse_speedup; regenerate "
+                f"with the current benchmarks/noc_bench.py")
+            ok = False
+        elif speedup < SPARSE_MIN_SPEEDUP:
+            msgs.append(
+                f"FAIL: sparse tick only {speedup:.2f}x the dense event "
+                f"path on sparse_poisson at {r['cores']}x"
+                f"{r['neurons_per_core']} (floor {SPARSE_MIN_SPEEDUP}x, "
+                f"in-run ratio)")
+            ok = False
+        else:
+            msgs.append(
+                f"  sparse tick {speedup:.2f}x dense event path on "
+                f"sparse_poisson at {r['cores']}x{r['neurons_per_core']} "
+                f"(floor {SPARSE_MIN_SPEEDUP}x): ok")
+    return msgs, ok
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("current", help="BENCH_interface.json from this run")
@@ -192,6 +240,17 @@ def main(argv=None) -> int:
 
     with open(args.current) as f:
         current = json.load(f)
+
+    # Baseline-independent: both sides of the ratio come from the candidate
+    # run, so the sparse floor is checked before (and regardless of) the
+    # baseline comparison below.
+    sparse_msgs, sparse_ok = check_sparse_speedup(current)
+    for m in sparse_msgs:
+        print(m)
+    if not sparse_ok and not os.environ.get("BENCH_BASELINE_SKIP"):
+        print("FAIL: sparse tick below the in-run speedup floor")
+        return 1
+
     if not os.path.exists(args.baseline):
         print(f"no baseline at {args.baseline}; nothing to gate against")
         return 0

@@ -42,6 +42,14 @@ Sweeps:
    Chrome-trace JSON (open in Perfetto / chrome://tracing) of the
    compile / device-transfer / run / block-until-ready spans.
 
+4b. **Sparsity** (always on, session-tick shape): the dense event path
+   vs. ``impl="pallas_sparse"`` (the fused `repro.kernels.sparse_tick`
+   event tick) across event rates - Bernoulli sweeps plus the
+   ``sparse_poisson`` scenario.  Records land in the ``--json`` payload
+   tagged ``scenario="sparsity_*"``; ``check_regression.py`` gates their
+   latency against the baseline and enforces the in-run >= 3x
+   sparse-vs-dense floor on the ``sparse_poisson`` point.
+
 5. **Chip hierarchy** (``--chips``): the same total fabric partitioned
    into 1..K chips (`repro.noc.hierarchy`): chip-local vs. inter-chip
    hops/latency/energy, and the sharded session
@@ -114,7 +122,9 @@ from repro.obs import trace as obs_trace
 # so readers use this plus `platform` to decide comparability.
 # v3: --serve emits a "__serve__"-tagged sustained-load record carrying
 # events_per_sec (gated inverted: lower is a regression).
-SCHEMA_VERSION = 3
+# v4: the sparsity sweep emits "sparsity_*"-tagged records carrying
+# dense_tick_ms / sparse_speedup next to the usual latency fields.
+SCHEMA_VERSION = 4
 
 DEFAULT_CORES = (4, 16, 64)
 NEURONS = 16          # per core: kept small so the 64-core dense sweep fits
@@ -314,6 +324,95 @@ def tick_sweep(core_sweep, neurons, entries, ticks, repeats=3):
         print(f"{cores:>5} {t_old / ticks * 1e3:>15.3f} "
               f"{t_new / ticks * 1e3:>13.3f} {speedup:>7.1f}x "
               f"{str(identical):>9}")
+    return records
+
+
+SPARSITY_RATES = (0.005, 0.02, 0.05, 0.1, 0.2)
+
+
+def sparsity_sweep(cores, neurons, entries, ticks, repeats=3):
+    """Rate-proportional sparse tick vs. the dense event path.
+
+    Events/tick on the x-axis: Bernoulli frames at `SPARSITY_RATES` plus
+    the registered ``sparse_poisson`` scenario (the headline point the
+    acceptance gate reads).  Both paths run the same precompiled-session
+    harness on the same spikes in the same process, so the recorded
+    ``sparse_speedup`` is an in-run ratio - robust to machine-speed
+    drift, unlike the absolute wall clocks.  Currents are asserted
+    bit-identical before timing.  Per-rate records are tagged
+    ``scenario="sparsity_*"`` in the ``--json`` payload: latency gates
+    via the committed baseline as usual, and ``check_regression.py``
+    additionally enforces the >= 3x sparse-vs-dense floor on the
+    ``sparsity_sparse_poisson`` record at >= 16 cores x 256 n/core.
+
+    The dense fallback is part of the sweep by construction: the highest
+    rates exceed the default event capacity (n/8), so those records time
+    the overflow `lax.cond` taking the dense branch.
+    """
+    print(f"\n== sparsity sweep: dense event path vs impl='pallas_sparse' "
+          f"({cores} cores x {neurons} neurons/core, {entries} CAM entries, "
+          f"{ticks} ticks, best of {repeats}) ==")
+    print(f"{'point':>16} {'events/tick':>11} {'dense_ms':>9} "
+          f"{'sparse_ms':>9} {'speedup':>8} {'identical':>9}")
+    cfg = fabric.FabricConfig(cores=cores, neurons_per_core=neurons,
+                              cam_entries_per_core=entries)
+    params = fabric.random_connectivity(jax.random.PRNGKey(0), cfg)
+    dense = Interface(cfg).compile(params)
+    sparse = Interface(dataclasses.replace(
+        cfg, impl="pallas_sparse")).compile(params)
+
+    points = [("sparse_poisson",
+               traffic.generate("sparse_poisson", 6, ticks, cfg))]
+    for rate in SPARSITY_RATES:
+        points.append((f"p{rate:g}", jax.random.bernoulli(
+            jax.random.PRNGKey(int(rate * 1e4)), rate,
+            (ticks, cores, neurons))))
+
+    records = []
+    for name, sp in points:
+        gc.collect()
+
+        def dense_run():
+            out = dense.run(sp)
+            jax.block_until_ready(out)
+            return out
+
+        def sparse_run():
+            with obs_trace.span("sparsity.run", point=name):
+                out = sparse.run(sp)
+            jax.block_until_ready(out)
+            return out
+
+        cur_d, acc_d = dense_run()                             # compile
+        cur_s, acc_s = sparse_run()                            # compile
+        identical = bool(jnp.all(cur_d == cur_s))
+        assert identical, \
+            f"sparse currents drifted from the dense event path at {name}"
+        assert float(acc_d.events) == float(acc_s.events)
+
+        hist = obs_metrics.Histogram("sparse_tick_ms")
+        times_s = [_timed(sparse_run) for _ in range(repeats)]
+        for t in times_s:
+            hist.add(t / ticks * 1e3)
+        t_sparse = min(times_s)
+        t_dense = min(_timed(dense_run) for _ in range(repeats))
+        speedup = t_dense / max(t_sparse, 1e-9)
+        pct = hist.summary()
+        rec = {"scenario": f"sparsity_{name}", "cores": cores,
+               "neurons_per_core": neurons,
+               "cam_entries_per_core": entries, "ticks": ticks,
+               "events_per_tick": float(acc_s.events) / ticks,
+               "dense_tick_ms": t_dense / ticks * 1e3,
+               "new_tick_ms": t_sparse / ticks * 1e3,
+               "tick_ms_p50": pct["p50"],
+               "tick_ms_p95": pct["p95"],
+               "tick_ms_p99": pct["p99"],
+               "sparse_speedup": speedup,
+               "currents_bit_identical": identical}
+        records.append(rec)
+        print(f"{name:>16} {rec['events_per_tick']:>11.1f} "
+              f"{rec['dense_tick_ms']:>9.3f} {rec['new_tick_ms']:>9.3f} "
+              f"{speedup:>7.2f}x {str(identical):>9}")
     return records
 
 
@@ -699,6 +798,9 @@ def main(argv=None):
         tick_records = tick_sweep(tick_cores, args.tick_neurons,
                                   args.tick_entries, args.tick_ticks,
                                   repeats=args.tick_repeats)
+        sparsity_records = sparsity_sweep(
+            tick_cores[0], args.tick_neurons, args.tick_entries,
+            args.tick_ticks, repeats=args.tick_repeats)
         chips_records = chips_sweep(chips_list, args.chips_cores, NEURONS,
                                     2 * NEURONS, args.tick_ticks,
                                     repeats=args.tick_repeats) \
@@ -737,8 +839,8 @@ def main(argv=None):
                    "jax_version": jax.__version__,
                    "config": vars(args),
                    "rate": RATE,
-                   "records": tick_records + scenario_records
-                   + serve_records + chaos_records}
+                   "records": tick_records + sparsity_records
+                   + scenario_records + serve_records + chaos_records}
         if chips_records:
             payload["chips_records"] = chips_records
         with open(args.json, "w") as f:
@@ -779,6 +881,19 @@ def main(argv=None):
         ok &= s_ok
     else:
         print("  (tick speedup reported, not gated below 16 cores x 256 "
+              "neurons/core)")
+    sp_gated = [r for r in sparsity_records
+                if r["scenario"] == "sparsity_sparse_poisson"
+                and r["cores"] >= 16 and r["neurons_per_core"] >= 256]
+    if sp_gated:
+        s_ok = all(r["sparse_speedup"] >= 3.0 for r in sp_gated)
+        print("  sparse tick >= 3x dense event path on sparse_poisson at "
+              + ", ".join(f"{r['cores']}x{r['neurons_per_core']}"
+                          f" ({r['sparse_speedup']:.2f}x)" for r in sp_gated)
+              + f": {s_ok}")
+        ok &= s_ok
+    else:
+        print("  (sparse speedup reported, not gated below 16 cores x 256 "
               "neurons/core)")
     if scenario_records:
         live = all(r["events_per_tick"] > 0 for r in scenario_records)

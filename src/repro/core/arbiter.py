@@ -91,6 +91,20 @@ class ArbiterScheme:
         property-tests every policy against it.  When replacing
         ``grant_delay`` on a derived scheme, drop or replace
         ``tick_latency`` too - it encodes the built-in delays.
+    sparse_tick_latency(ctx) -> Optional[(buf, counts) -> (cores,) float32]
+        optional factory of the *event-compacted* form of ``tick_latency``
+        for the ``impl="pallas_sparse"`` tick: ``buf`` is a
+        (cores, capacity + 1) buffer of ascending active addresses padded
+        with ``ctx.n`` (`repro.kernels.sparse_tick.compact_events`) and
+        ``counts`` the (cores,) live event counts.  Must return exactly
+        the float32 values ``tick_latency`` yields on the equivalent
+        dense frame (the conformance grid holds the whole sparse tick
+        bit-identical to the dense oracle).  May return ``None`` when no
+        closed form applies at this ``ctx``; schemes without the policy
+        cannot run ``impl="pallas_sparse"`` (sessions refuse at compile).
+    sparse_encode_energy(ctx) -> Optional[(buf, counts) -> (cores,) float32]
+        the event-compacted form of ``encode_energy``, same contract:
+        bit-identical per-core toggles/event from the compacted buffer.
     """
 
     name: str
@@ -99,6 +113,8 @@ class ArbiterScheme:
     encode_energy: Callable
     token_update: Optional[Callable] = None
     tick_latency: Optional[Callable] = None
+    sparse_tick_latency: Optional[Callable] = None
+    sparse_encode_energy: Optional[Callable] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -473,22 +489,148 @@ def _hier_tree_tick_latency(ctx):
     return lat
 
 
+# ---------------------------------------------------------------------------
+# Sparse (event-compacted) per-tick policies (`ArbiterScheme.
+# sparse_tick_latency` / ``sparse_encode_energy``).
+#
+# Same closed forms as the dense `tick_latency` policies, re-derived from
+# the compacted event buffer the ``impl="pallas_sparse"`` tick carries:
+# ``buf`` (cores, capacity + 1) holds each core's active addresses in
+# ascending service order padded with ``ctx.n``, ``counts`` the live
+# totals.  Every quantity is an exact small integer in fp32, so the
+# results are bit-identical to the dense policies (asserted per scheme in
+# tests/test_sparse_tick.py) and the fused kernel can call these inside
+# its body.  Address prefixes use arithmetic right shifts (``4**l`` and
+# ``sqrt_n`` are powers of two wherever these policies apply), which
+# floor-divide correctly for the ``-1`` boundary sentinel.
+# ---------------------------------------------------------------------------
+
+
+def _binary_tree_sparse_latency(ctx):
+    # Python-scalar constants only: these closures run *inside* the fused
+    # Pallas kernel body, which rejects captured traced arrays.
+    per_grant = 2.0 * (ctx.lg - 1.0)
+
+    def lat(buf, counts):
+        return counts.astype(jnp.float32) * jnp.float32(per_grant)
+    return lat
+
+
+def _greedy_tree_sparse_latency(ctx):
+    if ctx.lg <= 1.0:
+        return None       # mirrors the dense policy: simulator territory
+    first = 2.0 * (ctx.lg - 1.0)
+
+    def lat(buf, counts):
+        k = counts.astype(jnp.float32)
+        return jnp.where(k > 0.0, jnp.float32(first) + (k - 1.0) * 3.0, 0.0)
+    return lat
+
+
+def _token_ring_sparse_latency(ctx):
+    def lat(buf, counts):
+        top = jnp.max(jnp.where(buf < ctx.n, buf, -1), axis=1)
+        return jnp.where(counts > 0, top.astype(jnp.float32) + 1.0, 0.0)
+    return lat
+
+
+def _hier_ring_sparse_latency(ctx):
+    if ctx.sqrt_n * ctx.sqrt_n != ctx.n:
+        return None           # top ring wraps inside the address space
+    s = ctx.sqrt_n
+    shift = int(math.log2(s))
+
+    def lat(buf, counts):
+        real = buf < ctx.n
+        hi = jnp.where(real, buf >> shift, s - 1)    # pads parked in-range
+        lo = buf & (s - 1)
+
+        def one(hi_c, lo_c, real_c):
+            lo_max = jnp.full((s,), jnp.int32(-1)).at[hi_c].max(
+                jnp.where(real_c, lo_c, -1))
+            occupied = lo_max >= 0
+            sec = jnp.arange(s)
+            s_first = jnp.min(jnp.where(occupied, sec, s))
+            s_last = jnp.max(jnp.where(occupied, sec, -1))
+            return (1.0 + s_first + 3.0 * (s_last - s_first) +
+                    jnp.sum(jnp.where(occupied, lo_max, 0))
+                    ).astype(jnp.float32)
+
+        return jnp.where(counts > 0, jax.vmap(one)(hi, lo, real), 0.0)
+    return lat
+
+
+def _hier_tree_sparse_latency(ctx):
+    # ascending order visits each occupied level-2 cluster once, so the
+    # switch count is the number of cluster boundaries in the buffer
+    shift = 2 * (ctx.levels - 1)
+
+    def lat(buf, counts):
+        real = buf < ctx.n
+        cluster = buf >> shift
+        prev = jnp.concatenate(
+            [jnp.full((buf.shape[0], 1), -1, buf.dtype), cluster[:, :-1]],
+            axis=1)
+        q = jnp.sum(real & (cluster != prev), axis=1).astype(jnp.float32)
+        k = counts.astype(jnp.float32)
+        return jnp.where(k > 0.0,
+                         2.0 * ctx.levels + (k - 1.0) + (q - 1.0), 0.0)
+    return lat
+
+
+def _flat_sparse_encode_energy(ctx):
+    const = math.log2(ctx.n)
+
+    def enc(buf, counts):
+        return jnp.full((buf.shape[0],), const, jnp.float32)
+    return enc
+
+
+def _hat_sparse_encode_energy(ctx):
+    # `_hat_encode_energy` over the dense (n,)-padded stream: all toggles
+    # happen inside the compacted buffer (pairwise transitions plus the
+    # -1 boundary and the first pad boundary); the remaining n -> n pad
+    # transitions contribute zero, so summing buffer toggles and dividing
+    # by n reproduces the dense mean bit-for-bit (exact integer sums).
+    levels = ctx.levels
+
+    def enc(buf, counts):
+        shifts = 2 * jnp.arange(levels)
+        prev = jnp.concatenate(
+            [jnp.full((buf.shape[0], 1), -1, buf.dtype), buf[:, :-1]],
+            axis=1)
+        changed = (buf[:, :, None] >> shifts) != (prev[:, :, None] >> shifts)
+        toggles = jnp.sum(jnp.where(changed, 2.0, 0.0), axis=(1, 2))
+        return toggles / jnp.float32(ctx.n)
+    return enc
+
+
 for _entry in (
     ArbiterScheme("binary_tree", _tree_select, _binary_tree_delay,
                   _flat_encode_energy,
-                  tick_latency=_binary_tree_tick_latency),
+                  tick_latency=_binary_tree_tick_latency,
+                  sparse_tick_latency=_binary_tree_sparse_latency,
+                  sparse_encode_energy=_flat_sparse_encode_energy),
     ArbiterScheme("greedy_tree", _tree_select, _greedy_tree_delay,
                   _flat_encode_energy,
-                  tick_latency=_greedy_tree_tick_latency),
+                  tick_latency=_greedy_tree_tick_latency,
+                  sparse_tick_latency=_greedy_tree_sparse_latency,
+                  sparse_encode_energy=_flat_sparse_encode_energy),
     ArbiterScheme("token_ring", _token_ring_select, _token_ring_delay,
                   _flat_encode_energy, _token_ring_update,
-                  tick_latency=_token_ring_tick_latency),
+                  tick_latency=_token_ring_tick_latency,
+                  sparse_tick_latency=_token_ring_sparse_latency,
+                  sparse_encode_energy=_flat_sparse_encode_energy),
     ArbiterScheme("hier_ring", _hier_ring_select, _hier_ring_delay,
                   _flat_encode_energy, _hier_ring_update,
-                  tick_latency=_hier_ring_tick_latency),
+                  tick_latency=_hier_ring_tick_latency,
+                  sparse_tick_latency=_hier_ring_sparse_latency,
+                  sparse_encode_energy=_flat_sparse_encode_energy),
     ArbiterScheme("hier_tree", _tree_select, _hier_tree_delay,
                   _hat_encode_energy,
-                  tick_latency=_hier_tree_tick_latency),
+                  tick_latency=_hier_tree_tick_latency,
+                  sparse_tick_latency=_hier_tree_sparse_latency,
+                  sparse_encode_energy=_hat_sparse_encode_energy),
 ):
     if _entry.name not in interface_registry.ARBITERS:
         interface_registry.register_arbiter(_entry.name, _entry)

@@ -53,9 +53,10 @@ class FabricConfig:
     scheme: str = "hier_tree"
     cam: cam_mod.CamConfig | None = None
     noc: noc_topology.NocConfig | None = None
-    impl: str = "xla"                        # tick backend: "xla" | "pallas"
+    impl: str = "xla"            # "xla" | "pallas" | "pallas_sparse"
     chips: int = 1                           # cores = chips x cores_per_chip
     cores_per_chip: int | None = None        # derived: cores // chips
+    sparse_capacity: int | None = None       # pallas_sparse event budget
 
     def __post_init__(self):
         cores, per_chip = resolve_chips(self.chips, self.cores,
@@ -67,9 +68,14 @@ class FabricConfig:
         object.__setattr__(self, "cam_entries_per_core", entries)
         if self.noc is None:
             object.__setattr__(self, "noc", noc_topology.NocConfig())
-        if self.impl not in ("xla", "pallas"):
+        if self.impl not in ("xla", "pallas", "pallas_sparse"):
             raise ValueError(
-                f"unknown impl {self.impl!r}; expected 'xla' or 'pallas'")
+                f"unknown impl {self.impl!r}; expected 'xla', 'pallas' or "
+                f"'pallas_sparse'")
+        if self.sparse_capacity is not None and self.sparse_capacity < 1:
+            raise ValueError(
+                f"sparse_capacity must be a positive event count, got "
+                f"{self.sparse_capacity}")
 
     @property
     def tag_bits(self) -> int:

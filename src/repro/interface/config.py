@@ -97,11 +97,24 @@ class InterfaceConfig:
     scheme:  arbiter architecture (registry: `repro.interface.ARBITERS`)
     cam:     CAM variant/size (registry: `repro.interface.CAM_VARIANTS`)
     noc:     transport scheme (registry: `repro.interface.NOC_SCHEMES`)
-    impl:    tick compute backend - "xla" (gather/scatter fast path) or
+    impl:    tick compute backend - "xla" (gather/scatter fast path),
              "pallas" (route the CAM match through the
              `repro.kernels.cam_search` kernel and the AER address stream
              through `repro.kernels.hat_encode`; falls back to interpret
-             mode off-TPU).  Currents are bit-identical across impls.
+             mode off-TPU), or "pallas_sparse" (the fused
+             `repro.kernels.sparse_tick` event path: per-core event
+             compaction feeding one kernel for CAM gather + scatter +
+             arbiter latency + AER encode, with a dense fallback when a
+             core exceeds ``sparse_capacity`` events).  Currents and
+             stats are bit-identical across impls.
+    sparse_capacity: per-core event-buffer capacity for
+             ``impl="pallas_sparse"``; ``None`` applies the
+             `repro.kernels.sparse_tick.ops.default_capacity` heuristic
+             (n/8, at least 8).  Effective values are clamped to
+             ``neurons_per_core - 1``; ticks where any core fires more
+             events than this run the dense tick instead (bit-identical
+             either way - the knob trades sparse-path coverage against
+             per-tick buffer work).  Ignored by the other impls.
     """
 
     cores: int | None = None                  # total; default 4 when omitted
@@ -113,6 +126,7 @@ class InterfaceConfig:
     impl: str = "xla"
     chips: int = 1
     cores_per_chip: int | None = None         # derived: cores // chips
+    sparse_capacity: int | None = None        # pallas_sparse event budget
 
     def __post_init__(self):
         cores, per_chip = resolve_chips(self.chips, self.cores,
@@ -124,9 +138,14 @@ class InterfaceConfig:
         object.__setattr__(self, "cam_entries_per_core", entries)
         if self.noc is None:
             object.__setattr__(self, "noc", noc_topology.NocConfig())
-        if self.impl not in ("xla", "pallas"):
+        if self.impl not in ("xla", "pallas", "pallas_sparse"):
             raise ValueError(
-                f"unknown impl {self.impl!r}; expected 'xla' or 'pallas'")
+                f"unknown impl {self.impl!r}; expected 'xla', 'pallas' or "
+                f"'pallas_sparse'")
+        if self.sparse_capacity is not None and self.sparse_capacity < 1:
+            raise ValueError(
+                f"sparse_capacity must be a positive event count, got "
+                f"{self.sparse_capacity}")
         # Fail at construction, not at first tick, on unregistered schemes.
         from repro.core import arbiter as _arb  # deferred: avoids import cycle
         from repro.interface import registry
@@ -142,6 +161,7 @@ class InterfaceConfig:
 
     @property
     def tag_bits(self) -> int:
+        """AER address width: bits needed to tag every neuron uniquely."""
         return max(1, math.ceil(math.log2(self.cores * self.neurons_per_core)))
 
     @classmethod
@@ -150,7 +170,8 @@ class InterfaceConfig:
         return cls(cores=cfg.cores, neurons_per_core=cfg.neurons_per_core,
                    scheme=cfg.scheme, cam=cfg.cam, noc=cfg.noc,
                    impl=getattr(cfg, "impl", "xla"),
-                   chips=getattr(cfg, "chips", 1))
+                   chips=getattr(cfg, "chips", 1),
+                   sparse_capacity=getattr(cfg, "sparse_capacity", None))
 
     def fabric(self):
         """The equivalent legacy `FabricConfig` (for un-migrated call sites)."""
@@ -158,7 +179,7 @@ class InterfaceConfig:
         return fabric_mod.FabricConfig(
             cores=self.cores, neurons_per_core=self.neurons_per_core,
             scheme=self.scheme, cam=self.cam, noc=self.noc, impl=self.impl,
-            chips=self.chips)
+            chips=self.chips, sparse_capacity=self.sparse_capacity)
 
 
 def as_interface_config(config) -> InterfaceConfig:

@@ -16,8 +16,12 @@ is ever materialized.  Arbiter latency comes from the scheme's vectorized
 ``tick_latency`` policy (`repro.core.arbiter.batched_tick_latency`)
 instead of an in-tick discrete-event simulation, and the AER address
 stream is produced by `repro.kernels.hat_encode`.  ``cfg.impl`` selects
-the match backend: ``"xla"`` (gather) or ``"pallas"`` (the
-`repro.kernels.cam_search` kernel; interpret-mode off-TPU).
+the match backend: ``"xla"`` (gather), ``"pallas"`` (the
+`repro.kernels.cam_search` kernel; interpret-mode off-TPU), or
+``"pallas_sparse"`` (`_sparse_event_tick`: per-core event compaction
+feeding the fused `repro.kernels.sparse_tick` kernel, with a dense
+fallback when a core overflows ``cfg.sparse_capacity`` - per-tick cost
+scales with events rather than fabric size, results stay bit-identical).
 
 The pre-optimization dense sweep survives as ``interface_tick(...,
 oracle=True)`` - the reference the fast path is held bit-identical to in
@@ -43,6 +47,7 @@ from repro.interface.stats import StepStats
 from repro.interface.types import int_to_bits
 from repro.kernels.cam_search import ops as cam_ops
 from repro.kernels.hat_encode import ops as hat_ops
+from repro.kernels.sparse_tick import ops as sparse_ops
 from repro.noc import hierarchy
 from repro.noc import router as noc_router
 from repro.obs import telemetry as obs_telemetry
@@ -145,6 +150,156 @@ def _addr_streams(spikes, cfg, n):
     return jax.vmap(one)(spikes)
 
 
+def resolve_sparse_plan(cfg, arb_cfg: arb.ArbiterConfig | None = None):
+    """Validate and resolve the ``impl="pallas_sparse"`` policy bundle.
+
+    Returns ``(latency_fn, encode_fn, sparse_cam_accounting, capacity)``.
+    Sessions call this at compile time so unsupported configurations fail
+    fast with a nameable error instead of mid-scan.
+
+    Raises:
+      ValueError: when the arbiter scheme provides no sparse tick policy
+        at this fabric size (e.g. ``greedy_tree`` with ``n <= 2``,
+        ``hier_ring`` with a non-square address space), or the NoC scheme
+        has no event-indexed CAM accounting, or ``sparse_capacity`` is
+        not a positive int.
+    """
+    n = cfg.neurons_per_core
+    if arb_cfg is None:
+        arb_cfg = arb.ArbiterConfig(cfg.scheme, n)
+    entry = interface_registry.get_arbiter(cfg.scheme)
+    ctx = arb.make_context(arb_cfg)
+    latency_fn = (entry.sparse_tick_latency(ctx)
+                  if entry.sparse_tick_latency is not None else None)
+    encode_fn = (entry.sparse_encode_energy(ctx)
+                 if entry.sparse_encode_energy is not None else None)
+    if latency_fn is None or encode_fn is None:
+        raise ValueError(
+            f"impl='pallas_sparse' is unsupported for arbiter scheme "
+            f"{cfg.scheme!r} at n={n}: the scheme's sparse tick policies "
+            f"are undefined there (use impl='xla' or 'pallas')")
+    noc_scheme = interface_registry.get_noc_scheme(cfg.noc.scheme)
+    if noc_scheme.sparse_cam_accounting is None:
+        raise ValueError(
+            f"impl='pallas_sparse' is unsupported for NoC scheme "
+            f"{cfg.noc.scheme!r}: it registers no event-indexed CAM "
+            f"accounting (use impl='xla' or 'pallas')")
+    capacity = sparse_ops.resolve_capacity(
+        getattr(cfg, "sparse_capacity", None), n)
+    return latency_fn, encode_fn, noc_scheme.sparse_cam_accounting, capacity
+
+
+def sparse_accounting_stats(cfg, tables, counts, ev_idx, ev_w, latencies,
+                            enc_per_core, hits_total, valid, cam_cycle_ns,
+                            sparse_cam_accounting) -> StepStats:
+    """Event-indexed `accounting_stats` for the sparse tick.
+
+    Mirrors the dense accounting term by term, but gathers every
+    per-source table column at this tick's events (``ev_idx``/``ev_w``
+    from `repro.kernels.sparse_tick.event_indices`) instead of reducing
+    over the full fabric.  Every reduction sums the same exact small
+    integers as the dense form, so the `StepStats` it returns is
+    bit-identical (held to that across the grid in tests/conformance).
+    """
+    total_events = jnp.sum(counts).astype(jnp.float32)
+    valid_cnt = jnp.sum(valid, axis=1).astype(jnp.float32)
+    searches, entries_per_search = sparse_cam_accounting(
+        tables, ev_idx, ev_w, valid_cnt, total_events, cfg.cores)
+    match_per_search = hits_total.astype(jnp.float32) / jnp.maximum(searches,
+                                                                    1.0)
+    mismatch_per_search = entries_per_search - match_per_search
+    cam_energy = searches * cam_mod._energy_jnp(cfg.cam, match_per_search,
+                                                mismatch_per_search)
+    cam_time = searches * cam_cycle_ns
+
+    noc_hops, noc_latency, noc_energy, _ = noc_router.noc_step_costs_events(
+        tables, ev_idx, ev_w)
+    chip_hops, chip_latency, chip_energy = hierarchy.chip_step_costs_events(
+        tables, ev_idx, ev_w)
+
+    return StepStats(events=total_events,
+                     encode_latency=jnp.max(latencies),
+                     encode_energy=jnp.sum(enc_per_core * counts),
+                     cam_searches=searches,
+                     cam_energy=cam_energy,
+                     cam_time_ns=cam_time,
+                     noc_hops=noc_hops,
+                     noc_latency=noc_latency,
+                     noc_energy=noc_energy,
+                     chip_hops=chip_hops,
+                     chip_latency=chip_latency,
+                     chip_energy=chip_energy)
+
+
+def _sparse_event_tick(params, spikes, cfg, tables, arb_cfg, routing,
+                       cam_cycle_ns, noc_scheme, unchecked=False):
+    """The ``impl="pallas_sparse"`` tick: compact, fuse, or fall back.
+
+    Compacts the frame into per-core event buffers, then runs *one*
+    `jax.lax.cond`: the sparse branch feeds the buffers through the fused
+    `repro.kernels.sparse_tick` kernel plus event-indexed accounting; the
+    dense branch is the ordinary event-driven tick, taken whenever any
+    core fired more than ``sparse_capacity`` events this tick.  Both
+    branches produce bit-identical ``(currents, latencies, enc_per_core,
+    StepStats)``, so the fallback only changes cost, never results.
+
+    The per-tick ``cond`` itself is not free (XLA conditionals cost tens
+    of microseconds per tick on CPU hosts), so callers that have already
+    proven *no* frame of a stream overflows - `InterfaceSession` checks
+    ``max per-core events <= capacity`` host-side once per `run` call -
+    pass ``unchecked=True`` to compile the sparse branch alone, with no
+    cond in the scan body.  Results are bit-identical by construction;
+    passing ``unchecked=True`` on a stream that does overflow silently
+    truncates events, which is why the flag is session-internal.
+
+    Under `jax.vmap` (``run_batched``) the cond lowers to a select that
+    evaluates both branches - correct, but the sparse speedup only
+    materializes through the unchecked path (the session's host-side
+    precheck covers the whole batch, so fully-sparse batches take it).
+    """
+    n = cfg.neurons_per_core
+    latency_fn, encode_fn, sparse_cam, capacity = resolve_sparse_plan(
+        cfg, arb_cfg)
+    spikes_flat = spikes.reshape(-1)
+    buf, counts = sparse_ops.compact_events(spikes, capacity)
+
+    def sparse_branch(_):
+        with jax.named_scope("repro.sparse_tick"):
+            currents, latencies, enc_per_core, hits_total = \
+                sparse_ops.sparse_tick(
+                    spikes_flat, buf, counts, routing.src_idx, routing.active,
+                    params.weights, params.targets, n=n,
+                    latency_fn=latency_fn, encode_fn=encode_fn)
+            ev_idx, ev_w = sparse_ops.event_indices(buf, n)
+            stats = sparse_accounting_stats(
+                cfg, tables, counts, ev_idx, ev_w, latencies, enc_per_core,
+                hits_total, params.valid, cam_cycle_ns, sparse_cam)
+        return currents, latencies, enc_per_core, stats
+
+    def dense_branch(_):
+        with jax.named_scope("repro.sparse_dense_fallback"):
+            latencies = arb.batched_tick_latency(arb_cfg, spikes)
+            entry_drive = _entry_drive(params, spikes_flat, routing, cfg)
+            contrib = entry_drive * params.weights
+            currents = jax.vmap(
+                lambda c, t: jnp.zeros((n,), jnp.float32).at[t].add(c)
+            )(contrib, params.targets)
+            hits_total = jnp.sum(entry_drive)
+            addr_seq = _addr_streams(spikes, cfg, n)
+            enc_per_core = jax.vmap(
+                lambda seq: arb.encode_energy_units(cfg.scheme, n, seq)
+            )(addr_seq)
+            stats = accounting_stats(cfg, tables, spikes, latencies,
+                                     enc_per_core, hits_total, params.valid,
+                                     cam_cycle_ns, noc_scheme)
+        return currents, latencies, enc_per_core, stats
+
+    if unchecked:
+        return sparse_branch(None)
+    overflow = jnp.any(counts > capacity)
+    return jax.lax.cond(overflow, dense_branch, sparse_branch, None)
+
+
 def interface_tick(params, spikes: jnp.ndarray, cfg,
                    tables: noc_router.NocTables | None = None,
                    arb_cfg: arb.ArbiterConfig | None = None,
@@ -152,6 +307,7 @@ def interface_tick(params, spikes: jnp.ndarray, cfg,
                    cam_cycle_ns: float | None = None,
                    oracle: bool = False,
                    telemetry: str = "off",
+                   sparse_unchecked: bool = False,
                    ) -> tuple[jnp.ndarray, StepStats]:
     """One fabric tick.
 
@@ -171,6 +327,11 @@ def interface_tick(params, spikes: jnp.ndarray, cfg,
         `repro.obs.telemetry.CoreStats` per-core breakdown as a third
         element.  The tick computation is identical either way - currents
         and stats are bit-identical across telemetry modes.
+    sparse_unchecked: only meaningful under ``impl="pallas_sparse"``:
+        skip the per-tick overflow ``lax.cond`` and run the fused sparse
+        branch unconditionally.  Callers must have proven no core exceeds
+        ``sparse_capacity`` events on any frame they will pass (the
+        session's host-side precheck); see `_sparse_event_tick`.
     returns: currents (cores, neurons_per_core) float32, `StepStats`
         (plus `CoreStats` under ``telemetry="cores"``)
     """
@@ -243,6 +404,16 @@ def interface_tick(params, spikes: jnp.ndarray, cfg,
         # ---- event-driven path: policy latency + gather/scatter -----------
         if routing is None:
             routing = build_routing_index(params, cfg)
+        if getattr(cfg, "impl", "xla") == "pallas_sparse":
+            currents, latencies, enc_per_core, stats = _sparse_event_tick(
+                params, spikes, cfg, tables, arb_cfg, routing, cam_cycle_ns,
+                noc_scheme, unchecked=sparse_unchecked)
+            if telemetry == "cores":
+                with jax.named_scope("repro.telemetry_cores"):
+                    core = per_core_stats(cfg, tables, spikes, latencies,
+                                          enc_per_core)
+                return currents, stats, core
+            return currents, stats
         with jax.named_scope("repro.arbiter_latency"):
             latencies = arb.batched_tick_latency(arb_cfg, spikes)
         with jax.named_scope("repro.cam_match"):

@@ -28,10 +28,19 @@ class SchemeRegistry:
     """A named mapping of scheme name -> entry with helpful failures."""
 
     def __init__(self, kind: str):
+        """kind: human-readable scheme family name, used in error text."""
         self.kind = kind
         self._entries: Dict[str, Any] = {}
 
     def register(self, name: str, entry: Any, *, overwrite: bool = False) -> Any:
+        """Bind ``name`` to an opaque entry object and return the entry.
+
+        Raises:
+          ValueError: on an empty/non-str name, or when ``name`` is
+            already registered and ``overwrite`` is False (replacing a
+            scheme must be an explicit decision - tests that shadow a
+            builtin pass ``overwrite=True`` and restore it after).
+        """
         if not isinstance(name, str) or not name:
             raise ValueError(f"{self.kind} scheme name must be a non-empty str")
         if name in self._entries and not overwrite:
@@ -42,9 +51,17 @@ class SchemeRegistry:
         return entry
 
     def unregister(self, name: str) -> None:
+        """Remove ``name`` if present; unknown names are a no-op."""
         self._entries.pop(name, None)
 
     def get(self, name: str) -> Any:
+        """Resolve ``name`` to its entry.
+
+        Raises:
+          KeyError: on an unknown name; the message lists every
+            registered scheme of this kind, so a typo'd config fails
+            with the valid choices in hand.
+        """
         try:
             return self._entries[name]
         except KeyError:
@@ -53,15 +70,19 @@ class SchemeRegistry:
                 f"{', '.join(self.names()) or '(none)'}") from None
 
     def names(self) -> Tuple[str, ...]:
+        """All registered scheme names, sorted (stable for error text)."""
         return tuple(sorted(self._entries))
 
     def __contains__(self, name: str) -> bool:
+        """Membership test: ``"hier_tree" in ARBITERS``."""
         return name in self._entries
 
     def __iter__(self):
+        """Iterate registered names in sorted order."""
         return iter(self.names())
 
     def __len__(self) -> int:
+        """Number of registered schemes."""
         return len(self._entries)
 
 
@@ -86,12 +107,15 @@ def register_noc_scheme(name: str, entry: Any, *, overwrite: bool = False) -> An
 
 
 def get_arbiter(name: str) -> Any:
+    """Resolve an arbiter scheme name (KeyError lists valid names)."""
     return ARBITERS.get(name)
 
 
 def get_cam_variant(name: str) -> Any:
+    """Resolve a CAM variant name (KeyError lists valid names)."""
     return CAM_VARIANTS.get(name)
 
 
 def get_noc_scheme(name: str) -> Any:
+    """Resolve a NoC scheme name (KeyError lists valid names)."""
     return NOC_SCHEMES.get(name)

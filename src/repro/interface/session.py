@@ -89,10 +89,16 @@ class Interface:
         state *before* tables are built, and dropped/dead-core spikes are
         masked at run time by a jit-compatible transform, so faulted runs
         stay inside the one compiled step and degrade instead of crash.
+
+        Raises:
+          ValueError: when the fault model does not fit the config, or
+            ``config.impl == "pallas_sparse"`` and a configured scheme
+            lacks sparse tick policies (`pipeline.resolve_sparse_plan`).
         """
         return InterfaceSession(self.config, params, fault=fault)
 
     def ppa_report(self) -> dict:
+        """Unified area/latency/energy report for this configuration."""
         from repro.interface import report
         return report.ppa_report(self.config)
 
@@ -107,11 +113,14 @@ class InterfaceSession:
       routing   CAM tags decoded to (chip, core, neuron) source addresses
                 (`RoutingIndex`) - the per-tick CAM match is a gather
                 through it (or the `cam_search` kernel when
-                ``cfg.impl == "pallas"``)
+                ``cfg.impl == "pallas"``, or the fused
+                `repro.kernels.sparse_tick` event kernel when
+                ``cfg.impl == "pallas_sparse"``)
       cam_cycle_ns  CAM search cycle time for the configured variant
     """
 
     def __init__(self, config, params, fault=None):
+        """Build every plan/table/constant once; see `Interface.compile`."""
         self.config = as_interface_config(config)
         if fault is not None:
             fault.validate(self.config)
@@ -128,15 +137,21 @@ class InterfaceSession:
             self.arb_plan = arb.ArbiterConfig(cfg.scheme, cfg.neurons_per_core)
             self.routing = pipeline.build_routing_index(params, cfg)
             self.cam_cycle_ns = cam_mod.cycle_time_ns(cfg.cam)
+            if cfg.impl == "pallas_sparse":
+                # Fail at compile, not mid-scan, when a scheme lacks the
+                # sparse tick policies (e.g. hier_ring on a non-square n).
+                pipeline.resolve_sparse_plan(cfg, self.arb_plan)
         tables, arb_plan, routing = self.tables, self.arb_plan, self.routing
         cam_cycle_ns = self.cam_cycle_ns
 
         def tick(p, spikes_cn):
+            """One frame through the pipeline with the prebuilt plans."""
             return pipeline.interface_tick(p, spikes_cn, cfg, tables, arb_plan,
                                            routing=routing,
                                            cam_cycle_ns=cam_cycle_ns)
 
         def run(p, spikes_tcn):
+            """Accumulate-only scan over a (T, C, n) stream."""
             def body(acc, s_t):
                 currents, st = tick(p, s_t)
                 return acc.accumulate(st), currents
@@ -146,6 +161,33 @@ class InterfaceSession:
         self._tick = jax.jit(tick)
         self._run = jax.jit(run)
         self._run_batched = jax.jit(jax.vmap(run, in_axes=(None, 0)))
+        self._run_fast = self._run_batched_fast = self._sparse_fits = None
+        if cfg.impl == "pallas_sparse":
+            # The per-tick overflow cond costs tens of us/tick on CPU - a
+            # large fraction of the sparse tick itself.  Check the whole
+            # stream against capacity ONCE per run() call (host-side) and
+            # dispatch to a cond-free sparse scan when every frame fits;
+            # streams with any overflowing frame keep the guarded scan.
+            capacity = pipeline.resolve_sparse_plan(cfg, arb_plan)[3]
+
+            def tick_fast(p, spikes_cn):
+                return pipeline.interface_tick(
+                    p, spikes_cn, cfg, tables, arb_plan, routing=routing,
+                    cam_cycle_ns=cam_cycle_ns, sparse_unchecked=True)
+
+            def run_fast(p, spikes_tcn):
+                def body(acc, s_t):
+                    currents, st = tick_fast(p, s_t)
+                    return acc.accumulate(st), currents
+                acc, currents = jax.lax.scan(body, StepStats.zeros(),
+                                             spikes_tcn)
+                return currents, acc
+
+            self._run_fast = jax.jit(run_fast)
+            self._run_batched_fast = jax.jit(
+                jax.vmap(run_fast, in_axes=(None, 0)))
+            self._sparse_fits = jax.jit(
+                lambda s: jnp.max(jnp.sum(s != 0, axis=-1)) <= capacity)
         self._sharded_cache = None
         self._telemetry_cache = {}
         self._masked_cache = None
@@ -194,6 +236,14 @@ class InterfaceSession:
             faulted runs stay bit-identical to one uninterrupted run.
         returns (currents (T, cores, neurons_per_core), accumulated stats);
         use ``stats.summary(ticks=T)`` for per-tick means.
+
+        Raises:
+          ValueError: on a spike stream whose trailing axes do not match
+            the config; an unknown ``shard`` mode; ``mask`` combined with
+            ``shard``/``telemetry``; ``stats0`` or a mis-shaped ``mask``
+            without a matching masked call; ``telemetry`` together with
+            ``shard="chips"`` on a multi-chip config; or ``fault_tick0``
+            on a session without a spike-perturbing fault.
         """
         spikes = self._check(spikes, 3)
         spikes = self._apply_fault("run", spikes, fault_tick0)
@@ -215,6 +265,8 @@ class InterfaceSession:
             with obs_trace.span("interface.run", shard=shard):
                 return fn(spikes)
         with obs_trace.span("interface.run"):
+            if self._all_frames_fit(spikes):
+                return self._run_fast(self.params, spikes)
             return self._run(self.params, spikes)
 
     def run_batched(self, spikes, shard: str | None = None,
@@ -242,6 +294,10 @@ class InterfaceSession:
         offset) or a (B,) vector of per-lane global tick offsets for the
         compiled `FaultModel`'s drop stream; each lane folds its index
         into the stream so lanes draw independent faults.
+
+        Raises:
+          ValueError: under the same conditions as `run` (shape/mode/
+            composition violations), applied to the batched shapes.
         """
         spikes = self._check(spikes, 4)
         spikes = self._apply_fault("run_batched", spikes, fault_tick0)
@@ -268,7 +324,19 @@ class InterfaceSession:
             with obs_trace.span("interface.run_batched", shard=shard):
                 return fn(spikes)
         with obs_trace.span("interface.run_batched"):
+            if self._all_frames_fit(spikes):
+                return self._run_batched_fast(self.params, spikes)
             return self._run_batched(self.params, spikes)
+
+    def _all_frames_fit(self, spikes) -> bool:
+        """Host-side sparse precheck: does every frame of this stream fit
+        the session's event capacity?  Always False off the pallas_sparse
+        impl, so the plain scans stay untouched there.  One reduction over
+        the stream plus one device sync per `run` call, amortized across
+        all its ticks; empty streams trivially fit."""
+        if self._sparse_fits is None:
+            return False
+        return spikes.size == 0 or bool(self._sparse_fits(spikes))
 
     # ---- masked / ragged streams -----------------------------------------
 

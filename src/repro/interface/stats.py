@@ -23,6 +23,10 @@ import jax.numpy as jnp
 
 
 class StepStats(NamedTuple):
+    """Per-tick (or accumulated) interface cost record, one scalar per
+    modelled quantity.  A jax pytree: flows through scans/vmaps as the
+    accumulate carry and supports `zeros`/`accumulate`/`summary`."""
+
     events: jnp.ndarray            # scalar: total address events this tick
     encode_latency: jnp.ndarray    # scalar: max grant latency (units)
     encode_energy: jnp.ndarray     # scalar: address-line toggles
@@ -41,6 +45,7 @@ class StepStats(NamedTuple):
 
     @classmethod
     def zeros(cls) -> "StepStats":
+        """The additive identity: every field a float32 scalar zero."""
         z = jnp.zeros((), jnp.float32)
         return cls(*([z] * len(cls._fields)))
 

@@ -1,0 +1,1 @@
+"""sparse_tick kernel package: the fused rate-proportional event tick."""

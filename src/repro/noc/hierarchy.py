@@ -152,5 +152,26 @@ def chip_step_costs(tables, spikes_flat: jnp.ndarray):
     return hops, latency, energy
 
 
+def chip_step_costs_events(tables, ev_idx: jnp.ndarray, ev_w: jnp.ndarray):
+    """Event-indexed `chip_step_costs` for the sparse tick.
+
+    Gathers the per-source chip-tier columns at this tick's events
+    (``ev_idx``/``ev_w`` as in `repro.noc.router.noc_step_costs_events`)
+    instead of multiplying the full spike vector through them; exact
+    integer sums keep the float32 results bit-identical to the dense
+    form.  Zeros for flat single-chip tables, like `chip_step_costs`.
+    """
+    if not isinstance(tables, HierTables):
+        z = jnp.zeros((), jnp.float32)
+        return z, z, z
+    hops = jnp.sum(ev_w * tables.chip_hops[ev_idx])
+    loads = ev_w @ tables.chip_link_table[ev_idx]              # (L_chip,)
+    depth = jnp.max(ev_w * tables.chip_depth[ev_idx].astype(jnp.float32))
+    latency = (depth * ppa.CHIP_HOP_LATENCY_NS +
+               jnp.max(loads, initial=0.0) * ppa.CHIP_LINK_SERIALIZATION_NS)
+    energy = hops * ppa.CHIP_HOP_ENERGY
+    return hops, latency, energy
+
+
 __all__ = ["HierTables", "build_hier_tables", "chip_step_costs",
-           "chip_of_core"]
+           "chip_step_costs_events", "chip_of_core"]

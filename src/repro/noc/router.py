@@ -59,6 +59,13 @@ class NocScheme:
     cam_accounting(tables, spikes_flat, valid_cnt, total_events, cores)
         -> (searches, entries_per_search): how many CAM searches a tick's
         events trigger and how many entries each sweeps on average.
+    sparse_cam_accounting(tables, ev_idx, ev_w, valid_cnt, total_events,
+        cores) -> (searches, entries_per_search): the event-indexed form
+        of ``cam_accounting`` for the ``impl="pallas_sparse"`` tick -
+        ``ev_idx`` (events,) flat source indices and ``ev_w`` (events,)
+        float32 live-event weights replace the dense spike vector.  Must
+        return bit-identical float32 values (exact integer sums either
+        way).  Optional: schemes without it cannot run the sparse tick.
     """
 
     name: str
@@ -66,6 +73,7 @@ class NocScheme:
     hops: Callable
     link_loads: Callable
     cam_accounting: Callable
+    sparse_cam_accounting: Callable | None = None
 
 
 def _flatten_links(h_inc: jnp.ndarray, v_inc: jnp.ndarray) -> jnp.ndarray:
@@ -203,6 +211,27 @@ def noc_step_costs(tables: NocTables, spikes_flat: jnp.ndarray):
     return hops, latency, energy, loads
 
 
+def noc_step_costs_events(tables: NocTables, ev_idx: jnp.ndarray,
+                          ev_w: jnp.ndarray):
+    """Event-indexed `noc_step_costs` for the sparse tick.
+
+    ev_idx: (events,) int32 flat source indices of this tick's events
+    (pad slots pointing anywhere); ev_w: (events,) float32 1.0/0.0 live
+    weights (`repro.kernels.sparse_tick.event_indices`).  Gathers the
+    per-source table columns at the events instead of multiplying the
+    full (S,) spike vector through them, so cost scales with events, not
+    fabric size.  Every reduction sums the same exact small integers as
+    the dense form, so the float32 results are bit-identical.
+    """
+    hops = jnp.sum(ev_w * tables.hops[ev_idx])
+    loads = ev_w @ tables.link_table[ev_idx]                   # (L,)
+    depth = jnp.max(ev_w * tables.depth[ev_idx].astype(jnp.float32))
+    latency = (depth * ppa.NOC_HOP_LATENCY_NS +
+               jnp.max(loads, initial=0.0) * ppa.NOC_LINK_SERIALIZATION_NS)
+    energy = hops * ppa.NOC_HOP_ENERGY
+    return hops, latency, energy, loads
+
+
 # ---------------------------------------------------------------------------
 # CAM search accounting policies.
 # ---------------------------------------------------------------------------
@@ -215,12 +244,31 @@ def _flood_cam_accounting(tables, spikes_flat, valid_cnt, total_events, cores):
     return searches, entries_per_search
 
 
+def _flood_sparse_cam_accounting(tables, ev_idx, ev_w, valid_cnt,
+                                 total_events, cores):
+    """Flood accounting never reads the spike vector; same closed form."""
+    return _flood_cam_accounting(tables, None, valid_cnt, total_events, cores)
+
+
 def _subscribed_cam_accounting(tables, spikes_flat, valid_cnt, total_events,
                                cores):
     """Mesh: an event is searched only where some CAM entry subscribes."""
     searches = jnp.sum(spikes_flat * tables.dest_counts).astype(jnp.float32)
     swept = jnp.sum(valid_cnt[:, None] * tables.subs *
                     spikes_flat[None, :])
+    entries_per_search = swept / jnp.maximum(searches, 1.0)
+    return searches, entries_per_search
+
+
+def _subscribed_sparse_cam_accounting(tables, ev_idx, ev_w, valid_cnt,
+                                      total_events, cores):
+    """Event-indexed `_subscribed_cam_accounting` (bit-identical).
+
+    ``valid_cnt @ subs`` is the per-source swept-entry total; it depends
+    only on routing state, so XLA hoists it out of the per-tick scan.
+    """
+    searches = jnp.sum(ev_w * tables.dest_counts[ev_idx])
+    swept = jnp.sum(ev_w * (valid_cnt @ tables.subs)[ev_idx])
     entries_per_search = swept / jnp.maximum(searches, 1.0)
     return searches, entries_per_search
 
@@ -235,19 +283,22 @@ for _entry in (
               hops=lambda m, src, cores: multicast.broadcast_tree_hops(
                   src, cores),
               link_loads=_broadcast_link_loads,
-              cam_accounting=_flood_cam_accounting),
+              cam_accounting=_flood_cam_accounting,
+              sparse_cam_accounting=_flood_sparse_cam_accounting),
     NocScheme("unicast",
               expand_dests=lambda m, cores: m,
               hops=lambda m, src, cores: multicast.unicast_hops(
                   m, src, cores),
               link_loads=_unicast_link_loads,
-              cam_accounting=_subscribed_cam_accounting),
+              cam_accounting=_subscribed_cam_accounting,
+              sparse_cam_accounting=_subscribed_sparse_cam_accounting),
     NocScheme("multicast_tree",
               expand_dests=lambda m, cores: m,
               hops=lambda m, src, cores: multicast.multicast_tree_hops(
                   m, src, cores),
               link_loads=_multicast_link_loads,
-              cam_accounting=_subscribed_cam_accounting),
+              cam_accounting=_subscribed_cam_accounting,
+              sparse_cam_accounting=_subscribed_sparse_cam_accounting),
 ):
     if _entry.name not in interface_registry.NOC_SCHEMES:
         interface_registry.register_noc_scheme(_entry.name, _entry)

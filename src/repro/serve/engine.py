@@ -111,6 +111,8 @@ class TenantGroup:
     """Tenants sharing one precompiled session, stepped as vmap lanes."""
 
     def __init__(self, key, config, params, queue: IngestQueue, fault=None):
+        """Compile the shared session for ``key`` = (config, connectivity,
+        fault) and start with zero lanes; tenants join via `add`."""
         self.key = key
         self.config = config
         self.params = params
@@ -126,6 +128,8 @@ class TenantGroup:
         self._lane_ticks = np.zeros((0,), np.int32)
 
     def add(self, spec: TenantSpec) -> int:
+        """Assign ``spec`` the next lane index and return it; an existing
+        accumulator grows a zero row so running totals are preserved."""
         lane = len(self.lanes)
         self.specs[spec.name] = spec
         self.lanes[spec.name] = lane
@@ -156,6 +160,7 @@ class TenantGroup:
         return jax.tree.map(lambda x: jax.device_put(np.asarray(x), dev), tree)
 
     def lane_names(self) -> list:
+        """Tenant names in lane order (index 0 first)."""
         return sorted(self.lanes, key=self.lanes.get)
 
     def lane_stats(self):
@@ -188,9 +193,11 @@ class TenantGroup:
             self._backlog[req.tenant].append(frames.astype(bool))
 
     def backlog_ticks(self) -> int:
+        """Staged-but-unserved ticks across every lane of this group."""
         return sum(f.shape[0] for q in self._backlog.values() for f in q)
 
     def backlog_ticks_of(self, name: str) -> int:
+        """Staged-but-unserved ticks for one tenant."""
         return sum(f.shape[0] for f in self._backlog[name])
 
     def take_chunk(self, flush_ticks: int, skip=frozenset()) -> _Chunk | None:
@@ -349,12 +356,24 @@ class ServeEngine:
         return spec
 
     def submit(self, tenant: str, frames) -> None:
-        """Enqueue (ticks, cores, neurons_per_core) bool frames.
+        """Enqueue a spike stream for one tenant.
 
-        Frames are validated host-side first (`FrameValidationError` on
-        wrong shape/dtype or non-finite values - nothing malformed ever
-        reaches the jitted step), then bounded (`AdmissionError` /
-        `QueueOverflowError`) against the group's pending work.
+        Args:
+          tenant: a name previously passed to `register` (KeyError with
+            the registered names otherwise).
+          frames: a (ticks, cores, neurons_per_core) bool spike stream;
+            anything array-like is accepted and validated host-side.
+
+        Nothing runs yet - frames sit in the tenant's micro-batch queue
+        until the next `pump` / `drain` flushes them through the group's
+        shared `InterfaceSession`.
+
+        Raises:
+          FrameValidationError: wrong shape/dtype or non-finite values
+            (nothing malformed ever reaches the jitted step).
+          AdmissionError: the request exceeds the tenant's per-request
+            or in-flight tick budget.
+          QueueOverflowError: the group's bounded queue is full.
         """
         group = self._group_of(tenant)
         cfg = group.config
@@ -652,16 +671,19 @@ class ServeEngine:
         return sum(g.queue.depth() for g in self.groups.values())
 
     def ticks_served(self, tenant: str | None = None) -> int:
+        """Ticks served for ``tenant``, or live (fabric) ticks fleet-wide."""
         if tenant is not None:
             return self._served[tenant]
         return self._ticks
 
     def ticks_submitted(self, tenant: str | None = None) -> int:
+        """Ticks submitted by ``tenant``, or summed across all tenants."""
         if tenant is not None:
             return self._submitted[tenant]
         return sum(self._submitted.values())
 
     def ticks_shed(self, tenant: str | None = None) -> int:
+        """Ticks shed (deadline-expired) for ``tenant``, or fleet total."""
         if tenant is not None:
             return self._shed.get(tenant, 0)
         return sum(self._shed.values())

@@ -79,10 +79,12 @@ def register_scenario(name: str, spec: ScenarioSpec, *, overwrite: bool = False)
 
 
 def get_scenario(name: str) -> ScenarioSpec:
+    """Resolve a scenario name (KeyError lists the registered names)."""
     return SCENARIOS.get(name)
 
 
 def scenario_names() -> tuple[str, ...]:
+    """All registered scenario names, sorted."""
     return SCENARIOS.names()
 
 

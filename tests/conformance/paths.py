@@ -1,12 +1,16 @@
 """Execution-path runners and the stats tolerance contract.
 
-One fabric, five ways to execute it:
+One fabric, six ways to execute it:
 
   oracle          dense tag-vs-every-source CAM sweep + per-core DES
                   arbiter (`interface_tick(oracle=True)`), eager per tick
   event           the event-driven `InterfaceSession.run` scan
   pallas          same session with ``impl="pallas"`` (cam_search /
                   hat_encode kernels, interpret mode off-TPU)
+  pallas_sparse   same session with ``impl="pallas_sparse"`` (the fused
+                  `repro.kernels.sparse_tick` event path; the grid's
+                  burst scenarios overflow its event buffers and so also
+                  exercise the dense fallback branch)
   chips2          the same fabric partitioned into 2 chips
                   (`HierTables` two-tier NoC), unsharded scan
   chips2_sharded  ``run(shard="chips")`` - per-chip tick mapped under
@@ -14,7 +18,7 @@ One fabric, five ways to execute it:
 
 Conformance contract (asserted by `assert_conformant`):
 
-  * currents are BIT-IDENTICAL across all five paths, for every
+  * currents are BIT-IDENTICAL across all six paths, for every
     scenario, arbiter scheme, and NoC scheme;
   * partition-independent stats (`PATH_INVARIANT_FIELDS`: events,
     encode latency/energy, CAM searches/energy/time) agree across all
@@ -63,7 +67,7 @@ TRANSPORT_FIELDS = (
 EXACT_FIELDS = ("events", "cam_searches", "noc_hops", "chip_hops")
 REL_TOL = 1e-6
 
-FLAT_PATHS = ("oracle", "event", "pallas")
+FLAT_PATHS = ("oracle", "event", "pallas", "pallas_sparse")
 CHIP_PATHS = ("chips2", "chips2_sharded")
 
 
@@ -96,6 +100,11 @@ def run_pallas(cfg, params, spikes):
     return Interface(dataclasses.replace(cfg, impl="pallas")).compile(params).run(spikes)
 
 
+def run_pallas_sparse(cfg, params, spikes):
+    return Interface(dataclasses.replace(
+        cfg, impl="pallas_sparse")).compile(params).run(spikes)
+
+
 def run_chips2(cfg, params, spikes):
     return Interface(dataclasses.replace(cfg, chips=2)).compile(params).run(spikes)
 
@@ -109,6 +118,7 @@ PATHS = {
     "oracle": run_oracle,
     "event": run_event,
     "pallas": run_pallas,
+    "pallas_sparse": run_pallas_sparse,
     "chips2": run_chips2,
     "chips2_sharded": run_chips2_sharded,
 }

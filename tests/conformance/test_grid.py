@@ -1,6 +1,6 @@
 """Differential conformance grid: scenarios x arbiters x NoC x paths.
 
-Fast run: every registered scenario exercises all five execution paths on
+Fast run: every registered scenario exercises all six execution paths on
 a deterministically sampled pair of (arbiter, NoC) grid cells, plus a
 `_hypothesis_compat`-sampled oracle-vs-event sweep over the 5x3 cell
 grid.  The full grid (every cell, every scenario) runs under ``-m slow``.
@@ -38,7 +38,7 @@ def _setup(arb_scheme, noc_scheme, scenario, ticks=TICKS):
 @pytest.mark.parametrize("scenario", SCENARIOS)
 def test_scenario_conforms_across_all_paths(scenario):
     """Acceptance: currents bit-identical across oracle / event / pallas /
-    chips>1 / sharded-vmap for every registered scenario."""
+    pallas_sparse / chips>1 / sharded-vmap for every registered scenario."""
     index = SCENARIOS.index(scenario)
     for arb_scheme, noc_scheme in _sampled_cells(index):
         cfg, params, spikes = _setup(arb_scheme, noc_scheme, scenario)
@@ -64,7 +64,7 @@ def test_sampled_grid_oracle_vs_event(sample):
 @pytest.mark.parametrize("noc_scheme", paths.NOC_SCHEMES)
 def test_full_grid(noc_scheme):
     """The full conformance grid: every scenario through every arbiter
-    for this NoC scheme, all five paths.  Sessions are compiled once per
+    for this NoC scheme, all six paths.  Sessions are compiled once per
     grid cell and reused across scenarios (spikes are data, not trace)."""
     from repro.interface import Interface
 
@@ -73,6 +73,7 @@ def test_full_grid(noc_scheme):
         params = fabric.random_connectivity(jax.random.PRNGKey(SEED), cfg)
         session = Interface(cfg).compile(params)
         session_p = Interface(dataclasses.replace(cfg, impl="pallas")).compile(params)
+        session_s = Interface(dataclasses.replace(cfg, impl="pallas_sparse")).compile(params)
         session_c = Interface(dataclasses.replace(cfg, chips=2)).compile(params)
         for scenario in SCENARIOS:
             spikes = traffic.generate(scenario, SEED + 1, TICKS, cfg)
@@ -80,6 +81,7 @@ def test_full_grid(noc_scheme):
                 "oracle": paths.run_oracle(cfg, params, spikes),
                 "event": session.run(spikes),
                 "pallas": session_p.run(spikes),
+                "pallas_sparse": session_s.run(spikes),
                 "chips2": session_c.run(spikes),
                 "chips2_sharded": session_c.run(spikes, shard="chips"),
             }

@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""Offline markdown link checker for the repo's docs.
+
+Walks the given markdown files (or the default doc set), extracts every
+inline link/image ``[text](target)`` and reference definition
+``[label]: target``, and verifies that each *local* target resolves:
+
+  * relative paths must exist on disk (relative to the linking file),
+  * ``#fragment``-only links must match a heading in the same file,
+  * ``path#fragment`` links must match a heading in the target file.
+
+External links (http/https/mailto) are recognized but **not** fetched -
+this gate runs in CI and must stay deterministic/offline.  Bare-code
+spans and fenced code blocks are stripped first so example snippets like
+``[i](j)`` indexing can't false-positive.
+
+Exit status: 0 when every local link resolves, 1 otherwise (one line per
+broken link, ``file:line: message``).
+
+Usage:
+    python tools/check_links.py [FILE.md ...]
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+DEFAULT_FILES = [
+    "README.md",
+    "ROADMAP.md",
+    "EXPERIMENTS.md",
+    "docs/ARCHITECTURE.md",
+    "docs/kernels.md",
+]
+
+# Inline links/images: [text](target "title") — target ends at the first
+# unmatched ')' or whitespace-before-title.  Good enough for our docs;
+# we don't nest parens in link targets.
+_INLINE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+# Reference definitions: [label]: target
+_REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.M)
+_FENCE = re.compile(r"^(```|~~~)", re.M)
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def _strip_code(text: str) -> str:
+    """Blank out fenced code blocks and inline code spans, keeping line
+    numbers stable so reported positions stay accurate."""
+    out, in_fence = [], False
+    for line in text.splitlines(keepends=True):
+        if _FENCE.match(line):
+            in_fence = not in_fence
+            out.append("\n" if line.endswith("\n") else "")
+        elif in_fence:
+            out.append("\n" if line.endswith("\n") else "")
+        else:
+            out.append(re.sub(r"`[^`]*`", "", line))
+    return "".join(out)
+
+
+def _slugify(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation, dashes."""
+    heading = re.sub(r"`([^`]*)`", r"\1", heading)          # unwrap code spans
+    heading = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)  # unwrap links
+    slug = heading.strip().lower()
+    slug = re.sub(r"[^\w\- ]", "", slug)
+    return slug.replace(" ", "-")
+
+
+def _anchors(path: Path) -> set[str]:
+    """All heading anchors of a markdown file (with GitHub dedup suffixes)."""
+    seen: dict[str, int] = {}
+    anchors: set[str] = set()
+    for line in _strip_code(path.read_text(encoding="utf-8")).splitlines():
+        m = re.match(r"\s{0,3}(#{1,6})\s+(.*)", line)
+        if not m:
+            continue
+        slug = _slugify(m.group(2))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def check_file(md: Path) -> list[str]:
+    """Return one ``file:line: message`` string per broken local link."""
+    errors: list[str] = []
+    text = _strip_code(md.read_text(encoding="utf-8"))
+    for pattern in (_INLINE, _REFDEF):
+        for m in pattern.finditer(text):
+            target = m.group(1)
+            line = text.count("\n", 0, m.start()) + 1
+            if target.startswith(_EXTERNAL):
+                continue  # offline gate: never fetched
+            path_part, _, fragment = target.partition("#")
+            if path_part:
+                dest = (md.parent / path_part).resolve()
+                if not dest.exists():
+                    errors.append(f"{md}:{line}: broken link: {target!r} "
+                                  f"(no such file: {path_part})")
+                    continue
+            else:
+                dest = md
+            if fragment and dest.suffix == ".md":
+                if fragment.lower() not in _anchors(dest):
+                    errors.append(f"{md}:{line}: broken anchor: {target!r} "
+                                  f"(no heading matches #{fragment})")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    """Check every file named in ``argv`` (default doc set when empty)."""
+    files = [Path(a) for a in argv] or [REPO / f for f in DEFAULT_FILES]
+    errors: list[str] = []
+    checked = 0
+    for f in files:
+        if not f.exists():
+            errors.append(f"{f}: file not found")
+            continue
+        checked += 1
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e)
+    print(f"check_links: {checked} file(s), {len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
