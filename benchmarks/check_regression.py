@@ -40,6 +40,14 @@ carry an in-run ``sparse_speedup`` (dense event tick / fused sparse tick,
 both timed in the candidate run): the ``sparsity_sparse_poisson`` record at
 DYNAPs scale (>= 16 cores x 256 neurons) must stay >= 3x or the gate fails
 even on platform mismatch, since the ratio is machine-relative.
+
+Likewise the serve sweep's ``__serve_async__`` record (schema_version >= 5)
+carries an in-run ``async_vs_sync`` events/sec ratio (background pump vs
+the synchronous drain, both timed in the candidate run): it must stay
+>= 0.75 or the gate fails - the async pump may never fall meaningfully
+behind the foreground path it replaced.  The record also asserts
+``serve_bit_identical`` in-process; a False value fails here as a
+belt-and-braces check.  Payloads without the record (schema < 5) pass.
 """
 
 from __future__ import annotations
@@ -76,6 +84,11 @@ SPARSE_SCENARIO = "sparsity_sparse_poisson"
 SPARSE_MIN_SPEEDUP = 3.0
 SPARSE_MIN_CORES = 16
 SPARSE_MIN_NEURONS = 256
+# Async-pump floor (schema_version >= 5): the "__serve_async__" record's
+# in-run async_vs_sync events/sec ratio (background pump vs synchronous
+# drain, both timed in the candidate run) must stay above this.
+ASYNC_SCENARIO = "__serve_async__"
+ASYNC_MIN_RATIO = 0.75
 
 
 class RecordFormatError(ValueError):
@@ -218,6 +231,44 @@ def check_sparse_speedup(current: dict) -> tuple[list, bool]:
     return msgs, ok
 
 
+def check_async_pump(current: dict) -> tuple[list, bool]:
+    """The in-run async-pump floor: every ``__serve_async__`` record must
+    keep ``async_vs_sync`` >= `ASYNC_MIN_RATIO` and its bit-identity flag
+    True.  Both sides of the ratio were timed in the candidate run, so
+    the floor is enforced even when platforms differ; payloads without
+    the record (schema_version < 5, or --serve not run) pass."""
+    msgs, ok = [], True
+    for r in current.get("records", []):
+        if r.get("scenario") != ASYNC_SCENARIO:
+            continue
+        ratio = r.get("async_vs_sync")
+        if ratio is None:
+            msgs.append(
+                f"FAIL: {ASYNC_SCENARIO} record at {r.get('cores')}x"
+                f"{r.get('neurons_per_core')} lacks async_vs_sync; "
+                f"regenerate with the current benchmarks/noc_bench.py")
+            ok = False
+        elif ratio < ASYNC_MIN_RATIO:
+            msgs.append(
+                f"FAIL: background pump sustained only {ratio:.2f}x the "
+                f"synchronous drain's events/sec at {r.get('cores')}x"
+                f"{r.get('neurons_per_core')} (floor {ASYNC_MIN_RATIO}x, "
+                f"in-run ratio)")
+            ok = False
+        else:
+            msgs.append(
+                f"  background pump {ratio:.2f}x the synchronous drain at "
+                f"{r.get('cores')}x{r.get('neurons_per_core')} "
+                f"(floor {ASYNC_MIN_RATIO}x): ok")
+        if r.get("serve_bit_identical") is False:
+            msgs.append(
+                f"FAIL: {ASYNC_SCENARIO} record reports "
+                f"serve_bit_identical=false - the async serve path "
+                f"drifted from the solo session run")
+            ok = False
+    return msgs, ok
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("current", help="BENCH_interface.json from this run")
@@ -249,6 +300,12 @@ def main(argv=None) -> int:
         print(m)
     if not sparse_ok and not os.environ.get("BENCH_BASELINE_SKIP"):
         print("FAIL: sparse tick below the in-run speedup floor")
+        return 1
+    async_msgs, async_ok = check_async_pump(current)
+    for m in async_msgs:
+        print(m)
+    if not async_ok and not os.environ.get("BENCH_BASELINE_SKIP"):
+        print("FAIL: background pump below the in-run throughput floor")
         return 1
 
     if not os.path.exists(args.baseline):

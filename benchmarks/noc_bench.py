@@ -124,7 +124,11 @@ from repro.obs import trace as obs_trace
 # events_per_sec (gated inverted: lower is a regression).
 # v4: the sparsity sweep emits "sparsity_*"-tagged records carrying
 # dense_tick_ms / sparse_speedup next to the usual latency fields.
-SCHEMA_VERSION = 4
+# v5: --serve additionally emits "__serve_async__" (background pump,
+# carrying pump_threads + the in-run async_vs_sync throughput ratio),
+# "__serve_autoscale__" (grow/shrink lane cycle) and "__serve_shard__"
+# (chips=2 cross-device tenant group) records.
+SCHEMA_VERSION = 5
 
 DEFAULT_CORES = (4, 16, 64)
 NEURONS = 16          # per core: kept small so the 64-core dense sweep fits
@@ -468,7 +472,8 @@ def scenario_sweep(names, cores, neurons, entries, ticks, repeats=3):
     return records
 
 
-def serve_sweep(tenants, cores, neurons, entries, ticks, repeats=3):
+def serve_sweep(tenants, cores, neurons, entries, ticks, repeats=3,
+                pump_threads=1):
     """Sustained multi-tenant load through the serving engine.
 
     Registers ``tenants`` specs (same fabric config, mixed scenarios) on
@@ -480,6 +485,20 @@ def serve_sweep(tenants, cores, neurons, entries, ticks, repeats=3):
     `StepStats` are asserted bit-identical to a solo ``session.run``
     over its full concatenated stream, so the batched serve path is
     held to the same contract the conformance grid checks.
+
+    Schema v5 adds three records after the baseline ``__serve__`` one:
+
+    * ``__serve_async__`` - the same fleet drained by the background
+      pump (`engine.start`, ``pump_threads`` threads).  Carries the
+      in-run ``async_vs_sync`` events/sec ratio that
+      check_regression.py floors, so the async path may never fall
+      meaningfully behind the synchronous drain it replaced.
+    * ``__serve_autoscale__`` - a grow/shrink lane-capacity cycle
+      (register, serve, register, serve, deregister, serve) asserting
+      the surviving tenant's stats stay bit-identical to a solo run
+      and the ledger closes at every step.
+    * ``__serve_shard__`` - a ``shard="chips"`` tenant group on a
+      chips=2 config, asserted bit-identical to the flat solo session.
     """
     from repro.serve import ServeEngine, TenantSpec, default_connectivity
 
@@ -545,7 +564,143 @@ def serve_sweep(tenants, cores, neurons, entries, ticks, repeats=3):
     print(f"{tenants:>7} {served:>6} {rec['events_per_sec']:>10.0f} "
           f"{rec['new_tick_ms']:>8.3f} {rec['tick_ms_p50']:>7.3f} "
           f"{rec['tick_ms_p99']:>7.3f} {str(identical):>9}")
-    return [rec]
+    records = [rec]
+    key = {"cores": cores, "neurons_per_core": neurons,
+           "cam_entries_per_core": entries, "ticks": ticks}
+
+    # ---- async phase: same fleet, drained by the background pump --------
+    eng2 = ServeEngine(flush_ticks=ticks, flush_deadline_s=0.0)
+    for spec in specs:
+        eng2.register(spec)
+    for spec in specs:                                     # warmup: compile
+        eng2.submit_scenario(spec.name, ticks)
+    eng2.drain()
+    eng2.reset_metrics()
+    # enqueue every round BEFORE the pump starts: the sync baseline drains
+    # a full queue, so the async ratio must measure the pump against the
+    # same fully-packed chunks, not against half-empty eager flushes
+    for _ in range(repeats):
+        for spec in specs:
+            eng2.submit_scenario(spec.name, ticks)
+    eng2.start(poll_interval_s=1e-4, threads=pump_threads)
+    deadline = time.monotonic() + 600.0
+    while (eng2.queue_depth()
+           or any(g.backlog_ticks() for g in eng2.groups.values())):
+        if time.monotonic() > deadline:
+            raise RuntimeError("background pump failed to drain the fleet")
+        time.sleep(0.002)
+    eng2.stop()
+    assert eng2.pump_errors() == [], eng2.pump_errors()
+    acct = eng2.accounting()
+    assert acct["closes"], f"async serve accounting violation: {acct}"
+    acc_async = eng2.tenant_stats(probe.name)
+    identical_async = all(float(a) == float(np.asarray(b))
+                          for a, b in zip(acc_solo, acc_async))
+    assert identical_async, \
+        "async serve-path stats drifted from the solo session run"
+    fleet2 = eng2.serve_report()[-1]
+    served2 = eng2.ticks_served()
+    rec_async = {"scenario": "__serve_async__", **key,
+                 "ticks_served": served2, "tenants": tenants,
+                 "pump_threads": pump_threads,
+                 "new_tick_ms": fleet2["busy_s"] / max(served2, 1) * 1e3,
+                 "tick_ms_p50": fleet2["tick_ms_p50"],
+                 "tick_ms_p95": fleet2["tick_ms_p95"],
+                 "tick_ms_p99": fleet2["tick_ms_p99"],
+                 "events_per_sec": fleet2["events_per_sec"],
+                 # in-run ratio: both sides timed in this process, so the
+                 # gate can floor it even on a platform mismatch
+                 "async_vs_sync": fleet2["events_per_sec"]
+                 / max(rec["events_per_sec"], 1e-12),
+                 "serve_bit_identical": identical_async}
+    records.append(rec_async)
+    print(f"  async pump ({pump_threads} thread(s)): "
+          f"{rec_async['events_per_sec']:.0f} events/s "
+          f"({rec_async['async_vs_sync']:.2f}x sync), identical="
+          f"{identical_async}")
+
+    # ---- autoscale phase: grow/shrink lane-capacity cycle ---------------
+    eng3 = ServeEngine(flush_ticks=ticks, flush_deadline_s=0.0)
+    t0 = TenantSpec("scale0", cfg, scenario=names[0], seed=101)
+    t1 = TenantSpec("scale1", cfg, scenario=names[1 % len(names)], seed=102)
+    eng3.register(t0)                                      # capacity 1
+    eng3.submit_scenario("scale0", ticks)
+    eng3.drain()
+    assert eng3.accounting()["closes"]
+    eng3.register(t1)                                      # grow -> 2
+    eng3.submit_scenario("scale0", ticks)
+    eng3.submit_scenario("scale1", ticks)
+    eng3.drain()
+    assert eng3.accounting()["closes"]
+    eng3.deregister("scale1")                              # shrink -> 1
+    eng3.submit_scenario("scale0", ticks)
+    eng3.drain()
+    assert eng3.accounting()["closes"]
+    group3 = next(iter(eng3.groups.values()))
+    stream3 = jnp.concatenate([t0.stream(ticks, round=r) for r in range(3)])
+    _, acc3_solo = Interface(cfg).compile(
+        default_connectivity(cfg, t0.connectivity_seed)).run(stream3)
+    acc3 = eng3.tenant_stats("scale0")
+    identical_scale = all(float(a) == float(np.asarray(b))
+                          for a, b in zip(acc3_solo, acc3))
+    assert identical_scale, \
+        "autoscale grow/shrink cycle drifted from the solo session run"
+    fleet3 = eng3.serve_report()[-1]
+    served3 = eng3.ticks_served()
+    faults3 = fleet3.get("faults", {})
+    rec_scale = {"scenario": "__serve_autoscale__", **key,
+                 "ticks_served": served3,
+                 "new_tick_ms": fleet3["busy_s"] / max(served3, 1) * 1e3,
+                 "capacities_seen": sorted(group3.capacities_seen),
+                 "autoscale_grow": faults3.get("autoscale_grow", 0),
+                 "autoscale_shrink": faults3.get("autoscale_shrink", 0),
+                 "jit_cache_entries": group3.jit_cache_entries(),
+                 "serve_bit_identical": identical_scale}
+    records.append(rec_scale)
+    print(f"  autoscale cycle: capacities {rec_scale['capacities_seen']}, "
+          f"grow={rec_scale['autoscale_grow']} "
+          f"shrink={rec_scale['autoscale_shrink']}, identical="
+          f"{identical_scale}")
+
+    # ---- shard phase: cross-device tenant group (chips=2) ---------------
+    chips = 2
+    assert cores % chips == 0, \
+        f"--scenario-cores must be divisible by {chips} for the shard phase"
+    cfg_s = dataclasses.replace(cfg, chips=chips)
+    eng4 = ServeEngine(flush_ticks=ticks, flush_deadline_s=0.0)
+    s0 = TenantSpec("shard0", cfg_s, scenario=names[0], seed=201,
+                    shard="chips")
+    s1 = TenantSpec("shard1", cfg_s, scenario=names[1 % len(names)],
+                    seed=202, shard="chips")
+    eng4.register(s0)
+    eng4.register(s1)
+    assert len(eng4.groups) == 1, \
+        "shard-compatible tenants must share one group"
+    eng4.submit_scenario("shard0", ticks)
+    eng4.submit_scenario("shard1", ticks)
+    eng4.drain()
+    assert eng4.accounting()["closes"]
+    group4 = next(iter(eng4.groups.values()))
+    stream4 = s0.stream(ticks, round=0)
+    _, acc4_solo = Interface(cfg_s).compile(
+        default_connectivity(cfg_s, s0.connectivity_seed)).run(stream4)
+    acc4 = eng4.tenant_stats("shard0")
+    identical_shard = all(float(a) == float(np.asarray(b))
+                          for a, b in zip(acc4_solo, acc4))
+    assert identical_shard, \
+        "sharded serve-path stats drifted from the flat solo session run"
+    fleet4 = eng4.serve_report()[-1]
+    served4 = eng4.ticks_served()
+    rec_shard = {"scenario": "__serve_shard__", **key,
+                 "ticks_served": served4, "chips": chips,
+                 "new_tick_ms": fleet4["busy_s"] / max(served4, 1) * 1e3,
+                 "groups": len(eng4.groups),
+                 "jit_cache_entries": group4.jit_cache_entries(),
+                 "serve_bit_identical": identical_shard}
+    records.append(rec_shard)
+    print(f"  shard group (chips={chips}): jit entries "
+          f"{rec_shard['jit_cache_entries']}, identical={identical_shard}")
+    return records
 
 
 def chaos_sweep(rounds, cores, neurons, entries, ticks, report_path=None):
@@ -762,6 +917,9 @@ def main(argv=None):
                          "tenants (default when flag given: %(const)s) on "
                          "one shared session; reuses the session-tick "
                          "shape and --scenario-cores")
+    ap.add_argument("--pump-threads", type=int, default=1,
+                    help="background pump threads for the serve sweep's "
+                         "async phase (default: %(default)s)")
     ap.add_argument("--chaos", nargs="?", const=12, default=None, type=int,
                     metavar="ROUNDS",
                     help="run the chaos sweep: the serve engine under a "
@@ -817,7 +975,8 @@ def main(argv=None):
         serve_records = serve_sweep(
             args.serve, args.scenario_cores, args.tick_neurons,
             args.tick_entries, args.tick_ticks,
-            repeats=args.tick_repeats) if args.serve else []
+            repeats=args.tick_repeats,
+            pump_threads=args.pump_threads) if args.serve else []
         chaos_records = chaos_sweep(
             args.chaos, args.scenario_cores, args.tick_neurons,
             args.tick_entries, args.tick_ticks,
@@ -909,6 +1068,14 @@ def main(argv=None):
               f"{r['events_per_sec']:.0f} events/s, stats bit-identical to "
               f"solo: {s_ok}")
         ok &= s_ok
+        v2 = {x["scenario"]: x for x in serve_records[1:]}
+        a = v2.get("__serve_async__")
+        v2_ok = all(x["serve_bit_identical"] for x in serve_records) \
+            and (a is None or a["async_vs_sync"] > 0)
+        print(f"  serve v2: async pump "
+              f"{a['async_vs_sync'] if a else 0:.2f}x sync, "
+              f"autoscale+shard phases bit-identical: {v2_ok}")
+        ok &= v2_ok
     if chaos_records:
         r = chaos_records[0]
         c_ok = (r["plan_exhausted"] and r["accounting_closes"]

@@ -68,6 +68,7 @@ from repro.interface.registry import (  # noqa: F401
 )
 
 _LAZY_EXPORTS = {
+    "CompositionError": "repro.interface.session",
     "Interface": "repro.interface.session",
     "InterfaceSession": "repro.interface.session",
     "InterfaceConfig": "repro.interface.config",

@@ -43,6 +43,10 @@ to their solo runs.  ``stats0`` seeds the scan's accumulator carry
 the accumulator through successive calls, keeping the float accumulation
 order exactly the tick-sequential order a single solo `run` uses - which
 is what makes chunk-streamed stats bit-identical, not merely close.
+Masking composes with ``shard="chips"`` (the masked scan runs the
+per-chip mapped tick - the serving tier's cross-device tenant groups)
+but not with telemetry; rejected combinations raise the typed
+`CompositionError` instead of silently falling back to another path.
 
 Fault injection (the `repro.ft` substrate): ``compile(params,
 fault=FaultModel(...))`` bakes deterministic fabric faults into the
@@ -72,6 +76,18 @@ from repro.obs import telemetry as obs_telemetry
 from repro.obs import trace as obs_trace
 
 _SHARD_MODES = (None, "chips")
+
+
+class CompositionError(ValueError):
+    """A requested run-mode combination is not supported.
+
+    Typed rejection (still a ValueError for legacy handlers) raised when
+    orthogonal execution modes cannot compose - today that is telemetry
+    together with ``shard="chips"`` or with ``mask``.  Masking *does*
+    compose with sharding (the serving tier's cross-device tenant
+    groups); combinations rejected here are rejected loudly instead of
+    silently falling back to a different execution path.
+    """
 
 
 class Interface:
@@ -191,6 +207,8 @@ class InterfaceSession:
         self._sharded_cache = None
         self._telemetry_cache = {}
         self._masked_cache = None
+        self._masked_sharded_cache = None
+        self._sharded_tick_cache = None
         self._fault_cache = None
 
     # ---- execution -------------------------------------------------------
@@ -223,7 +241,9 @@ class InterfaceSession:
             raises (run unsharded for tier attribution).
         mask: optional (T,) bool - ticks where it is False contribute
             exactly zero stats and zero currents (padding lanes of a
-            ragged stream).  Mutually exclusive with shard/telemetry.
+            ragged stream).  Composes with ``shard="chips"`` (the masked
+            scan steps the per-chip mapped tick); mutually exclusive
+            with telemetry (typed `CompositionError`).
         stats0: optional `StepStats` seeding the accumulator carry (only
             with ``mask``); defaults to zeros.  Chunk-streamed callers
             thread the returned stats back in to keep accumulation
@@ -238,12 +258,14 @@ class InterfaceSession:
         use ``stats.summary(ticks=T)`` for per-tick means.
 
         Raises:
+          CompositionError: ``mask`` or ``shard="chips"`` combined with
+            ``telemetry`` (a typed ValueError; masking composes with
+            sharding, telemetry composes with neither).
           ValueError: on a spike stream whose trailing axes do not match
-            the config; an unknown ``shard`` mode; ``mask`` combined with
-            ``shard``/``telemetry``; ``stats0`` or a mis-shaped ``mask``
-            without a matching masked call; ``telemetry`` together with
-            ``shard="chips"`` on a multi-chip config; or ``fault_tick0``
-            on a session without a spike-perturbing fault.
+            the config; an unknown ``shard`` mode; ``stats0`` or a
+            mis-shaped ``mask`` without a matching masked call; or
+            ``fault_tick0`` on a session without a spike-perturbing
+            fault.
         """
         spikes = self._check(spikes, 3)
         spikes = self._apply_fault("run", spikes, fault_tick0)
@@ -288,7 +310,9 @@ class InterfaceSession:
         unchanged).  ``stats0`` seeds the per-lane accumulator carry
         ((B,)-shaped `StepStats` leaves; zeros when omitted) - thread the
         returned stats back in when chunking one long stream over
-        multiple calls.  Mutually exclusive with shard/telemetry.
+        multiple calls.  Composes with ``shard="chips"`` (each lane's
+        scan steps the per-chip mapped tick, spreading the group over
+        the chip mesh); mutually exclusive with telemetry.
 
         ``fault_tick0`` behaves as in `run`, per lane: a scalar (shared
         offset) or a (B,) vector of per-lane global tick offsets for the
@@ -341,12 +365,31 @@ class InterfaceSession:
     # ---- masked / ragged streams -----------------------------------------
 
     def _masked_fns(self, shard: str | None, telemetry: str) -> dict:
-        """The jitted masked-scan family; built lazily once."""
-        if shard is not None or telemetry != "off":
-            raise ValueError(
-                "mask does not compose with shard='chips' or telemetry; "
-                "run the masked scan flat (currents are bit-identical "
-                "across paths)")
+        """The jitted masked-scan family for a shard mode; built lazily.
+
+        ``shard=None`` is the flat masked scan.  ``shard="chips"`` on a
+        multi-chip config runs the masked scan with the per-chip mapped
+        tick (shard_map over the chip mesh, or the single-device vmap
+        fallback) - the serving tier's cross-device tenant groups.  On a
+        one-chip config the flat scan IS the per-chip tick, same as the
+        unmasked path.  Telemetry still does not compose with masking
+        (`CompositionError`): the masked scan's accumulator-as-argument
+        carry has no ys slot for the stacked series.
+        """
+        if telemetry != "off":
+            raise CompositionError(
+                "mask does not compose with telemetry; run the masked "
+                "scan without telemetry (currents and accumulated stats "
+                "are bit-identical across paths)")
+        if shard is not None:
+            if shard not in _SHARD_MODES:
+                raise ValueError(
+                    f"unknown shard mode {shard!r}; expected one of "
+                    f"{', '.join(repr(m) for m in _SHARD_MODES)}")
+            if self.config.chips > 1:
+                if self._masked_sharded_cache is None:
+                    self._masked_sharded_cache = self._build_masked_sharded()
+                return self._masked_sharded_cache
         if self._masked_cache is None:
             self._masked_cache = self._build_masked()
         return self._masked_cache
@@ -452,7 +495,7 @@ class InterfaceSession:
         """The jitted telemetry scan for (kind, mode); built lazily once."""
         obs_telemetry.validate_mode(mode)
         if sharded:
-            raise ValueError(
+            raise CompositionError(
                 "telemetry is not supported together with shard='chips'; "
                 "run unsharded (the default) to collect per-tick/per-core "
                 "series - currents are bit-identical across both paths")
@@ -544,7 +587,15 @@ class InterfaceSession:
 
         return chip_body
 
-    def _build_sharded(self) -> dict:
+    def _sharded_tick(self):
+        """The per-chip mapped tick closure, built (and placed) once.
+
+        Shared by the plain sharded scans and the masked sharded scans,
+        so the per-chip constants are device-pinned a single time and
+        both families step through the identical tick body.
+        """
+        if self._sharded_tick_cache is not None:
+            return self._sharded_tick_cache
         cfg = self.config
         chips, cpc, n = cfg.chips, cfg.cores_per_chip, cfg.neurons_per_core
         body = self._chip_body()
@@ -597,6 +648,12 @@ class InterfaceSession:
                 cam_cycle_ns)
             return currents, stats
 
+        self._sharded_tick_cache = tick
+        return tick
+
+    def _build_sharded(self) -> dict:
+        tick = self._sharded_tick()
+
         def run(spikes_tcn):
             def scan_body(acc, s_t):
                 currents, st = tick(s_t)
@@ -606,6 +663,35 @@ class InterfaceSession:
             return currents, acc
 
         return {"run": jax.jit(run), "run_batched": jax.jit(jax.vmap(run))}
+
+    def _build_masked_sharded(self) -> dict:
+        """The masked scan family over the per-chip mapped tick.
+
+        Same masking contract as `_build_masked` - masked ticks are
+        erased by ``spikes & mask`` *before* the scan, the accumulator
+        rides as the ``acc0`` argument - but each tick runs the
+        `_sharded_tick` body (shard_map over the chip mesh, or the vmap
+        fallback), so one serving-tier `TenantGroup` spreads its lanes'
+        fabric work across `launch.mesh` devices.  Signatures match the
+        flat masked family (the leading ``params`` argument is unused:
+        the sharded tick closes over its device-pinned per-chip
+        constants), so callers dispatch on the dict alone.
+        """
+        tick = self._sharded_tick()
+
+        def run(p, spikes_tcn, acc0):
+            del p  # per-chip constants are baked into the sharded tick
+            def body(acc, s_t):
+                currents, st = tick(s_t)
+                return acc.accumulate(st), currents
+            acc, currents = jax.lax.scan(body, acc0, spikes_tcn)
+            return currents, acc
+
+        mask_lane = jax.jit(lambda s, m: s & m[:, None, None])
+        return {"run": jax.jit(run),
+                "run_batched": jax.jit(jax.vmap(run, in_axes=(None, 0, 0))),
+                "mask": jax.jit(jax.vmap(mask_lane)),
+                "mask_solo": mask_lane}
 
     # ---- introspection ---------------------------------------------------
 

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import json
 import math
+import threading
 
 
 def percentiles(values, qs=(50, 95, 99)) -> dict:
@@ -47,16 +48,19 @@ def percentiles(values, qs=(50, 95, 99)) -> dict:
 
 
 class Counter:
-    """A named monotonic counter."""
+    """A named monotonic counter (thread-safe: the serving tier's pump
+    thread and submitter threads increment concurrently)."""
 
-    __slots__ = ("name", "value")
+    __slots__ = ("name", "value", "_lock")
 
     def __init__(self, name: str):
         self.name = name
         self.value = 0.0
+        self._lock = threading.Lock()
 
     def inc(self, n: float = 1.0) -> None:
-        self.value += n
+        with self._lock:
+            self.value += n
 
 
 class Histogram:
@@ -64,6 +68,10 @@ class Histogram:
 
     Values are expected positive (wall clocks, energies); values at or
     below zero land in the lowest bucket so `add` never raises mid-run.
+    Non-finite values (NaN/±Inf) are counted in ``nonfinite`` and
+    otherwise ignored - they enter no bucket and cannot poison
+    ``min``/``max``/``mean``, so one bad measured duration never kills
+    the serve path or skews its percentiles.
     """
 
     def __init__(
@@ -82,6 +90,8 @@ class Histogram:
         self.total = 0.0
         self.min = math.inf
         self.max = -math.inf
+        self.nonfinite = 0
+        self._lock = threading.Lock()
 
     def _bin(self, value: float) -> int:
         if value <= self.lo:
@@ -96,11 +106,15 @@ class Histogram:
 
     def add(self, value: float) -> None:
         value = float(value)
-        self._counts[self._bin(value)] += 1
-        self.count += 1
-        self.total += value
-        self.min = min(self.min, value)
-        self.max = max(self.max, value)
+        with self._lock:
+            if not math.isfinite(value):
+                self.nonfinite += 1
+                return
+            self._counts[self._bin(value)] += 1
+            self.count += 1
+            self.total += value
+            self.min = min(self.min, value)
+            self.max = max(self.max, value)
 
     @property
     def mean(self) -> float:
@@ -151,6 +165,7 @@ class Histogram:
         out.total = self.total + other.total
         out.min = min(self.min, other.min)
         out.max = max(self.max, other.max)
+        out.nonfinite = self.nonfinite + other.nonfinite
         return out
 
     def summary(self, qs=(50, 95, 99)) -> dict:
@@ -162,25 +177,34 @@ class Histogram:
         }
         for q in qs:
             out[f"p{q:g}"] = self.percentile(q)
+        if self.nonfinite:
+            out["nonfinite"] = self.nonfinite
         return out
 
 
 class MetricsRegistry:
-    """Get-or-create registry of counters and histograms."""
+    """Get-or-create registry of counters and histograms.
+
+    Get-or-create is locked: the serving tier's submit and pump threads
+    may race to create the same metric, and both must get one object.
+    """
 
     def __init__(self):
         self.counters: dict = {}
         self.histograms: dict = {}
+        self._lock = threading.Lock()
 
     def counter(self, name: str) -> Counter:
-        if name not in self.counters:
-            self.counters[name] = Counter(name)
-        return self.counters[name]
+        with self._lock:
+            if name not in self.counters:
+                self.counters[name] = Counter(name)
+            return self.counters[name]
 
     def histogram(self, name: str, **kwargs) -> Histogram:
-        if name not in self.histograms:
-            self.histograms[name] = Histogram(name, **kwargs)
-        return self.histograms[name]
+        with self._lock:
+            if name not in self.histograms:
+                self.histograms[name] = Histogram(name, **kwargs)
+            return self.histograms[name]
 
     def snapshot(self) -> dict:
         """Plain-dict view of every metric (JSONL-ready)."""

@@ -12,9 +12,17 @@ metrics, and - since PR 8 - graceful degradation: bounded retries
 both the fabric (`TenantSpec.fault`) and host (`ServeEngine(chaos=...)`)
 layers.
 
+Serving tier v2 adds the concurrency/scale axes: a background pump
+(`ServeEngine.start`/`stop`), cross-device tenant groups
+(``TenantSpec(shard="chips")``, rejected compositions raising the typed
+`CompositionError`), autoscaling lane capacities (`AutoscalePolicy`),
+and per-tenant token-bucket rate limiting
+(``AdmissionPolicy.rate_limit_per_s`` / `RateLimitedError`).
+
 The prefill/decode LM reference loop lives in `repro.serve.lm_engine`.
 """
 
+from repro.interface.session import CompositionError
 from repro.serve.admission import (
     AdmissionController,
     AdmissionError,
@@ -22,10 +30,12 @@ from repro.serve.admission import (
     DeadlineExceededError,
     FrameValidationError,
     QueueOverflowError,
+    RateLimitedError,
     ServeError,
+    TokenBucket,
     validate_frames,
 )
-from repro.serve.engine import ServeEngine, TenantGroup, group_key
+from repro.serve.engine import AutoscalePolicy, ServeEngine, TenantGroup, group_key
 from repro.serve.health import HealthPolicy, HealthTracker, LaneState, RetryPolicy
 from repro.serve.queue import IngestQueue, TickRequest
 from repro.serve.tenant import TenantSpec, compat_key, default_connectivity
@@ -34,6 +44,8 @@ __all__ = [
     "AdmissionController",
     "AdmissionError",
     "AdmissionPolicy",
+    "AutoscalePolicy",
+    "CompositionError",
     "DeadlineExceededError",
     "FrameValidationError",
     "HealthPolicy",
@@ -41,12 +53,14 @@ __all__ = [
     "IngestQueue",
     "LaneState",
     "QueueOverflowError",
+    "RateLimitedError",
     "RetryPolicy",
     "ServeEngine",
     "ServeError",
     "TenantGroup",
     "TenantSpec",
     "TickRequest",
+    "TokenBucket",
     "compat_key",
     "default_connectivity",
     "group_key",

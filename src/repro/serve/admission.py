@@ -13,18 +13,30 @@ Everything here raises *typed* errors before any device work happens:
     ServeError (RuntimeError)
     ├── AdmissionError            capacity exceeded at register/submit
     │   ├── QueueOverflowError    per-group pending-frame bound hit
-    │   └── DeadlineExceededError queued request aged past the shed
-    │                             deadline (raised per shed, surfaced via
-    │                             `ServeEngine.shed_errors()`)
+    │   ├── DeadlineExceededError queued request aged past the shed
+    │   │                         deadline (raised per shed, surfaced via
+    │   │                         `ServeEngine.shed_errors()`)
+    │   └── RateLimitedError      the tenant's token bucket is empty
+    │                             (per-tenant ingress rate bound)
     └── FrameValidationError      malformed frames (also a ValueError,
                                   so legacy shape-mismatch handlers keep
                                   working)
+
+Rate limiting (serving tier v2): ``AdmissionPolicy.rate_limit_per_s``
+bounds each tenant's *sustained* ingress in tick frames per second via a
+classic token bucket - the bucket refills continuously at the rate and
+caps at ``rate_limit_burst`` tokens, so short bursts up to the burst size are
+admitted instantly while the long-run average can never exceed the rate.
+An empty bucket raises `RateLimitedError` *before* anything is queued, so
+rate-limited work never enters the accounting identity.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping
+import threading
+import time
+from typing import Callable, Mapping
 
 import numpy as np
 
@@ -45,6 +57,10 @@ class QueueOverflowError(AdmissionError):
 
 class DeadlineExceededError(AdmissionError):
     """A queued request aged past the shed deadline and was dropped."""
+
+
+class RateLimitedError(AdmissionError):
+    """The tenant's token bucket is empty (ingress rate bound hit)."""
 
 
 class FrameValidationError(ServeError, ValueError):
@@ -100,6 +116,13 @@ class AdmissionPolicy:
                             older requests are shed with
                             `DeadlineExceededError` instead of served
                             (None = never shed).
+    rate_limit_per_s:       per-tenant sustained ingress bound in tick
+                            frames per second; an empty token bucket
+                            raises `RateLimitedError` at submit (None =
+                            unlimited).
+    rate_limit_burst:       token-bucket capacity - the largest burst a
+                            full bucket admits at once (defaults to one
+                            second's worth, i.e. ``rate_limit_per_s``).
     """
 
     max_tenants_per_group: int = 32
@@ -107,6 +130,8 @@ class AdmissionPolicy:
     max_frames_per_request: int = 4096
     max_pending_frames: int | None = None
     shed_deadline_s: float | None = None
+    rate_limit_per_s: float | None = None
+    rate_limit_burst: float | None = None
 
     def __post_init__(self):
         for name in ("max_tenants_per_group", "max_groups", "max_frames_per_request"):
@@ -120,13 +145,114 @@ class AdmissionPolicy:
             raise ValueError(
                 f"shed_deadline_s must be >= 0 or None, got {self.shed_deadline_s}"
             )
+        if self.rate_limit_per_s is not None and self.rate_limit_per_s <= 0:
+            raise ValueError(
+                f"rate_limit_per_s must be > 0 or None, got {self.rate_limit_per_s}"
+            )
+        if self.rate_limit_burst is not None:
+            if self.rate_limit_per_s is None:
+                raise ValueError("rate_limit_burst is only meaningful with rate_limit_per_s")
+            if self.rate_limit_burst < 1:
+                raise ValueError(
+                    f"rate_limit_burst must be >= 1 or None, got {self.rate_limit_burst}"
+                )
+
+    @property
+    def burst(self) -> float | None:
+        """Effective bucket capacity (burst, or one second's worth)."""
+        if self.rate_limit_per_s is None:
+            return None
+        return self.rate_limit_burst or self.rate_limit_per_s
+
+
+class TokenBucket:
+    """One tenant's ingress token bucket (thread-safe).
+
+    Starts full; refills continuously at ``rate`` tokens/sec up to
+    ``capacity``.  `take` is all-or-nothing: a request either fits the
+    current balance or is rejected whole - partial admission would split
+    a validated frame stream.
+    """
+
+    def __init__(self, rate: float, capacity: float, clock: Callable[[], float] = time.monotonic):
+        if rate <= 0 or capacity <= 0:
+            raise ValueError(f"need rate > 0 and capacity > 0, got {rate}, {capacity}")
+        self.rate = float(rate)
+        self.capacity = float(capacity)
+        self.clock = clock
+        self._tokens = self.capacity
+        self._last = clock()
+        self._lock = threading.Lock()
+
+    def _refill_locked(self, now: float) -> None:
+        elapsed = max(now - self._last, 0.0)
+        self._tokens = min(self.capacity, self._tokens + elapsed * self.rate)
+        self._last = now
+
+    def take(self, n: float) -> bool:
+        """Admit ``n`` tokens if the refilled balance covers them."""
+        with self._lock:
+            self._refill_locked(self.clock())
+            if n > self._tokens:
+                return False
+            self._tokens -= n
+            return True
+
+    def tokens(self) -> float:
+        """Current (refilled) balance - diagnostics only."""
+        with self._lock:
+            self._refill_locked(self.clock())
+            return self._tokens
 
 
 class AdmissionController:
-    """Stateless checks over the engine's group occupancy."""
+    """Capacity checks over the engine's group occupancy, plus the
+    per-tenant rate-limit buckets (the only stateful part, and only when
+    the policy sets ``rate_limit_per_s``)."""
 
-    def __init__(self, policy: AdmissionPolicy | None = None):
+    def __init__(
+        self,
+        policy: AdmissionPolicy | None = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
         self.policy = policy or AdmissionPolicy()
+        self.clock = clock
+        self._buckets: dict = {}  # tenant name -> TokenBucket
+        self._buckets_lock = threading.Lock()
+
+    def rate_bucket(self, tenant: str) -> TokenBucket | None:
+        """The tenant's token bucket (created full on first use), or None
+        when the policy sets no rate limit."""
+        if self.policy.rate_limit_per_s is None:
+            return None
+        with self._buckets_lock:
+            if tenant not in self._buckets:
+                self._buckets[tenant] = TokenBucket(
+                    self.policy.rate_limit_per_s, self.policy.burst, clock=self.clock
+                )
+            return self._buckets[tenant]
+
+    def check_rate(self, tenant: str, ticks: int) -> None:
+        """Charge ``ticks`` against the tenant's bucket; typed rejection.
+
+        Raises `RateLimitedError` when the bucket cannot cover the
+        request - *before* anything is queued, so rate-limited work never
+        enters the accounting ledger.
+        """
+        bucket = self.rate_bucket(tenant)
+        if bucket is None or bucket.take(ticks):
+            return
+        if ticks > bucket.capacity:
+            raise RateLimitedError(
+                f"tenant {tenant!r} submitted {ticks} tick frames but the rate-limit "
+                f"burst is {bucket.capacity:g}; a request larger than the burst can "
+                f"never be admitted - split the stream or raise rate_limit_burst"
+            )
+        raise RateLimitedError(
+            f"tenant {tenant!r} rate-limited: {ticks} tick frames exceed the current "
+            f"token balance ({bucket.tokens():.1f} of {bucket.capacity:g}; refill "
+            f"{bucket.rate:g}/s) - back off and retry"
+        )
 
     def admit(self, spec: TenantSpec, occupancy: Mapping[tuple, int]) -> tuple:
         """Validate `spec` against current occupancy; return its group key.

@@ -66,6 +66,32 @@ Minimal use:
     engine.drain()
     records = engine.serve_report()
 
+Serving tier v2 adds the concurrency/scale axes:
+
+  async pump  `start()`/`stop()` run the pump on background thread(s),
+              draining the thread-safe `IngestQueue` off the caller's
+              thread.  Shutdown is clean (signal + join), fatal pump
+              errors surface on the next `submit`/`stop`, and the
+              accounting identity holds at every observable
+              interleaving: `accounting()` serializes against the pump,
+              so no reader ever sees ticks mid-flight between backlog
+              and served.
+  sharding    tenants with ``TenantSpec(shard="chips")`` land in groups
+              whose masked batched step runs the per-chip mapped tick
+              (`InterfaceSession` composes mask with ``shard="chips"``),
+              spreading one group over the `launch.mesh` devices -
+              bit-identical to solo runs on the vmap fallback.
+  autoscale   groups own a *capacity* (the padded lane axis) grown and
+              shrunk by `AutoscalePolicy`; resizes preserve every
+              occupied lane's `StepStats` accumulator row exactly
+              (recompiles are accumulator-preserving) and the jit cache
+              stays bounded by the set of capacities seen.
+              `deregister` frees a lane with swap-with-last compaction.
+  rate limit  `AdmissionPolicy.rate_limit_per_s` token buckets bound
+              each tenant's ingress; rejected submits raise the typed
+              `RateLimitedError` before anything is queued and count in
+              ``serve.rate_limited`` / ``serve.rate_limited_ticks``.
+
 The prefill/decode LM engine that previously lived in this module moved
 to `repro.serve.lm_engine`.
 """
@@ -74,6 +100,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
+import threading
 import time
 from typing import Callable
 
@@ -90,6 +118,8 @@ from repro.serve.admission import (
     AdmissionController,
     AdmissionPolicy,
     DeadlineExceededError,
+    RateLimitedError,
+    ServeError,
     validate_frames,
 )
 from repro.serve.health import HealthPolicy, HealthTracker, RetryPolicy
@@ -102,50 +132,183 @@ from repro.serve.tenant import compat_key as _compat_key
 class _Chunk:
     """One fixed-shape batched step: left-aligned frames plus lane mask."""
 
-    spikes: np.ndarray  # (lanes, flush_ticks, cores, neurons_per_core) bool
-    mask: np.ndarray  # (lanes, flush_ticks) bool
-    took: np.ndarray  # (lanes,) int: live ticks packed into each lane
+    spikes: np.ndarray  # (capacity, flush_ticks, cores, neurons_per_core) bool
+    mask: np.ndarray  # (capacity, flush_ticks) bool
+    took: np.ndarray  # (capacity,) int: live ticks packed into each lane
+
+
+@dataclasses.dataclass
+class _Staged:
+    """Backlogged frames plus the submit timestamp their deadline ages from."""
+
+    frames: np.ndarray  # (T_i, cores, neurons_per_core) bool
+    enqueued_at: float
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscalePolicy:
+    """How a group's lane *capacity* tracks its tenant occupancy.
+
+    Capacity is the padded lane axis of the batched step: chunks are
+    shaped ``(capacity, flush_ticks, ...)`` with free lanes all-masked,
+    so each distinct capacity is one jit cache entry.
+
+    min_lanes:    capacity floor (headroom for tenants yet to arrive).
+    grow_factor:  1.0 (default) is exact fit - capacity ==
+                  max(occupancy, min_lanes), one recompile per resize,
+                  zero padded compute.  > 1.0 grows geometrically
+                  (amortized recompiles under churn, padded lanes as the
+                  cost) and shrinks by the same factor.
+    shrink_at:    utilization at or below which a grown capacity steps
+                  back down (hysteresis; only meaningful with
+                  ``grow_factor > 1``).
+    """
+
+    min_lanes: int = 1
+    grow_factor: float = 1.0
+    shrink_at: float = 0.5
+
+    def __post_init__(self):
+        if self.min_lanes < 1:
+            raise ValueError(f"min_lanes must be >= 1, got {self.min_lanes}")
+        if self.grow_factor < 1.0:
+            raise ValueError(f"grow_factor must be >= 1, got {self.grow_factor}")
+        if not 0.0 < self.shrink_at <= 1.0:
+            raise ValueError(f"shrink_at must be in (0, 1], got {self.shrink_at}")
+
+    def target(self, occupancy: int, capacity: int) -> int:
+        """The capacity this policy wants for ``occupancy`` tenants."""
+        floor = max(self.min_lanes, occupancy, 1)
+        if self.grow_factor <= 1.0:
+            return floor
+        cap = max(capacity, 1)
+        while cap < occupancy:
+            cap = max(cap + 1, math.ceil(cap * self.grow_factor))
+        while cap > floor:
+            if occupancy > cap * self.shrink_at:
+                break
+            cap = max(floor, math.ceil(cap / self.grow_factor))
+        return cap
 
 
 class TenantGroup:
-    """Tenants sharing one precompiled session, stepped as vmap lanes."""
+    """Tenants sharing one precompiled session, stepped as vmap lanes.
 
-    def __init__(self, key, config, params, queue: IngestQueue, fault=None):
+    Lanes are *dense*: occupied lane indices are always ``0..len(lanes)-1``
+    (`remove` compacts with swap-with-last), and ``capacity >= len(lanes)``
+    is the padded batch axis the chunks and the per-lane accumulator are
+    shaped to.  Resizes preserve occupied accumulator rows exactly.
+    """
+
+    def __init__(self, key, config, params, queue: IngestQueue, fault=None,
+                 shard=None, autoscale: AutoscalePolicy | None = None):
         """Compile the shared session for ``key`` = (config, connectivity,
-        fault) and start with zero lanes; tenants join via `add`."""
+        fault, shard) and start with zero lanes; tenants join via `add`."""
         self.key = key
         self.config = config
         self.params = params
         self.queue = queue
         self.fault = fault
+        self.shard = shard
+        self.autoscale = autoscale or AutoscalePolicy()
         with obs_trace.span("serve.group_compile", cores=config.cores):
             self.session = Interface(config).compile(params, fault=fault)
         self.specs: dict = {}  # name -> TenantSpec
-        self.lanes: dict = {}  # name -> lane index
-        self._backlog: dict = {}  # name -> deque of host frame arrays
-        self._acc = None  # per-lane StepStats carry ((lanes,) leaves)
+        self.lanes: dict = {}  # name -> lane index (dense, < capacity)
+        self._backlog: dict = {}  # name -> deque of _Staged entries
+        self._acc = None  # per-lane StepStats carry ((capacity,) leaves)
+        self.capacity = 0  # padded lane axis of chunks + accumulator
+        self.capacities_seen: set = set()  # one jit cache entry each
         # per-lane global tick offset of the compiled fault's drop stream
         self._lane_ticks = np.zeros((0,), np.int32)
 
     def add(self, spec: TenantSpec) -> int:
-        """Assign ``spec`` the next lane index and return it; an existing
-        accumulator grows a zero row so running totals are preserved."""
+        """Assign ``spec`` the lowest free lane index and return it.
+
+        Occupancy beyond the current capacity triggers an autoscale grow
+        (the accumulator pads with zero rows - running totals of every
+        existing lane are preserved); reusing a previously freed slot
+        restarts that slot's carry at zero.
+        """
         lane = len(self.lanes)
         self.specs[spec.name] = spec
         self.lanes[spec.name] = lane
         self._backlog[spec.name] = collections.deque()
-        self._lane_ticks = np.concatenate(
-            [self._lane_ticks, np.zeros((1,), np.int32)]
-        )
-        if self._acc is not None:
-            # new lane: its accumulator row starts at zero
-            self._acc = self._commit(
-                jax.tree.map(
-                    lambda x: np.concatenate([np.asarray(x), np.zeros((1,), x.dtype)]),
-                    self._acc,
-                )
-            )
+        if lane >= self.capacity:
+            self.resize(self.autoscale.target(lane + 1, self.capacity))
+        else:
+            # reusing a freed slot: its carry restarts from zero
+            self._lane_ticks[lane] = 0
+            if self._acc is not None:
+                def zero_row(x):
+                    x = np.asarray(x).copy()
+                    x[lane] = 0
+                    return x
+                self._acc = self._commit(jax.tree.map(zero_row, self._acc))
         return lane
+
+    def remove(self, name: str) -> None:
+        """Free a lane with swap-with-last compaction, then maybe shrink.
+
+        The tenant occupying the highest lane moves into the freed slot -
+        its accumulator row and fault-tick offset move with it, so every
+        surviving tenant's running stats stay bit-identical across the
+        removal.  Lanes stay dense, which is what lets a shrink truncate
+        only free trailing rows.
+        """
+        lane = self.lanes.pop(name)
+        self.specs.pop(name)
+        self._backlog.pop(name)
+        last = len(self.lanes)  # index the ex-last tenant held before the pop
+        if lane != last:
+            mover = next(n for n, i in self.lanes.items() if i == last)
+            self.lanes[mover] = lane
+            self._lane_ticks[lane] = self._lane_ticks[last]
+            if self._acc is not None:
+                def move_row(x):
+                    x = np.asarray(x).copy()
+                    x[lane] = x[last]
+                    return x
+                self._acc = self._commit(jax.tree.map(move_row, self._acc))
+        self._lane_ticks[last] = 0
+        self.resize(self.autoscale.target(len(self.lanes), self.capacity))
+
+    def resize(self, new_capacity: int) -> None:
+        """Re-pad the lane axis to ``new_capacity``, preserving rows.
+
+        Occupied rows (always the leading ones - lanes are dense) carry
+        over exactly; growth pads zero rows, shrink truncates free
+        trailing rows.  A no-op at the current capacity, so the jit
+        cache grows only with the set of distinct capacities seen.
+        """
+        if new_capacity == self.capacity:
+            return
+        if new_capacity < len(self.lanes):
+            raise ValueError(
+                f"cannot resize to {new_capacity} lanes below occupancy {len(self.lanes)}"
+            )
+        keep = min(self.capacity, new_capacity)
+        lane_ticks = np.zeros((new_capacity,), np.int32)
+        lane_ticks[:keep] = self._lane_ticks[:keep]
+        self._lane_ticks = lane_ticks
+        if self._acc is not None:
+            def fit_rows(x):
+                x = np.asarray(x)
+                out = np.zeros((new_capacity,), x.dtype)
+                out[:keep] = x[:keep]
+                return out
+            self._acc = self._commit(jax.tree.map(fit_rows, self._acc))
+        self.capacity = new_capacity
+        self.capacities_seen.add(new_capacity)
+
+    def jit_cache_entries(self) -> int:
+        """Compiled entries of this group's masked batched step."""
+        session = self.session
+        fns = (session._masked_sharded_cache if self.shard is not None
+               else session._masked_cache)
+        if not fns:
+            return 0
+        return fns["run_batched"]._cache_size()
 
     @staticmethod
     def _commit(tree):
@@ -164,16 +327,16 @@ class TenantGroup:
         return sorted(self.lanes, key=self.lanes.get)
 
     def lane_stats(self):
-        """Per-lane cumulative `StepStats` carry ((lanes,) leaves)."""
+        """Per-lane cumulative `StepStats` carry ((capacity,) leaves)."""
         if self._acc is None:
-            b = len(self.lanes)
+            b = self.capacity
             self._acc = self._commit(
                 jax.tree.map(lambda x: np.zeros((b,), x.dtype), StepStats.zeros())
             )
         return self._acc
 
     def fault_tick0(self) -> np.ndarray:
-        """(lanes,) global tick offsets for the compiled fault stream."""
+        """(capacity,) global tick offsets for the compiled fault stream."""
         return self._lane_ticks
 
     def advance_fault_ticks(self, flush_ticks: int) -> None:
@@ -181,7 +344,12 @@ class TenantGroup:
         self._lane_ticks = self._lane_ticks + np.int32(flush_ticks)
 
     def stage(self, requests) -> None:
-        """Append flushed requests to the per-lane host backlog."""
+        """Append flushed requests to the per-lane host backlog.
+
+        Each entry keeps its request's submit timestamp, so backlogged
+        frames stay age-checkable against the shed deadline (a slow pump
+        must not let staged work escape its deadline).
+        """
         cfg = self.config
         for req in requests:
             frames = np.asarray(req.frames)
@@ -190,28 +358,31 @@ class TenantGroup:
                     f"tenant {req.tenant!r} frames shaped {frames.shape[1:]} do not match the "
                     f"group fabric ({cfg.cores}, {cfg.neurons_per_core})"
                 )
-            self._backlog[req.tenant].append(frames.astype(bool))
+            self._backlog[req.tenant].append(
+                _Staged(frames.astype(bool), enqueued_at=req.enqueued_at)
+            )
 
     def backlog_ticks(self) -> int:
         """Staged-but-unserved ticks across every lane of this group."""
-        return sum(f.shape[0] for q in self._backlog.values() for f in q)
+        return sum(s.frames.shape[0] for q in self._backlog.values() for s in q)
 
     def backlog_ticks_of(self, name: str) -> int:
         """Staged-but-unserved ticks for one tenant."""
-        return sum(f.shape[0] for f in self._backlog[name])
+        return sum(s.frames.shape[0] for s in self._backlog[name])
 
     def take_chunk(self, flush_ticks: int, skip=frozenset()) -> _Chunk | None:
         """Pack up to ``flush_ticks`` backlog ticks per lane, left-aligned.
 
-        Shapes are fixed at (lanes, flush_ticks, ...) regardless of how
-        much backlog exists, so the jitted batched step compiles once per
-        lane count - partial chunks ride the mask, not a new shape.
+        Shapes are fixed at (capacity, flush_ticks, ...) regardless of
+        how much backlog exists, so the jitted batched step compiles once
+        per capacity - partial chunks ride the mask, not a new shape, and
+        free lanes stay all-False padding.
 
         skip: lane names (quarantined tenants) left out of this chunk -
         their backlog is retained untouched and their mask row stays
         all-False, so degradation never changes shapes or the jit cache.
         """
-        b = len(self.lanes)
+        b = self.capacity
         cfg = self.config
         took = np.zeros((b,), np.int64)
         spikes = np.zeros((b, flush_ticks, cfg.cores, cfg.neurons_per_core), bool)
@@ -222,12 +393,15 @@ class TenantGroup:
             queue = self._backlog[name]
             t = 0
             while queue and t < flush_ticks:
-                frames = queue.popleft()
+                staged = queue.popleft()
+                frames = staged.frames
                 take = min(frames.shape[0], flush_ticks - t)
                 spikes[lane, t : t + take] = frames[:take]
                 t += take
                 if take < frames.shape[0]:
-                    queue.appendleft(frames[take:])
+                    queue.appendleft(
+                        _Staged(frames[take:], enqueued_at=staged.enqueued_at)
+                    )
             mask[lane, :t] = True
             took[lane] = t
         if not took.any():
@@ -265,6 +439,19 @@ class ServeEngine:
                        ``serve`` prefix (flush wall-time histogram +
                        straggler counter).
     sleep:             injectable backoff sleep (fake-clock tests).
+    autoscale:         `AutoscalePolicy` governing every group's lane
+                       capacity (exact fit by default).
+
+    Threading (v2): the engine is safe to drive from producer threads
+    concurrent with a background pump.  Two locks, always taken in this
+    order:
+
+      _pump_mutex   serializes whole pump iterations (and accounting /
+                    register / deregister against them), so the ledger
+                    is never observed with a chunk's ticks in flight.
+      _state_lock   guards the ledger dicts, queue polls, and backlog
+                    mutation; `submit` takes only this one, so producers
+                    never block behind a full pump iteration.
     """
 
     def __init__(
@@ -282,12 +469,13 @@ class ServeEngine:
         health: HealthPolicy | None = None,
         watchdog: Watchdog | None = None,
         sleep: Callable[[float], None] = time.sleep,
+        autoscale: AutoscalePolicy | None = None,
     ):
         if flush_ticks < 1:
             raise ValueError(f"flush_ticks must be >= 1, got {flush_ticks}")
         self.flush_ticks = flush_ticks
         self.flush_deadline_s = flush_deadline_s
-        self.admission = AdmissionController(policy)
+        self.admission = AdmissionController(policy, clock=clock)
         self.registry = registry or obs_metrics.MetricsRegistry()
         self.sink = sink
         self.keep_currents = keep_currents
@@ -297,6 +485,7 @@ class ServeEngine:
         self.health = HealthTracker(health, registry=self.registry, clock=clock)
         self.watchdog = watchdog or Watchdog(registry=self.registry, prefix="serve")
         self._sleep = sleep
+        self.autoscale = autoscale or AutoscalePolicy()
         self.groups: dict = {}  # compat key -> TenantGroup
         self._tenant_group: dict = {}  # tenant name -> TenantGroup
         self._rounds: dict = {}  # tenant name -> scenario round counter
@@ -305,12 +494,20 @@ class ServeEngine:
         self._shed: dict = {}  # tenant name -> ticks shed past deadline
         self._events_seen: dict = {}  # tenant name -> cumulative events read
         self._currents: dict = {}  # tenant name -> list of (t_i, C, N) arrays
+        self._retired: set = set()  # deregistered tenants (ledger retained)
         self._shed_log: collections.deque = collections.deque(maxlen=256)
         self._round = 0  # pump round counter (the chaos plan's time axis)
         self._faulted_this_round: set = set()  # lanes faulted in this pump
         self._busy_s = 0.0
         self._ticks = 0
         self._events = 0.0
+        # -- threading (see class docstring for the lock order) --
+        self._pump_mutex = threading.RLock()
+        self._state_lock = threading.RLock()
+        self._pump_threads: list = []
+        self._stop_event = threading.Event()
+        self._pump_fatal: BaseException | None = None
+        self._pump_error_log: collections.deque = collections.deque(maxlen=64)
 
     # ---- registration / ingest -------------------------------------------
 
@@ -323,37 +520,78 @@ class ServeEngine:
         compatibility key pins connectivity to the seed, so passing a
         conflicting params object for an occupied key is an error.
         """
-        if spec.name in self._tenant_group:
-            raise ValueError(f"tenant {spec.name!r} is already registered")
-        occupancy = {k: len(g.lanes) for k, g in self.groups.items()}
-        key = self.admission.admit(spec, occupancy)
-        group = self.groups.get(key)
-        if group is None:
-            if params is None:
-                params = default_connectivity(spec.config, spec.connectivity_seed)
-            queue = IngestQueue(
-                flush_frames=self.flush_ticks,
-                flush_deadline_s=self.flush_deadline_s,
-                clock=self.clock,
-                frame_shape=(spec.config.cores, spec.config.neurons_per_core),
-            )
-            group = TenantGroup(key, spec.config, params, queue, fault=spec.fault)
-            self.groups[key] = group
-        elif params is not None:
-            raise ValueError(
-                f"tenant {spec.name!r}: explicit params conflict with the already-compiled "
-                f"group for this (config, connectivity_seed); omit params to join it"
-            )
-        group.add(spec)
-        self._tenant_group[spec.name] = group
-        self._rounds[spec.name] = 0
-        self._served[spec.name] = 0
-        self._submitted[spec.name] = 0
-        self._shed[spec.name] = 0
-        self._events_seen[spec.name] = 0.0
-        self._currents[spec.name] = []
-        self.health.add(spec.name)
-        return spec
+        with self._pump_mutex, self._state_lock:
+            if spec.name in self._tenant_group:
+                raise ValueError(f"tenant {spec.name!r} is already registered")
+            occupancy = {k: len(g.lanes) for k, g in self.groups.items()}
+            key = self.admission.admit(spec, occupancy)
+            group = self.groups.get(key)
+            if group is None:
+                if params is None:
+                    params = default_connectivity(spec.config, spec.connectivity_seed)
+                queue = IngestQueue(
+                    flush_frames=self.flush_ticks,
+                    flush_deadline_s=self.flush_deadline_s,
+                    clock=self.clock,
+                    frame_shape=(spec.config.cores, spec.config.neurons_per_core),
+                )
+                group = TenantGroup(
+                    key, spec.config, params, queue,
+                    fault=spec.fault, shard=spec.shard, autoscale=self.autoscale,
+                )
+                self.groups[key] = group
+            elif params is not None:
+                raise ValueError(
+                    f"tenant {spec.name!r}: explicit params conflict with the already-compiled "
+                    f"group for this (config, connectivity_seed); omit params to join it"
+                )
+            before = group.capacity
+            group.add(spec)
+            self._note_resize(before, group.capacity)
+            self._tenant_group[spec.name] = group
+            self._retired.discard(spec.name)
+            self._rounds[spec.name] = 0
+            self._served[spec.name] = 0
+            self._submitted[spec.name] = 0
+            self._shed[spec.name] = 0
+            self._events_seen[spec.name] = 0.0
+            self._currents[spec.name] = []
+            self.health.add(spec.name)
+            return spec
+
+    def deregister(self, tenant: str) -> None:
+        """Retire a tenant, freeing its lane (autoscale may shrink).
+
+        Requires the tenant to be fully drained - deregistering with
+        pending work raises `ServeError` (serve or shed it first, the
+        ledger must close).  The tenant's submitted/served/shed columns
+        are retained so `accounting()` keeps closing fleet-wide; its
+        group is torn down when the last lane leaves.
+        """
+        with self._pump_mutex, self._state_lock:
+            group = self._group_of(tenant)
+            pending = group.queue.pending_by_tenant().get(tenant, 0)
+            pending += group.backlog_ticks_of(tenant)
+            if pending:
+                raise ServeError(
+                    f"tenant {tenant!r} still has {pending} pending ticks; "
+                    f"drain or shed before deregistering"
+                )
+            before = group.capacity
+            group.remove(tenant)
+            self._note_resize(before, group.capacity)
+            del self._tenant_group[tenant]
+            self._retired.add(tenant)
+            self.health.remove(tenant)
+            if not group.lanes:
+                del self.groups[group.key]
+
+    def _note_resize(self, before: int, after: int) -> None:
+        """Count a group capacity change on the autoscale counters."""
+        if after > before:
+            self.registry.counter("serve.autoscale.grow").inc()
+        elif after < before:
+            self.registry.counter("serve.autoscale.shrink").inc()
 
     def submit(self, tenant: str, frames) -> None:
         """Enqueue a spike stream for one tenant.
@@ -373,20 +611,33 @@ class ServeEngine:
             (nothing malformed ever reaches the jitted step).
           AdmissionError: the request exceeds the tenant's per-request
             or in-flight tick budget.
+          RateLimitedError: the tenant's token bucket is empty
+            (``AdmissionPolicy.rate_limit_per_s``); nothing is queued.
           QueueOverflowError: the group's bounded queue is full.
+          ServeError: a background pump thread died; the original
+            exception is chained (`start`/`stop`).
         """
+        self._raise_pump_fatal()
         group = self._group_of(tenant)
         cfg = group.config
         frames = validate_frames(
             frames, shape=(cfg.cores, cfg.neurons_per_core), tenant=tenant
         )
-        self.admission.validate_request(
-            tenant,
-            int(frames.shape[0]),
-            pending_frames=group.queue.pending_frames() + group.backlog_ticks(),
-        )
-        group.queue.submit(tenant, frames)
-        self._submitted[tenant] += int(frames.shape[0])
+        ticks = int(frames.shape[0])
+        with self._state_lock:
+            self.admission.validate_request(
+                tenant,
+                ticks,
+                pending_frames=group.queue.pending_frames() + group.backlog_ticks(),
+            )
+            try:
+                self.admission.check_rate(tenant, ticks)
+            except RateLimitedError:
+                self.registry.counter("serve.rate_limited").inc()
+                self.registry.counter("serve.rate_limited_ticks").inc(ticks)
+                raise
+            group.queue.submit(tenant, frames)
+            self._submitted[tenant] += ticks
 
     def submit_scenario(self, tenant: str, ticks: int) -> None:
         """Generate and enqueue one round of the tenant's traffic scenario."""
@@ -414,29 +665,37 @@ class ServeEngine:
 
         Each pump is one *round* of the chaos clock: quarantine cooldowns
         age first, then this round's scheduled lane faults land, then
-        expired requests are shed, and finally every group steps with its
-        quarantined lanes masked out.
+        expired requests are shed (from the queue *and* the staged
+        backlog), and finally every group steps with its quarantined
+        lanes masked out.
+
+        Thread-safe: the whole iteration holds ``_pump_mutex``, so pumps
+        (foreground or background) never interleave, and `accounting()`
+        never observes a chunk's ticks in flight.
         """
-        self._round += 1
-        self.health.advance()
-        self._faulted_this_round.clear()
-        if self.chaos is not None:
-            for ev in self.chaos.lane_faults(self._round):
-                self._lane_fault(ev)
-        ticks_done = 0
-        depth_hist = self.registry.histogram("serve.queue_depth")
-        for group in self.groups.values():
-            depth_hist.add(group.queue.depth())
-            group.stage(self._shed_expired(group.queue.poll(force=force)))
-            skip = {n for n in group.lanes if not self.health.usable(n)}
-            chunks = []
-            while True:
-                chunk = group.take_chunk(self.flush_ticks, skip=skip)
-                if chunk is None:
-                    break
-                chunks.append(chunk)
-            ticks_done += self._execute(group, chunks)
-        return ticks_done
+        with self._pump_mutex:
+            self._round += 1
+            self.health.advance()
+            self._faulted_this_round.clear()
+            if self.chaos is not None:
+                for ev in self.chaos.lane_faults(self._round):
+                    self._lane_fault(ev)
+            ticks_done = 0
+            depth_hist = self.registry.histogram("serve.queue_depth")
+            for group in list(self.groups.values()):
+                with self._state_lock:
+                    depth_hist.add(group.queue.depth())
+                    group.stage(self._shed_expired(group.queue.poll(force=force)))
+                    self._shed_backlog(group)
+                    skip = {n for n in group.lanes if not self.health.usable(n)}
+                    chunks = []
+                    while True:
+                        chunk = group.take_chunk(self.flush_ticks, skip=skip)
+                        if chunk is None:
+                            break
+                        chunks.append(chunk)
+                ticks_done += self._execute(group, chunks)
+            return ticks_done
 
     def drain(self) -> int:
         """Serve until every queue and backlog is empty; returns ticks.
@@ -449,10 +708,103 @@ class ServeEngine:
         while True:
             served = self.pump(force=True)
             total += served
-            if served == 0 and not any(
-                g.queue.depth() or g.backlog_ticks() for g in self.groups.values()
-            ):
+            with self._state_lock:
+                idle = not any(
+                    g.queue.depth() or g.backlog_ticks() for g in self.groups.values()
+                )
+            if served == 0 and idle:
                 return total
+
+    # ---- background pump (v2) --------------------------------------------
+
+    def start(self, poll_interval_s: float = 0.001, threads: int = 1) -> None:
+        """Run the pump on background daemon thread(s).
+
+        Producers keep calling `submit`/`submit_scenario` from any
+        thread; the pump drains the queues concurrently.  With several
+        threads, whole pump iterations still serialize on
+        ``_pump_mutex`` - extra threads buy responsiveness when one
+        thread is sleeping, not parallel device work.
+
+        A `RetriesExhaustedError` inside a background pump is survivable
+        by design (the failed work was restaged): it lands in
+        `pump_errors()` and the loop continues.  Any other exception is
+        fatal - the thread stops and the error re-raises (wrapped in
+        `ServeError`) from the next `submit`/`stop`.
+        """
+        if poll_interval_s <= 0:
+            raise ValueError(f"poll_interval_s must be > 0, got {poll_interval_s}")
+        if threads < 1:
+            raise ValueError(f"threads must be >= 1, got {threads}")
+        if self._pump_threads:
+            raise ServeError("pump threads already running; call stop() first")
+        self._raise_pump_fatal()
+        self._stop_event.clear()
+        for i in range(threads):
+            t = threading.Thread(
+                target=self._pump_loop,
+                args=(poll_interval_s,),
+                name=f"serve-pump-{i}",
+                daemon=True,
+            )
+            t.start()
+            self._pump_threads.append(t)
+
+    def stop(self, drain: bool = False) -> None:
+        """Stop the background pump; join every thread; surface fatals.
+
+        drain: serve everything still queued (on the caller's thread)
+        after the pump threads exit.  Idempotent when nothing runs.
+        """
+        self._stop_event.set()
+        for t in self._pump_threads:
+            t.join()
+        self._pump_threads.clear()
+        if drain:
+            self.drain()
+        self._raise_pump_fatal()
+
+    @property
+    def running(self) -> bool:
+        """True while background pump threads are live."""
+        return any(t.is_alive() for t in self._pump_threads)
+
+    def pump_errors(self) -> list:
+        """Recent survivable background-pump errors (bounded, oldest first)."""
+        return list(self._pump_error_log)
+
+    def __enter__(self) -> "ServeEngine":
+        self.start()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        # don't mask an in-flight exception with a drain that may re-raise
+        self.stop(drain=exc_type is None)
+
+    def _pump_loop(self, poll_interval_s: float) -> None:
+        """Body of one background pump thread."""
+        while not self._stop_event.is_set():
+            try:
+                served = self.pump(force=True)
+            except RetriesExhaustedError as e:
+                # unserved work was restaged by _execute; record and go on
+                self._pump_error_log.append(e)
+                served = 0
+            except BaseException as e:  # noqa: BLE001 - surfaced via _raise_pump_fatal
+                self._pump_fatal = e
+                self.registry.counter("serve.pump.fatal").inc()
+                return
+            if served == 0:
+                self._stop_event.wait(poll_interval_s)
+
+    def _raise_pump_fatal(self) -> None:
+        """Re-raise a background pump thread's fatal error, chained."""
+        fatal = self._pump_fatal
+        if fatal is not None:
+            self._pump_fatal = None
+            raise ServeError(
+                f"background pump thread died: {type(fatal).__name__}: {fatal}"
+            ) from fatal
 
     def _shed_expired(self, requests) -> list:
         """Drop queued requests older than the policy's shed deadline.
@@ -481,6 +833,41 @@ class ServeEngine:
             self.registry.counter("serve.shed_ticks").inc(req.ticks)
         return kept
 
+    def _shed_backlog(self, group: TenantGroup) -> None:
+        """Shed staged backlog frames older than the policy deadline.
+
+        `_shed_expired` only ages requests still in the ingest queue;
+        this is the other half - frames already staged on the backlog
+        (a slow pump, a quarantined lane) age against the same
+        ``shed_deadline_s`` from their submit time, so the deadline
+        means what it says regardless of where the work waits.
+        """
+        limit = self.admission.policy.shed_deadline_s
+        if limit is None:
+            return
+        now = self.clock()
+        for name, queue in group._backlog.items():
+            if not queue:
+                continue
+            kept: collections.deque = collections.deque()
+            shed_ticks = 0
+            for staged in queue:
+                age = now - staged.enqueued_at
+                if age <= limit:
+                    kept.append(staged)
+                    continue
+                ticks = int(staged.frames.shape[0])
+                shed_ticks += ticks
+                self._shed_log.append(DeadlineExceededError(
+                    f"tenant {name!r}: staged frames aged {age:.4f}s in backlog "
+                    f"(shed_deadline_s={limit}); {ticks} tick frames shed"
+                ))
+                self.registry.counter("serve.shed").inc()
+                self.registry.counter("serve.shed_ticks").inc(ticks)
+            if shed_ticks:
+                self._shed[name] = self._shed.get(name, 0) + shed_ticks
+                group._backlog[name] = kept
+
     def _lane_fault(self, ev) -> None:
         """One injected lane fault: advance the tenant's health machine."""
         if ev.tenant not in self._tenant_group:
@@ -496,11 +883,14 @@ class ServeEngine:
         Only `TransientFaultError`s are retried; anything else (a real
         bug) propagates immediately.  After the budget is spent a
         `RetriesExhaustedError` chains the last fault.  A successful
-        retry records the episode in ``serve.recovery_ms``.
+        retry records the episode in ``serve.recovery_ms``, measured
+        from when the *first attempt began* - the failed attempt's own
+        wall time is part of the outage, not free.
         """
         policy = self.retry
         delay = policy.backoff_base_s
-        t_first = None
+        t_start = self.clock()
+        failed = False
         for attempt in range(policy.max_retries + 1):
             try:
                 out = fn()
@@ -508,8 +898,7 @@ class ServeEngine:
                 self.registry.counter("serve.faults").inc()
                 self.registry.counter("serve.retries").inc()
                 self.registry.counter(f"serve.retries.{what}").inc()
-                if t_first is None:
-                    t_first = self.clock()
+                failed = True
                 if attempt >= policy.max_retries:
                     self.registry.counter("serve.retries_exhausted").inc()
                     raise RetriesExhaustedError(
@@ -519,10 +908,10 @@ class ServeEngine:
                 self._sleep(delay)
                 delay *= policy.backoff_factor
                 continue
-            if t_first is not None:
+            if failed:
                 self.registry.counter("serve.retry_recoveries").inc()
                 self.registry.histogram("serve.recovery_ms").add(
-                    max(self.clock() - t_first, 0.0) * 1e3
+                    max(self.clock() - t_start, 0.0) * 1e3
                 )
             return out
         raise AssertionError("unreachable")  # loop always returns or raises
@@ -533,15 +922,20 @@ class ServeEngine:
         Called before a `RetriesExhaustedError` propagates: the ticks a
         failed chunk carried go back to ``pending``, keeping
         submitted == served + shed + pending true even across hard
-        failures (and letting a later pump serve them).
+        failures (and letting a later pump serve them).  Restaged frames
+        take a fresh submit timestamp - a chunk packs frames from many
+        requests, so the original per-request ages are gone; the shed
+        deadline restarts rather than guessing.
         """
-        for chunk in reversed(chunks):
-            for name, lane in group.lanes.items():
-                took = int(chunk.took[lane])
-                if took:
-                    group._backlog[name].appendleft(
-                        np.asarray(chunk.spikes[lane, :took])
-                    )
+        now = self.clock()
+        with self._state_lock:
+            for chunk in reversed(chunks):
+                for name, lane in group.lanes.items():
+                    took = int(chunk.took[lane])
+                    if took:
+                        group._backlog[name].appendleft(_Staged(
+                            np.asarray(chunk.spikes[lane, :took]), enqueued_at=now
+                        ))
 
     def _step(self, group: TenantGroup, spikes, mask):
         """One batched masked step (the unit a retry replays)."""
@@ -551,7 +945,7 @@ class ServeEngine:
         if group.session.fault is not None and group.session.fault.perturbs_spikes:
             kw["fault_tick0"] = group.fault_tick0()
         return group.session.run_batched(
-            spikes, mask=mask, stats0=group.lane_stats(), **kw
+            spikes, mask=mask, stats0=group.lane_stats(), shard=group.shard, **kw
         )
 
     def _execute(self, group: TenantGroup, chunks: list) -> int:
@@ -617,6 +1011,10 @@ class ServeEngine:
     # ---- metrics ----------------------------------------------------------
 
     def _record(self, group, chunk: _Chunk, currents, acc, wall_s: float) -> None:
+        with self._state_lock:
+            self._record_locked(group, chunk, currents, acc, wall_s)
+
+    def _record_locked(self, group, chunk: _Chunk, currents, acc, wall_s: float) -> None:
         tick_ms = wall_s * 1e3 / self.flush_ticks
         fleet_events = 0.0
         events_now = np.asarray(acc.events)
@@ -654,17 +1052,20 @@ class ServeEngine:
         so the closure identity restarts from zero; reset with pending
         work still queued and it will read as over-served until drained.
         """
-        self.registry.counters.clear()
-        self.registry.histograms.clear()
-        for name in self._served:
-            self._served[name] = 0
-            self._submitted[name] = 0
-            self._shed[name] = 0
-            self._currents[name].clear()
-        self._shed_log.clear()
-        self._busy_s = 0.0
-        self._ticks = 0
-        self._events = 0.0
+        with self._pump_mutex, self._state_lock:
+            self.registry.counters.clear()
+            self.registry.histograms.clear()
+            for name in self._served:
+                self._served[name] = 0
+                self._submitted[name] = 0
+                self._shed[name] = 0
+            for chunks in self._currents.values():
+                chunks.clear()
+            self._shed_log.clear()
+            self._pump_error_log.clear()
+            self._busy_s = 0.0
+            self._ticks = 0
+            self._events = 0.0
 
     def queue_depth(self) -> int:
         """Requests currently queued across all groups."""
@@ -703,23 +1104,37 @@ class ServeEngine:
         For every tenant, ``submitted == served + shed + pending`` must
         hold at any quiescent point - through retries, quarantines, and
         sheds.  The chaos soak asserts ``closes`` after every drain.
+
+        Thread-safe against a running background pump: both engine locks
+        are held, so the ledger is read between pump iterations - a
+        chunk's ticks are never observed mid-flight between backlog and
+        served.  Retired (deregistered) tenants keep their closed rows
+        with ``pending == 0``.
         """
-        per: dict = {}
-        for group in self.groups.values():
-            queued = group.queue.pending_by_tenant()
-            for name in group.lanes:
-                pending = queued.get(name, 0) + group.backlog_ticks_of(name)
+        with self._pump_mutex, self._state_lock:
+            per: dict = {}
+            for name in self._retired:
                 per[name] = {
-                    "submitted": self._submitted[name],
-                    "served": self._served[name],
+                    "submitted": self._submitted.get(name, 0),
+                    "served": self._served.get(name, 0),
                     "shed": self._shed.get(name, 0),
-                    "pending": int(pending),
+                    "pending": 0,
                 }
-        closes = all(
-            v["submitted"] == v["served"] + v["shed"] + v["pending"]
-            for v in per.values()
-        )
-        return {"tenants": per, "closes": closes}
+            for group in self.groups.values():
+                queued = group.queue.pending_by_tenant()
+                for name in group.lanes:
+                    pending = queued.get(name, 0) + group.backlog_ticks_of(name)
+                    per[name] = {
+                        "submitted": self._submitted[name],
+                        "served": self._served[name],
+                        "shed": self._shed.get(name, 0),
+                        "pending": int(pending),
+                    }
+            closes = all(
+                v["submitted"] == v["served"] + v["shed"] + v["pending"]
+                for v in per.values()
+            )
+            return {"tenants": per, "closes": closes}
 
     def events_per_sec(self) -> float:
         """Sustained routed events/sec over engine step wall clock."""
@@ -755,6 +1170,11 @@ class ServeEngine:
             "probes": "serve.probes",
             "recoveries": "serve.recoveries",
             "stragglers": "serve.stragglers",
+            "rate_limited": "serve.rate_limited",
+            "rate_limited_ticks": "serve.rate_limited_ticks",
+            "autoscale_grow": "serve.autoscale.grow",
+            "autoscale_shrink": "serve.autoscale.shrink",
+            "pump_fatal": "serve.pump.fatal",
         }
         out = {}
         for label, counter in names.items():
@@ -813,6 +1233,7 @@ class ServeEngine:
             "tenant": "__fleet__",
             "tenants": len(self._tenant_group),
             "groups": len(self.groups),
+            "lane_capacity": sum(g.capacity for g in self.groups.values()),
             "ticks": self._ticks,
             "events": self._events,
             "events_per_sec": self.events_per_sec(),

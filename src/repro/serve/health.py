@@ -104,6 +104,12 @@ class HealthTracker:
         self._fails.setdefault(name, 0)
         self._successes.setdefault(name, 0)
 
+    def remove(self, name: str) -> None:
+        """Forget a deregistered lane (autoscale shrink path)."""
+        for table in (self._states, self._fails, self._successes,
+                      self._cooldown, self._failed_at):
+            table.pop(name, None)
+
     def state(self, name: str) -> LaneState:
         return self._states[name]
 

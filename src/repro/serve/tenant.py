@@ -24,6 +24,7 @@ import repro.core  # noqa: F401  (initialize core first: breaks the config<->cor
 from repro import traffic
 from repro.ft.faults import FaultModel
 from repro.interface.config import InterfaceConfig, as_interface_config
+from repro.interface.session import CompositionError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +47,15 @@ class TenantSpec:
                         faulted tenants never share a session with clean
                         ones - which is what keeps non-faulted tenants
                         bit-identical to a fault-free run.
+    shard:              optional execution placement: ``"chips"`` steps
+                        this tenant's group through the per-chip mapped
+                        tick (shard_map over the `launch.mesh` device
+                        mesh, or the single-device vmap fallback), so
+                        the group's lanes spread over devices.  Requires
+                        ``config.chips > 1`` - requesting it on a
+                        one-chip config raises the typed
+                        `CompositionError` instead of silently running
+                        flat.  Part of the compatibility key.
     """
 
     name: str
@@ -55,11 +65,24 @@ class TenantSpec:
     seed: int = 0
     connectivity_seed: int = 0
     fault: FaultModel | None = None
+    shard: str | None = None
 
     def __post_init__(self):
         if not self.name:
             raise ValueError("tenant name must be non-empty")
         object.__setattr__(self, "config", as_interface_config(self.config))
+        if self.shard is not None:
+            if self.shard != "chips":
+                raise ValueError(
+                    f"tenant {self.name!r}: unknown shard mode {self.shard!r}; "
+                    f"expected None or 'chips'"
+                )
+            if self.config.chips == 1:
+                raise CompositionError(
+                    f"tenant {self.name!r}: shard='chips' on a one-chip config would "
+                    f"silently run the flat path; use a config with chips > 1 or omit "
+                    f"shard"
+                )
         if self.fault is not None:
             if not isinstance(self.fault, FaultModel):
                 raise ValueError(
@@ -105,10 +128,12 @@ def compat_key(spec: TenantSpec) -> tuple:
     Tenants mapping to the same key are guaranteed steppable as lanes of
     one `InterfaceSession.run_batched` call: the session binds (config,
     connectivity) - and, when set, the compiled-in `FaultModel` - so all
-    three are pinned here.  Scenario/seed stay out - a group legitimately
-    mixes workloads.
+    three are pinned here, plus the ``shard`` placement (a sharded and a
+    flat group execute different mapped programs and must not share
+    lanes).  Scenario/seed stay out - a group legitimately mixes
+    workloads.
     """
-    return (spec.config, spec.connectivity_seed, spec.fault)
+    return (spec.config, spec.connectivity_seed, spec.fault, spec.shard)
 
 
 def default_connectivity(config: InterfaceConfig, connectivity_seed: int):

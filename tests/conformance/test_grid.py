@@ -35,7 +35,18 @@ def _setup(arb_scheme, noc_scheme, scenario, ticks=TICKS):
     return cfg, params, spikes
 
 
-@pytest.mark.parametrize("scenario", SCENARIOS)
+# The heavyweight scenarios (10-35s each: dense or clustered streams hit
+# the sparse paths' worst case) conform under ``-m slow``; the fast lane
+# keeps the cheap ones for per-commit path coverage.
+_SLOW_SCENARIOS = {"clustered", "mixture", "dvs_trace", "hotspot_core",
+                   "synchronized_burst"}
+
+
+@pytest.mark.parametrize(
+    "scenario",
+    [pytest.param(s, marks=(pytest.mark.slow,) if s in _SLOW_SCENARIOS else ())
+     for s in SCENARIOS],
+)
 def test_scenario_conforms_across_all_paths(scenario):
     """Acceptance: currents bit-identical across oracle / event / pallas /
     pallas_sparse / chips>1 / sharded-vmap for every registered scenario."""

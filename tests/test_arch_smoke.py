@@ -15,8 +15,16 @@ from repro.train import step as ts
 
 KEY = jax.random.PRNGKey(0)
 
+# One small arch stays in the fast lane as the smoke representative; the
+# heavyweights (10-80s of CPU compile+step each) run under ``-m slow``.
+_FAST_ARCHS = {"internlm2-1.8b"}
 
-@pytest.mark.parametrize("arch", sorted(configs.ARCHS))
+
+@pytest.mark.parametrize(
+    "arch",
+    [pytest.param(a, marks=() if a in _FAST_ARCHS else (pytest.mark.slow,))
+     for a in sorted(configs.ARCHS)],
+)
 def test_smoke_forward_and_train_step(arch):
     cfg = configs.get_smoke_config(arch)
     opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)

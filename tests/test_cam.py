@@ -13,6 +13,7 @@ KEY = jax.random.PRNGKey(0)
 
 # ---- functional semantics ---------------------------------------------------
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(st.integers(1, 32), st.integers(2, 12), st.integers(0, 2 ** 31 - 1))
 def test_search_matches_bruteforce(entries, bits, seed):

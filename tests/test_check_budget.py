@@ -1,0 +1,72 @@
+"""`tools/check_test_budget.py` gate semantics.
+
+The budget gate sums junit testcase times, names the slowest offenders,
+and fails only when the sum blows the budget; an empty or wrong file
+fails loudly instead of passing vacuously.
+"""
+
+import importlib.util
+import os
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_test_budget",
+    os.path.join(os.path.dirname(__file__), "..", "tools", "check_test_budget.py"),
+)
+budget = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(budget)
+
+
+def _junit(tmp_path, times):
+    cases = "".join(
+        f'<testcase classname="tests.test_x" name="t{i}" time="{t}"/>'
+        for i, t in enumerate(times)
+    )
+    path = tmp_path / "junit.xml"
+    path.write_text(f"<testsuites><testsuite>{cases}</testsuite></testsuites>")
+    return str(path)
+
+
+def test_under_budget_passes(tmp_path, capsys):
+    rc = budget.main([_junit(tmp_path, [1.0, 2.0, 3.0]), "--budget-s", "10"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "budget ok" in out
+    assert "6.0s summed over 3 tests" in out
+
+
+def test_over_budget_fails_and_names_offenders(tmp_path, capsys):
+    rc = budget.main([_junit(tmp_path, [1.0, 50.0, 2.0]), "--budget-s", "10"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "FAIL" in out and "blew its 10s budget" in out
+    # slowest first, named
+    assert out.index("t1") < out.index("t0")
+    assert "@pytest.mark.slow" in out
+
+
+def test_env_var_sets_default_budget(tmp_path, capsys, monkeypatch):
+    monkeypatch.setenv("TEST_BUDGET_S", "2")
+    rc = budget.main([_junit(tmp_path, [3.0])])
+    assert rc == 1
+    monkeypatch.setenv("TEST_BUDGET_S", "9")
+    rc = budget.main([_junit(tmp_path, [3.0])])
+    assert rc == 0
+    capsys.readouterr()
+
+
+def test_empty_junit_fails(tmp_path, capsys):
+    path = tmp_path / "junit.xml"
+    path.write_text("<testsuites><testsuite/></testsuites>")
+    rc = budget.main([str(path), "--budget-s", "10"])
+    assert rc == 1
+    assert "no testcases" in capsys.readouterr().out
+
+
+def test_missing_time_attribute_counts_as_zero(tmp_path):
+    path = tmp_path / "junit.xml"
+    path.write_text(
+        "<testsuites><testsuite>"
+        '<testcase classname="c" name="n"/>'
+        "</testsuite></testsuites>"
+    )
+    assert budget.load_times(str(path)) == [(0.0, "c::n")]

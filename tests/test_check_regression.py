@@ -162,3 +162,59 @@ def test_matching_platforms_still_gate(tmp_path, monkeypatch, capsys):
     rc, out = _run(tmp_path, monkeypatch, capsys, current, baseline)
     assert rc == 1
     assert "regressed beyond the threshold" in out
+
+
+def _async_record(ratio, **over):
+    fields = {"events_per_sec": 1e5, "async_vs_sync": ratio,
+              "serve_bit_identical": True, "pump_threads": 1, **over}
+    return _record(1.0, scenario="__serve_async__", **fields)
+
+
+def test_async_pump_floor_passes_at_parity(tmp_path, monkeypatch, capsys):
+    payload = _payload([_record(1.0), _async_record(0.98)])
+    rc, out = _run(tmp_path, monkeypatch, capsys, payload, payload)
+    assert rc == 0
+    assert "background pump 0.98x" in out
+    assert "gate passed" in out
+
+
+def test_async_pump_below_floor_fails(tmp_path, monkeypatch, capsys):
+    payload = _payload([_record(1.0), _async_record(0.5)])
+    rc, out = _run(tmp_path, monkeypatch, capsys, payload, payload)
+    assert rc == 1
+    assert "below the in-run throughput floor" in out
+    assert "0.50x" in out
+
+
+def test_async_pump_floor_gates_on_platform_mismatch(tmp_path, monkeypatch, capsys):
+    """The ratio is in-run, so it is enforced even when wall clocks are
+    not baseline-comparable."""
+    baseline = {**_payload([_record(1.0)]), "platform": "tpu"}
+    current = {**_payload([_record(1.0), _async_record(0.5)]), "platform": "cpu"}
+    rc, out = _run(tmp_path, monkeypatch, capsys, current, baseline)
+    assert rc == 1
+    assert "below the in-run throughput floor" in out
+
+
+def test_async_pump_missing_ratio_fails(tmp_path, monkeypatch, capsys):
+    rec = _async_record(0.9)
+    del rec["async_vs_sync"]
+    payload = _payload([_record(1.0), rec])
+    rc, out = _run(tmp_path, monkeypatch, capsys, payload, payload)
+    assert rc == 1
+    assert "lacks async_vs_sync" in out
+
+
+def test_async_pump_bit_identity_false_fails(tmp_path, monkeypatch, capsys):
+    rec = _async_record(0.9, serve_bit_identical=False)
+    payload = _payload([_record(1.0), rec])
+    rc, out = _run(tmp_path, monkeypatch, capsys, payload, payload)
+    assert rc == 1
+    assert "serve_bit_identical=false" in out
+
+
+def test_payload_without_async_record_passes(tmp_path, monkeypatch, capsys):
+    payload = _payload([_record(1.0)])
+    rc, out = _run(tmp_path, monkeypatch, capsys, payload, payload)
+    assert rc == 0
+    assert "background pump" not in out

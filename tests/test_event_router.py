@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import event_router as er
@@ -50,6 +51,7 @@ def test_buffer_rows_consistent_with_event_slot():
                 assert buf[ids[tkn, j], slots[tkn, j]] == tkn
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(st.integers(1, 64), st.integers(2, 16), st.integers(1, 4),
        st.integers(0, 2 ** 31 - 1))

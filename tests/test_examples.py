@@ -50,7 +50,11 @@ def _run_example(script: str, extra_env: dict) -> subprocess.CompletedProcess:
     )
 
 
-@pytest.mark.parametrize("script", sorted(EXAMPLES))
+@pytest.mark.parametrize(
+    "script",
+    [pytest.param(s, marks=(pytest.mark.slow,) if s == "snn_multicore.py" else ())
+     for s in sorted(EXAMPLES)],
+)
 def test_example_runs_end_to_end(script, tmp_path):
     spec = EXAMPLES[script]
     env = dict(spec["env"])

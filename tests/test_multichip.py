@@ -46,6 +46,7 @@ def _cfg(chips=1, cores=8, n=16, entries=32, arbiter="hier_tree",
 # ---- chips=1 == pre-existing flat-core path ---------------------------------
 
 
+@pytest.mark.slow
 @settings(max_examples=2, deadline=None)
 @given(st.integers(0, 2**16), st.floats(0.05, 0.6))
 def test_chips1_bit_identical_to_flat_path(seed, rate):

@@ -19,6 +19,7 @@ The contract under test, in the order the layers stack:
 
 import dataclasses
 import json
+import math
 
 import jax
 import jax.numpy as jnp
@@ -295,6 +296,31 @@ def test_histogram_edge_cases():
         hist.percentile(-1)
     with pytest.raises(ValueError, match="lo"):
         obs_metrics.Histogram("bad", lo=1.0, hi=0.5)
+
+
+def test_histogram_nonfinite_counted_without_poisoning():
+    """Regression: NaN crashed `_bin` (math.log10 ValueError) and Inf
+    raised OverflowError - one bad measured duration killed the serve
+    path.  Non-finite adds are now counted aside and excluded from every
+    statistic."""
+    hist = obs_metrics.Histogram("nf")
+    hist.add(2.0)
+    hist.add(float("nan"))
+    hist.add(float("inf"))
+    hist.add(float("-inf"))
+    assert hist.count == 1 and hist.nonfinite == 3
+    assert hist.min == 2.0 and hist.max == 2.0 and hist.mean == 2.0
+    summary = hist.summary()
+    assert summary["nonfinite"] == 3 and summary["count"] == 1
+    assert math.isfinite(summary["p99"])
+    other = obs_metrics.Histogram("nf2")
+    other.add(float("nan"))
+    other.add(3.0)
+    merged = hist.merge(other)
+    assert merged.nonfinite == 4 and merged.count == 2 and merged.max == 3.0
+    clean = obs_metrics.Histogram("clean")
+    clean.add(1.0)
+    assert "nonfinite" not in clean.summary()
 
 
 @settings(max_examples=25, deadline=None)

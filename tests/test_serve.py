@@ -20,20 +20,29 @@ The contract under test, bottom layer first:
 * The LM reference loop still imports from `repro.serve.lm_engine`.
 """
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import fabric
-from repro.interface import Interface, StepStats
+from repro.ft.chaos import RetriesExhaustedError, TransientFaultError
+from repro.interface import Interface, InterfaceConfig, StepStats
+from repro.noc import topology
 from repro.serve import (
     AdmissionController,
     AdmissionError,
     AdmissionPolicy,
+    AutoscalePolicy,
+    CompositionError,
     IngestQueue,
+    RateLimitedError,
     ServeEngine,
+    ServeError,
     TenantSpec,
+    TokenBucket,
     compat_key,
     default_connectivity,
 )
@@ -126,9 +135,13 @@ def test_mask_validation():
     with pytest.raises(ValueError, match="stats0"):
         session.run(spikes[0], stats0=StepStats.zeros())
     with pytest.raises(ValueError, match="shard"):
-        session.run_batched(spikes, mask=good, shard="chips")
-    with pytest.raises(ValueError, match="telemetry"):
+        session.run_batched(spikes, mask=good, shard="dies")
+    with pytest.raises(CompositionError, match="telemetry"):
         session.run_batched(spikes, mask=good, telemetry="ticks")
+    # mask + shard="chips" composes now (one-chip configs run flat)
+    cur, _ = session.run_batched(spikes, mask=good, shard="chips")
+    cur_flat, _ = session.run_batched(spikes, mask=good)
+    assert np.array_equal(np.asarray(cur), np.asarray(cur_flat))
 
 
 # ---- ingest queue ----------------------------------------------------------
@@ -303,5 +316,263 @@ def test_lm_engine_relocated():
     from repro.serve import lm_engine
 
     assert hasattr(lm_engine, "ServeEngine") and hasattr(lm_engine, "make_decode_step")
+
+
+# ---- serving tier v2: pump / rate limit / autoscale / sharding --------------
+
+
+def _await_drained(engine, names, timeout_s=120.0):
+    deadline = time.monotonic() + timeout_s
+    while True:
+        acct = engine.accounting()
+        if all(acct["tenants"][n]["pending"] == 0 for n in names):
+            return
+        assert time.monotonic() < deadline, f"pump never drained: {acct}"
+        time.sleep(0.002)
+
+
+def test_background_pump_serves_bit_identical_to_solo():
+    cfg = small_config("binary_tree", "broadcast")
+    engine, specs = _engine(cfg, ["sparse_poisson", "hotspot_core"], keep_currents=True)
+    streams = {s.name: np.asarray(s.stream(9, round=0)) for s in specs}
+    engine.start(poll_interval_s=0.001)
+    assert engine.running
+    for name, frames in streams.items():
+        engine.submit(name, frames)
+    _await_drained(engine, streams)
+    engine.stop(drain=True)
+    assert not engine.running and engine.pump_errors() == []
+    assert engine.accounting()["closes"]
+    session = _session(cfg)
+    for spec in specs:
+        cur_solo, acc_solo = session.run(streams[spec.name])
+        assert np.array_equal(engine.currents(spec.name), np.asarray(cur_solo)), spec.name
+        _assert_stats_equal(engine.tenant_stats(spec.name), acc_solo, spec.name)
+    # the engine is restartable: the context manager runs a second burst
+    with engine:
+        engine.submit_scenario("t0", 5)
+        _await_drained(engine, ["t0"])
+    assert engine.ticks_served("t0") == 14
+
+
+def test_pump_fatal_error_surfaces_on_submit(monkeypatch):
+    cfg = small_config("binary_tree", "broadcast")
+    engine, _ = _engine(cfg, ["sparse_poisson"])
+
+    def boom(force=False):
+        raise RuntimeError("pump exploded")
+
+    monkeypatch.setattr(engine, "pump", boom)
+    engine.start(poll_interval_s=0.001)
+    deadline = time.monotonic() + 30
+    while engine.running:
+        assert time.monotonic() < deadline
+        time.sleep(0.002)
+    with pytest.raises(ServeError, match="pump exploded"):
+        engine.submit_scenario("t0", 2)
+    assert engine.registry.counter("serve.pump.fatal").value == 1
+    engine.stop()  # fatal already surfaced; stop is a clean no-op join
+
+
+def test_pump_survives_retries_exhausted(monkeypatch):
+    cfg = small_config("binary_tree", "broadcast")
+    engine, _ = _engine(cfg, ["sparse_poisson"])
+    real_pump, tripped = engine.pump, []
+
+    def flaky(force=False):
+        if not tripped:
+            tripped.append(1)
+            raise RetriesExhaustedError("transfer still failing")
+        return real_pump(force=force)
+
+    monkeypatch.setattr(engine, "pump", flaky)
+    engine.start(poll_interval_s=0.001)
+    engine.submit_scenario("t0", 6)
+    _await_drained(engine, ["t0"])
+    engine.stop(drain=True)
+    errors = engine.pump_errors()
+    assert len(errors) == 1 and isinstance(errors[0], RetriesExhaustedError)
+    assert engine.ticks_served("t0") == 6 and engine.accounting()["closes"]
+
+
+def test_rate_limit_typed_rejection_and_refill():
+    cfg = small_config("binary_tree", "broadcast")
+    clock = _FakeClock()
+    engine = ServeEngine(
+        flush_ticks=4,
+        flush_deadline_s=0.0,
+        clock=clock,
+        policy=AdmissionPolicy(rate_limit_per_s=8.0, rate_limit_burst=8.0),
+    )
+    engine.register(TenantSpec("t0", cfg))
+    engine.submit("t0", _frames(8, cfg))  # drains the full burst
+    with pytest.raises(RateLimitedError, match="rate-limited"):
+        engine.submit("t0", _frames(1, cfg))
+    assert engine.registry.counter("serve.rate_limited").value == 1
+    assert engine.registry.counter("serve.rate_limited_ticks").value == 1
+    # rejected ticks never entered the ledger
+    assert engine.ticks_submitted("t0") == 8
+    clock.now += 0.5  # refills 4 tokens
+    engine.submit("t0", _frames(4, cfg))
+    with pytest.raises(RateLimitedError, match="never be admitted"):
+        engine.submit("t0", _frames(9, cfg))  # larger than the burst
+    assert engine.drain() == 12
+    assert engine.accounting()["closes"]
+    fleet = engine.serve_report()[-1]
+    assert fleet["faults"]["rate_limited"] == 2
+
+
+def test_token_bucket_semantics():
+    clock = _FakeClock()
+    bucket = TokenBucket(rate=10.0, capacity=5.0, clock=clock)
+    assert bucket.take(5) and not bucket.take(1)  # starts full; all-or-nothing
+    clock.now += 0.25
+    assert bucket.tokens() == pytest.approx(2.5)
+    assert not bucket.take(3) and bucket.take(2.5)
+    clock.now += 100.0
+    assert bucket.tokens() == pytest.approx(5.0)  # capped at capacity
+    with pytest.raises(ValueError, match="rate"):
+        TokenBucket(rate=0.0, capacity=5.0)
+    with pytest.raises(ValueError, match="burst"):
+        AdmissionPolicy(rate_limit_burst=4.0)  # burst without a rate
+
+
+def test_quarantined_backlog_sheds_past_deadline():
+    """Regression: staged backlog frames never aged against the shed
+    deadline - a quarantined lane's work could wait forever instead of
+    shedding, violating what shed_deadline_s promises."""
+    cfg = small_config("binary_tree", "broadcast")
+    clock = _FakeClock()
+    engine = ServeEngine(
+        flush_ticks=4,
+        flush_deadline_s=0.0,
+        clock=clock,
+        policy=AdmissionPolicy(shed_deadline_s=1.0),
+    )
+    engine.register(TenantSpec("t0", cfg))
+    engine.submit_scenario("t0", 6)
+    for _ in range(engine.health.policy.quarantine_after):
+        engine.health.record_failure("t0")
+    assert engine.lane_health("t0") == "quarantined"
+    assert engine.pump(force=True) == 0  # staged but skipped, age 0: kept
+    group = engine._tenant_group["t0"]
+    assert group.backlog_ticks_of("t0") == 6
+    clock.now = 5.0
+    assert engine.pump(force=True) == 0  # aged out: shed, not served
+    assert group.backlog_ticks_of("t0") == 0
+    assert engine.ticks_shed("t0") == 6
+    acct = engine.accounting()
+    assert acct["closes"] and acct["tenants"]["t0"]["pending"] == 0
+    assert any("backlog" in str(e) for e in engine.shed_errors())
+
+
+def test_retry_recovery_clock_starts_at_first_attempt():
+    """Regression: serve.recovery_ms used to start after the first failed
+    attempt *returned*, so the failed attempt's own wall time - most of a
+    real outage - was silently excluded."""
+    clock = _FakeClock()
+    engine = ServeEngine(flush_ticks=4, clock=clock, sleep=lambda s: None)
+    tripped = []
+
+    def flaky():
+        if not tripped:
+            tripped.append(1)
+            clock.now += 2.0  # the failing attempt itself takes 2s
+            raise TransientFaultError("transient")
+        clock.now += 1.0
+        return "ok"
+
+    assert engine._with_retries("execute", flaky) == "ok"
+    hist = engine.registry.histograms["serve.recovery_ms"]
+    assert hist.count == 1
+    assert hist.total == pytest.approx(3000.0)  # 2s failed attempt + 1s retry
+
+
+def test_autoscale_policy_targets():
+    exact = AutoscalePolicy()
+    assert exact.target(3, 8) == 3 and exact.target(0, 0) == 1
+    geo = AutoscalePolicy(grow_factor=2.0, shrink_at=0.5)
+    assert geo.target(3, 2) == 4 and geo.target(5, 4) == 8
+    assert geo.target(3, 8) == 4  # 3 > 4 * 0.5: hysteresis holds at 4
+    assert geo.target(2, 8) == 2  # 2 <= 4 * 0.5: shrinks through to the floor
+    floor = AutoscalePolicy(min_lanes=4)
+    assert floor.target(1, 0) == 4
+    with pytest.raises(ValueError, match="grow_factor"):
+        AutoscalePolicy(grow_factor=0.5)
+    with pytest.raises(ValueError, match="shrink_at"):
+        AutoscalePolicy(shrink_at=0.0)
+
+
+def test_autoscale_grow_shrink_preserves_solo_bit_identity():
+    cfg = small_config("binary_tree", "multicast_tree")
+    engine = ServeEngine(flush_ticks=4, flush_deadline_s=0.0, keep_currents=True)
+    engine.register(TenantSpec("t0", cfg, scenario="sparse_poisson", seed=0))
+    engine.submit_scenario("t0", 6)
+    assert engine.drain() == 6
+    engine.register(TenantSpec("t1", cfg, scenario="hotspot_core", seed=1))
+    group = engine._tenant_group["t0"]
+    assert group.capacity == 2 and group.capacities_seen == {1, 2}
+    engine.submit_scenario("t0", 5)
+    engine.submit_scenario("t1", 7)
+    assert engine.drain() == 12
+    assert engine.accounting()["closes"]
+    engine.submit_scenario("t1", 3)
+    with pytest.raises(ServeError, match="pending"):
+        engine.deregister("t1")  # a lane with queued work cannot retire
+    assert engine.drain() == 3
+    spec0 = group.specs["t0"]
+    engine.deregister("t1")
+    assert group.capacity == 1 and "t1" not in group.lanes
+    engine.submit_scenario("t0", 4)
+    assert engine.drain() == 4
+    # t0's chunks crossed capacities 1 -> 2 -> 1; its cumulative stream
+    # must still equal one uninterrupted solo run, stats included
+    session = _session(cfg)
+    full = np.concatenate(
+        [np.asarray(spec0.stream(t, round=r)) for r, t in enumerate((6, 5, 4))]
+    )
+    cur, acc = session.run(full)
+    assert np.array_equal(engine.currents("t0"), np.asarray(cur))
+    _assert_stats_equal(engine.tenant_stats("t0"), acc, "t0 across resizes")
+    acct = engine.accounting()
+    assert acct["closes"] and acct["tenants"]["t1"]["pending"] == 0  # retired row
+    assert engine.registry.counter("serve.autoscale.grow").value == 2
+    assert engine.registry.counter("serve.autoscale.shrink").value == 1
+    assert engine.serve_report()[-1]["lane_capacity"] == 1
+
+
+def _chip_cfg(chips=2, cores=8, n=16, entries=32):
+    return InterfaceConfig(cores=cores, neurons_per_core=n,
+                           cam_entries_per_core=entries, scheme="hier_tree",
+                           noc=topology.NocConfig("multicast_tree"), chips=chips)
+
+
+def test_sharded_group_bit_identical_and_separate_from_flat():
+    cfg = _chip_cfg()
+    engine = ServeEngine(flush_ticks=4, flush_deadline_s=0.0, keep_currents=True)
+    engine.register(TenantSpec("s0", cfg, shard="chips", seed=0))
+    engine.register(TenantSpec("s1", cfg, shard="chips", scenario="hotspot_core", seed=1))
+    engine.register(TenantSpec("f0", cfg, seed=0))
+    # sharded and flat tenants of the SAME config land in different groups
+    assert len(engine.groups) == 2
+    group = engine._tenant_group["s0"]
+    assert group.shard == "chips" and engine._tenant_group["f0"] is not group
+    for name, t in (("s0", 7), ("s1", 5), ("f0", 7)):
+        engine.submit_scenario(name, t)
+    assert engine.drain() == 19
+    # each sharded lane is bit-identical to the flat unsharded oracle
+    session = _session(cfg)
+    for name, t in (("s0", 7), ("s1", 5)):
+        spec = group.specs[name]
+        cur, acc = session.run(spec.stream(t, round=0))
+        assert np.array_equal(engine.currents(name), np.asarray(cur)), name
+        _assert_stats_equal(engine.tenant_stats(name), acc, name)
+    assert group.jit_cache_entries() == 1
+    assert engine.accounting()["closes"]
+    # rejected composition is a typed error at spec construction
+    with pytest.raises(CompositionError, match="one-chip"):
+        TenantSpec("bad", small_config("binary_tree", "broadcast"), shard="chips")
+    with pytest.raises(ValueError, match="unknown shard"):
+        TenantSpec("bad", cfg, shard="dies")
     # the package-level ServeEngine is the fabric streaming engine now
     assert hasattr(ServeEngine, "register") and hasattr(ServeEngine, "drain")

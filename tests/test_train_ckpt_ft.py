@@ -42,6 +42,7 @@ def test_loss_decreases():
     assert losses[-1] < losses[0] * 0.85
 
 
+@pytest.mark.slow
 def test_microbatch_equivalent_to_full_batch():
     cfg, opt = _cfg(), _opt()
     state = ts.init_state(KEY, cfg, opt)
